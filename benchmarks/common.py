@@ -1,0 +1,68 @@
+"""Shared benchmark harness utilities (fidelity-scale training runs)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.configs.gpt2 import GPT2_FIDELITY
+from repro.core import EDGCConfig, GDSConfig
+from repro.core.dac import DACConfig
+from repro.data.pipeline import SyntheticLM
+from repro.launch.mesh import make_host_mesh
+from repro.models.model import build_model
+from repro.optim.adam import AdamConfig
+from repro.train.trainer import Trainer, TrainerConfig
+
+FIDELITY_SEQ = 128
+FIDELITY_BATCH = 8
+
+
+def fidelity_trainer(policy: str, steps: int, *, rank: int = 32,
+                     window: int = 50, num_stages: int = 4, seed: int = 0,
+                     cfg=None, alpha: float = 0.5, beta: float = 0.25,
+                     lr: float = 1e-3) -> Trainer:
+    cfg = cfg or GPT2_FIDELITY
+    model = build_model(cfg)
+    mesh = make_host_mesh(data=1, model=1)
+    edgc = EDGCConfig(
+        policy=policy, fixed_rank=rank, num_stages=num_stages,
+        total_iterations=steps,
+        gds=GDSConfig(alpha=alpha, beta=beta),
+        dac=DACConfig(window=window, adjust_limit=4),
+    )
+    tcfg = TrainerConfig(
+        total_steps=steps, log_every=max(1, steps // 40),
+        adam=AdamConfig(lr=lr, warmup_steps=max(10, steps // 10),
+                        total_steps=steps),
+    )
+    return Trainer(model, mesh, edgc, tcfg, seed=seed)
+
+
+def fidelity_data(cfg=None, seed: int = 0) -> SyntheticLM:
+    cfg = cfg or GPT2_FIDELITY
+    return SyntheticLM(vocab_size=cfg.vocab_size, seq_len=FIDELITY_SEQ,
+                       batch_size=FIDELITY_BATCH, seed=seed)
+
+
+def run_policy(policy: str, steps: int, **kw):
+    tr = fidelity_trainer(policy, steps, **kw)
+    data = fidelity_data(kw.get("cfg"), kw.get("seed", 0))
+    t0 = time.time()
+    hist = tr.run(data.batches())
+    wall = time.time() - t0
+    return {
+        "policy": policy,
+        "history": hist,
+        "final_loss": hist[-1]["loss"],
+        "bytes_synced": tr.bytes_synced,
+        "bytes_full": tr.bytes_full,
+        "comm_savings": tr.comm_savings(),
+        "wall_s": wall,
+        "trainer": tr,
+    }
+
+
+def csv_row(name: str, us_per_call: float, derived: str) -> str:
+    return f"{name},{us_per_call:.3f},{derived}"

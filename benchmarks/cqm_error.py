@@ -1,0 +1,131 @@
+"""CQM validation (Theorem 1 / Observation 3 / Fig. 10).
+
+Claims validated:
+  * the MP-law estimate g(r; m, n) matches the ACTUAL SVD truncation error
+    of i.i.d. matrices to <1% (Theorem 1 soundness);
+  * REAL gradient matrices compress with LOWER error than the i.i.d. theory
+    predicts (Observation 3's correlation margin — the paper's safety
+    argument for Constraint 1);
+  * at fixed rank, compression error decays over training (Fig. 10 trend).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.core import theoretical_error
+from repro.core.mp_law import g_table
+
+from .common import csv_row, fidelity_data, fidelity_trainer
+
+
+def _actual_error(mat: np.ndarray, r: int) -> float:
+    s = np.linalg.svd(mat, compute_uv=False)
+    return float(np.sqrt((s[r:] ** 2).sum()))
+
+
+def run(steps: int = 200) -> list[str]:
+    rows = []
+    rng = np.random.default_rng(0)
+
+    # --- Theorem 1: MP estimate vs actual, i.i.d. matrices -----------------
+    t0 = time.time()
+    rel_errs = []
+    for (m, n) in [(128, 512), (256, 1024), (512, 512)]:
+        A = rng.standard_normal((m, n))
+        for r in (8, 32, m // 4):
+            pred = theoretical_error(r, m, n)
+            act = _actual_error(A, r)
+            rel_errs.append(abs(pred - act) / act)
+    us = (time.time() - t0) * 1e6 / len(rel_errs)
+    rows.append(csv_row("thm1_mp_vs_svd_max_rel_err", us,
+                        f"{max(rel_errs):.4f}"))
+
+    # --- Obs 3: real gradients beat the i.i.d. bound ------------------------
+    t0 = time.time()
+    tr = fidelity_trainer("none", steps)
+    data = fidelity_data()
+    batches = data.batches()
+    # capture a real gradient mid-training
+    tr.run(iter([next(batches) for _ in range(steps)]))
+    import jax.numpy as jnp
+    from repro.optim import adam as adam_mod
+    model = tr.model
+    params = tr.state["params"]
+    batch = {k: jnp.asarray(v) for k, v in next(batches).items()}
+    grads = jax.grad(lambda p: model.loss_fn(p, batch)[0])(params)
+    flat = jax.tree_util.tree_flatten_with_path(grads)[0]
+    margins = []
+    for kp, g in flat:
+        g = np.asarray(g, np.float64)
+        if g.ndim == 3:          # stacked per-layer leaves: take each layer
+            mats = [g[i] for i in range(g.shape[0])]
+        elif g.ndim == 2:
+            mats = [g]
+        else:
+            continue
+        if "embed" in str(kp):
+            continue
+        for gm in mats:
+            if min(gm.shape) < 64:
+                continue
+            m, n = sorted(gm.shape)
+            sigma = gm.std()
+            r = m // 8
+            theory = theoretical_error(r, m, n, sigma)
+            actual = _actual_error(gm if gm.shape[0] <= gm.shape[1] else gm.T, r)
+            margins.append(actual / theory)
+    us = (time.time() - t0) * 1e6 / max(1, len(margins))
+    rows.append(csv_row("obs3_actual_over_theory_mean", us,
+                        f"{np.mean(margins):.4f}"))
+    rows.append(csv_row("obs3_grad_beats_iid_bound", us,
+                        str(bool(np.mean(margins) < 1.0))))
+
+    # --- Fig 10: fixed-rank error decays over training ----------------------
+    t0 = time.time()
+    tr2 = fidelity_trainer("fixed", 2 * steps, rank=16)
+    data2 = fidelity_data(seed=1)
+    b_iter = data2.batches()
+
+    def err_at(trainer):
+        params = trainer.state["params"]
+        batch = {k: jnp.asarray(v) for k, v in next(b_iter).items()}
+        grads = jax.grad(lambda p: trainer.model.loss_fn(p, batch)[0])(params)
+        errs, abs_errs = [], []
+        for kp, g in jax.tree_util.tree_flatten_with_path(grads)[0]:
+            g = np.asarray(g, np.float64)
+            if "embed" in str(kp):
+                continue
+            mats = [g[i] for i in range(g.shape[0])] if g.ndim == 3 \
+                else ([g] if g.ndim == 2 else [])
+            for gm in mats:
+                if min(gm.shape) < 64:
+                    continue
+                gm = gm if gm.shape[0] <= gm.shape[1] else gm.T
+                ae = _actual_error(gm, 16)
+                abs_errs.append(ae)
+                errs.append(ae / (np.linalg.norm(gm) + 1e-12))
+        return float(np.mean(errs)), float(np.mean(abs_errs))
+
+    tr2.run(b_iter, num_steps=steps // 2)
+    rel_early, abs_early = err_at(tr2)
+    tr2.run(b_iter, num_steps=3 * steps // 2)
+    rel_late, abs_late = err_at(tr2)
+    us = (time.time() - t0) * 1e6 / (2 * steps)
+    # paper Fig. 10 plots ABSOLUTE error at fixed rank: it decays because
+    # sigma decays (Obs 2); the norm-relative error stays roughly flat
+    # (correlations weaken over training, Obs 3's own caveat).
+    rows.append(csv_row("fig10_abs_err_early", us, f"{abs_early:.5f}"))
+    rows.append(csv_row("fig10_abs_err_late", us, f"{abs_late:.5f}"))
+    rows.append(csv_row("fig10_abs_err_decays", us,
+                        str(bool(abs_late < abs_early))))
+    rows.append(csv_row("fig10_rel_err_early", us, f"{rel_early:.4f}"))
+    rows.append(csv_row("fig10_rel_err_late", us, f"{rel_late:.4f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

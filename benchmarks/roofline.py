@@ -1,0 +1,123 @@
+"""Roofline analysis from the dry-run's compiled artifacts (§Roofline).
+
+Reads dryrun JSON records (launch/dryrun.py --out ...) and derives, per
+(arch x shape):
+
+  compute    = FLOPs_per_chip / peak_FLOPs
+  memory     = bytes_per_chip / HBM_bw
+  collective = collective_bytes_per_chip / link_bw
+  dominant   = argmax of the three
+  MODEL_FLOPS = 6*N*D (dense) or 6*N_active*D (MoE), D = tokens
+  usefulness  = MODEL_FLOPS / (FLOPs_per_chip * chips)
+
+Hardware constants per the brief: 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+import jax
+
+from repro.configs import INPUT_SHAPES, get_config
+from repro.core.comm_model import TPU_V5E
+from repro.models.model import active_param_count, build_model, param_count
+
+from .common import csv_row
+
+HW = TPU_V5E
+
+
+def _model_params(arch: str) -> tuple[int, int]:
+    cfg = get_config(arch, "full")
+    model = build_model(cfg)
+    shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    total = param_count(shapes)
+    active = active_param_count(cfg, shapes)
+    return total, active
+
+
+def analyze(records: list[dict], chips: int = 256) -> list[dict]:
+    out = []
+    pcache: dict[str, tuple[int, int]] = {}
+    for rec in records:
+        if "flops_per_chip" not in rec:
+            out.append(rec)
+            continue
+        arch, shape = rec["arch"], rec["shape"]
+        if arch not in pcache:
+            pcache[arch] = _model_params(arch)
+        total_p, active_p = pcache[arch]
+        spec = INPUT_SHAPES[shape]
+        tokens = spec["global_batch"] * (spec["seq_len"] if spec["kind"] != "decode" else 1)
+
+        compute_s = rec["flops_per_chip"] / HW.peak_flops
+        memory_s = rec["bytes_per_chip"] / HW.hbm_bw
+        coll_s = rec["collective_total"] / HW.ici_bw
+        terms = {"compute": compute_s, "memory": memory_s, "collective": coll_s}
+        dominant = max(terms, key=terms.get)
+
+        factor = 6 if spec["kind"] == "train" else 2
+        model_flops = factor * active_p * tokens
+        hlo_total = rec["flops_per_chip"] * chips
+        useful = model_flops / hlo_total if hlo_total else 0.0
+
+        out.append({
+            **rec,
+            "roofline": {
+                "compute_s": compute_s, "memory_s": memory_s,
+                "collective_s": coll_s, "dominant": dominant,
+                "model_flops": model_flops,
+                "useful_fraction": useful,
+                "step_lower_bound_s": max(terms.values()),
+            },
+            "params_total": total_p, "params_active": active_p,
+        })
+    return out
+
+
+def to_markdown(records: list[dict]) -> str:
+    lines = [
+        "| arch | shape | compute s | memory s | collective s | dominant | useful FLOP frac |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for r in records:
+        if "roofline" not in r:
+            tag = r.get("reason", r.get("error", ""))[:60]
+            lines.append(f"| {r.get('arch')} | {r.get('shape')} | — | — | — | "
+                         f"{'SKIP' if r.get('skipped') else 'FAIL'} | {tag} |")
+            continue
+        rf = r["roofline"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {rf['compute_s']:.3e} | "
+            f"{rf['memory_s']:.3e} | {rf['collective_s']:.3e} | "
+            f"**{rf['dominant']}** | {rf['useful_fraction']:.2f} |")
+    return "\n".join(lines)
+
+
+def run(path: str = "dryrun_single_pod.json") -> list[str]:
+    try:
+        with open(path) as f:
+            records = json.load(f)
+    except FileNotFoundError:
+        return [csv_row("roofline_missing_dryrun_json", 0.0, path)]
+    analyzed = analyze(records)
+    rows = []
+    for r in analyzed:
+        if "roofline" not in r:
+            continue
+        rf = r["roofline"]
+        rows.append(csv_row(
+            f"roofline_{r['arch']}_{r['shape']}", 0.0,
+            f"dom={rf['dominant']};comp={rf['compute_s']:.3e};"
+            f"mem={rf['memory_s']:.3e};coll={rf['collective_s']:.3e};"
+            f"useful={rf['useful_fraction']:.2f}"))
+    with open(path.replace(".json", "_roofline.json"), "w") as f:
+        json.dump(analyzed, f, indent=1)
+    return rows
+
+
+if __name__ == "__main__":
+    for row in run(sys.argv[1] if len(sys.argv) > 1 else "dryrun_single_pod.json"):
+        print(row)

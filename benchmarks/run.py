@@ -1,0 +1,62 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (per the scaffold contract).
+
+  PYTHONPATH=src python -m benchmarks.run              # everything
+  PYTHONPATH=src python -m benchmarks.run --only table3,fig9
+  PYTHONPATH=src python -m benchmarks.run --fast       # shorter runs
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+SUITES = [
+    ("obs_entropy", "benchmarks.obs_entropy"),      # Fig. 2 / Fig. 3
+    ("cqm_error", "benchmarks.cqm_error"),          # Thm. 1 / Obs. 3 / Fig. 10
+    ("comm_linearity", "benchmarks.comm_linearity"),  # Fig. 9 / Eq. 2-3
+    ("table3", "benchmarks.table3_train"),          # Table III
+    ("table5", "benchmarks.table5_gsr"),            # Table V
+    ("table6", "benchmarks.table6_comm"),           # Table VI
+    ("table7", "benchmarks.table7_window"),         # Table VII
+    ("fig14", "benchmarks.fig14_stage"),            # Fig. 14 / Alg. 2
+    ("roofline", "benchmarks.roofline"),            # §Roofline (from dry-run)
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    ap.add_argument("--fast", action="store_true")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    import importlib
+    print("name,us_per_call,derived")
+    failed = []
+    for name, modpath in SUITES:
+        if only and name not in only:
+            continue
+        t0 = time.time()
+        try:
+            mod = importlib.import_module(modpath)
+            kwargs = {}
+            if args.fast:
+                import inspect
+                if "steps" in inspect.signature(mod.run).parameters:
+                    kwargs["steps"] = 100
+            for row in mod.run(**kwargs):
+                print(row, flush=True)
+            print(f"# {name} done in {time.time()-t0:.1f}s", flush=True)
+        except Exception as e:
+            traceback.print_exc()
+            print(f"{name}_FAILED,0,{e}", flush=True)
+            failed.append(name)
+    if failed:
+        sys.exit(f"benchmark suites failed: {failed}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,32 @@
+"""EDGC core: entropy-driven dynamic gradient compression (the paper's contribution)."""
+from .comm_model import CommModel, HardwareSpec, TPU_V5E, rank_bounds
+from .compressor import (
+    CompressionPlan,
+    LeafInfo,
+    NO_COMPRESSION,
+    classify_leaves,
+    init_compressor_state,
+    make_plan,
+    plan_wire_bytes,
+    resize_compressor_state,
+    sync_grads,
+)
+from .controller import EDGCConfig, EDGCController
+from .cqm import CQM, rank_from_entropy_delta, theoretical_error
+from .dac import DAC, DACConfig, stage_aligned_ranks, window_rank_adjust
+from .entropy import GDSConfig, gaussian_entropy, grads_entropy, histogram_entropy
+from .mp_law import GTable, g_table, mp_cdf, mp_support, sample_eigenvalues
+from .powersgd import LowRankState, compress_leaf, gram_schmidt, init_leaf_state
+
+__all__ = [
+    "CommModel", "HardwareSpec", "TPU_V5E", "rank_bounds",
+    "CompressionPlan", "LeafInfo", "NO_COMPRESSION", "classify_leaves",
+    "init_compressor_state", "make_plan", "plan_wire_bytes",
+    "resize_compressor_state", "sync_grads",
+    "EDGCConfig", "EDGCController",
+    "CQM", "rank_from_entropy_delta", "theoretical_error",
+    "DAC", "DACConfig", "stage_aligned_ranks", "window_rank_adjust",
+    "GDSConfig", "gaussian_entropy", "grads_entropy", "histogram_entropy",
+    "GTable", "g_table", "mp_cdf", "mp_support", "sample_eigenvalues",
+    "LowRankState", "compress_leaf", "gram_schmidt", "init_leaf_state",
+]

@@ -1,0 +1,133 @@
+"""Communication-time model and rank bounds (paper §IV-D1, Fig. 9, Eq. 2-3).
+
+The paper measures DP all-reduce time on real clusters and finds it linear in
+the compression rank, T_com(r) = eta * r (MAPE 2.85%). That linearity is
+structural: PowerSGD rank-r compression of an m x n gradient moves
+(m + n) * r * bytes_per_elem through the ring, and ring all-reduce time is
+2 (k-1)/k * bytes / link_bw — linear in bytes, hence in r.
+
+On the TPU target we cannot wall-clock the ring (CPU container), so the model
+is built from exact byte counts + the analytic ring model with the v5e
+constants from the brief. The same class accepts *measured* (rank, seconds)
+samples on real hardware — ``fit`` recovers eta and reports the MAPE, which
+benchmarks/comm_linearity.py uses to reproduce Fig. 9 / the 2.85% claim.
+
+Eq. 2 gates compression: it only pays when
+    T_compress + D_compressed / B + T_decompress <= D_original / B
+which yields r_max; r_min defaults into the paper's [r_max/6, r_max/4] band.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+__all__ = ["HardwareSpec", "TPU_V5E", "CommModel", "rank_bounds"]
+
+
+@dataclasses.dataclass(frozen=True)
+class HardwareSpec:
+    """Per-chip peak numbers (defaults: TPU v5e per the brief)."""
+
+    peak_flops: float = 197e12          # bf16 FLOP/s per chip
+    hbm_bw: float = 819e9               # bytes/s per chip
+    ici_bw: float = 50e9                # bytes/s per ICI link
+    bytes_per_elem: int = 2             # bf16 on the wire
+
+
+TPU_V5E = HardwareSpec()
+
+
+def ring_allreduce_seconds(nbytes: float, world: int, link_bw: float) -> float:
+    """Classic ring all-reduce: 2 (k-1)/k * nbytes / link_bw."""
+    if world <= 1:
+        return 0.0
+    return 2.0 * (world - 1) / world * nbytes / link_bw
+
+
+@dataclasses.dataclass
+class CommModel:
+    """T_com(r) = eta * r for one compressed leaf population (Eq. 3).
+
+    ``eta`` is derived analytically (``from_shapes``) or fit from measured
+    samples (``fit``). ``compress_overhead_s`` folds T_compress +
+    T_decompress (Eq. 2), modeled as the 2 m n r matmul FLOPs of the
+    PowerSGD factor products at the chip's peak.
+    """
+
+    eta: float                      # seconds per unit rank
+    overhead_per_rank: float = 0.0  # compress+decompress seconds per unit rank
+    full_bytes: float = 0.0         # D_original in bytes (for Eq. 2)
+    world: int = 1
+    hw: HardwareSpec = TPU_V5E
+
+    @classmethod
+    def from_shapes(
+        cls,
+        shapes: list[tuple[int, int]],
+        world: int,
+        hw: HardwareSpec = TPU_V5E,
+        mxu_efficiency: float = 0.35,
+    ) -> "CommModel":
+        """Analytic eta for a set of compressed (m, n) leaves.
+
+        Per unit rank, PowerSGD ships (m + n) elements per leaf and spends
+        ~ 2*(2 m n) FLOPs (M@Q and M^T@P) on compress + ~2 m n on decompress.
+        """
+        bpe = hw.bytes_per_elem
+        bytes_per_rank = sum((m + n) * bpe for m, n in shapes)
+        eta = ring_allreduce_seconds(bytes_per_rank, world, hw.ici_bw)
+        flops_per_rank = sum(6.0 * m * n for m, n in shapes)
+        overhead = flops_per_rank / (hw.peak_flops * mxu_efficiency)
+        full = sum(m * n * bpe for m, n in shapes)
+        return cls(eta=eta, overhead_per_rank=overhead, full_bytes=full,
+                   world=world, hw=hw)
+
+    @classmethod
+    def fit(cls, ranks: np.ndarray, seconds: np.ndarray) -> tuple["CommModel", float]:
+        """Least-squares fit of T = eta*r from measurements; returns (model, MAPE)."""
+        ranks = np.asarray(ranks, dtype=np.float64)
+        seconds = np.asarray(seconds, dtype=np.float64)
+        eta = float(np.sum(ranks * seconds) / np.sum(ranks * ranks))
+        pred = eta * ranks
+        mape = float(np.mean(np.abs(pred - seconds) / np.maximum(seconds, 1e-12)))
+        return cls(eta=eta), mape
+
+    # -- Eq. 3 ---------------------------------------------------------------
+    def t_com(self, r: int) -> float:
+        return self.eta * r
+
+    def t_total(self, r: int) -> float:
+        """Eq. 2 LHS: compress + wire + decompress."""
+        return self.overhead_per_rank * r + self.t_com(r)
+
+    def t_uncompressed(self) -> float:
+        """Eq. 2 RHS: D_original / B as a ring all-reduce."""
+        return ring_allreduce_seconds(self.full_bytes, self.world, self.hw.ici_bw)
+
+    def rank_for_time(self, t: float, r_min: int, r_max: int) -> int:
+        """Invert Eq. 3 (used by stage alignment, Alg. 2 line 4)."""
+        if self.eta <= 0:
+            return r_max
+        return int(np.clip(round(t / self.eta), r_min, r_max))
+
+
+def rank_bounds(model: CommModel, max_possible: int,
+                r_min_divisor: float = 5.0) -> tuple[int, int]:
+    """(r_min, r_max) from Eq. 2 + the paper's footnote-1 band.
+
+    r_max is the largest rank for which compression still beats the
+    uncompressed all-reduce; r_min = r_max / divisor with the paper's
+    recommended divisor in [4, 6] (default 5).
+    """
+    t_full = model.t_uncompressed()
+    if t_full <= 0:
+        return 1, max(1, max_possible)
+    r_max = max_possible
+    # t_total is linear in r: solve overhead*r + eta*r <= t_full directly.
+    per_rank = model.overhead_per_rank + model.eta
+    if per_rank > 0:
+        r_max = int(t_full / per_rank)
+    r_max = int(np.clip(r_max, 1, max_possible))
+    r_min = max(1, int(round(r_max / r_min_divisor)))
+    return r_min, r_max

@@ -1,0 +1,249 @@
+"""Gradient-sync compressor: policies, leaf classification, plans, state.
+
+This is the layer the trainer and dist/collectives call into. It decides —
+statically, per compiled step — *which* gradient leaves are low-rank
+compressed and at *what* rank, then executes compress → (injected psum) →
+decompress with error feedback for those leaves and a plain psum for the
+rest.
+
+Policies (all four share this code path; they differ only in plan-making):
+
+  * ``none``      — Megatron-LM baseline: full-gradient all-reduce.
+  * ``fixed``     — PowerSGD baseline: one static rank everywhere.
+  * ``optimus``   — Optimus-CC-style: static rank, embeddings/1-D excluded
+                    (which this framework always excludes) plus first/last
+                    stage relaxed, error feedback on.
+  * ``edgc``      — per-stage dynamic ranks from the DAC controller.
+
+The plan is a hashable static argument, so rank changes re-specialize the
+jitted step at window boundaries only (paper §IV-C: windowing amortizes the
+reallocation cost; here, the recompile).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from .powersgd import (
+    LowRankState,
+    compress_leaf,
+    compressed_bytes,
+    init_leaf_state,
+    resize_rank,
+)
+
+__all__ = [
+    "LeafInfo",
+    "CompressionPlan",
+    "classify_leaves",
+    "make_plan",
+    "init_compressor_state",
+    "sync_grads",
+    "plan_wire_bytes",
+    "resize_compressor_state",
+]
+
+PsumFn = Callable[[jax.Array], jax.Array]
+
+# Leaves whose path matches are never compressed (Optimus-CC's own carve-out:
+# embedding/vocab projections; norms and biases are 1-D and excluded anyway).
+DEFAULT_EXCLUDE = r"(embed|lm_head|norm|bias|scale|router|conv|a_log|dt|state)"
+
+
+@dataclasses.dataclass(frozen=True)
+class LeafInfo:
+    path: str
+    shape: tuple[int, ...]
+    stage: int          # pipeline stage (0-based) this leaf belongs to
+    eligible: bool      # structurally compressible (>=2-D, big enough)
+
+
+def _layer_stage(path: str, num_layers: int, num_stages: int) -> int:
+    """Map a param path to its (virtual) pipeline stage via its layer index."""
+    m = re.search(r"layers?[/\[.](\d+)", path)
+    if m is None:
+        m = re.search(r"\b(\d+)\b", path) if "layer" in path else None
+    if m is None or num_layers <= 0:
+        return 0
+    layer = int(m.group(1))
+    return min(num_stages - 1, layer * num_stages // max(1, num_layers))
+
+
+def classify_leaves(
+    params: Any,
+    num_layers: int,
+    num_stages: int = 1,
+    min_dim: int = 64,
+    exclude: str = DEFAULT_EXCLUDE,
+) -> list[LeafInfo]:
+    """Walk the param pytree and classify every leaf.
+
+    Eligibility: 2-D/3-D, both matricized dims >= min_dim, path not excluded.
+    min_dim guards Eq. 2 — tiny matrices never win from compression — and
+    keeps rank <= min(m, n)/2 meaningful.
+    """
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+    infos = []
+    pat = re.compile(exclude, re.IGNORECASE)
+    for key_path, leaf in flat:
+        path = jax.tree_util.keystr(key_path)
+        shape = tuple(leaf.shape)
+        mat_dims = shape[-2:] if len(shape) >= 2 else shape
+        eligible = (
+            len(shape) >= 2
+            and len(mat_dims) == 2
+            and min(mat_dims) >= min_dim
+            and pat.search(path) is None
+        )
+        infos.append(
+            LeafInfo(
+                path=path,
+                shape=shape,
+                stage=_layer_stage(path, num_layers, num_stages),
+                eligible=eligible,
+            )
+        )
+    return infos
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressionPlan:
+    """Static (hashable) map path -> rank for compressed leaves.
+
+    ``ranks`` holds only compressed leaves; everything else is plain-psum'd.
+    """
+
+    ranks: tuple[tuple[str, int], ...]
+
+    def rank_of(self, path: str) -> int | None:
+        for p, r in self.ranks:
+            if p == path:
+                return r
+        return None
+
+    def as_dict(self) -> dict[str, int]:
+        return dict(self.ranks)
+
+
+NO_COMPRESSION = CompressionPlan(ranks=())
+
+
+def make_plan(
+    policy: str,
+    leaves: list[LeafInfo],
+    stage_ranks: list[int] | None = None,
+    fixed_rank: int = 64,
+    num_stages: int = 1,
+) -> CompressionPlan:
+    """Build the per-leaf rank plan for a policy (see module docstring)."""
+    if policy == "none":
+        return NO_COMPRESSION
+    ranks: list[tuple[str, int]] = []
+    for info in leaves:
+        if not info.eligible:
+            continue
+        max_r = min(info.shape[-2:]) // 2
+        if policy == "fixed":
+            r = fixed_rank
+        elif policy == "optimus":
+            # Optimus-CC relaxes compression on the pipeline-boundary stages
+            # (they carry embedding-adjacent signal); interior stages fixed.
+            boundary = info.stage in (0, num_stages - 1)
+            r = min(fixed_rank * 2, max_r) if boundary else fixed_rank
+        elif policy == "edgc":
+            assert stage_ranks is not None, "edgc plan needs DAC stage ranks"
+            r = stage_ranks[min(info.stage, len(stage_ranks) - 1)]
+        else:
+            raise ValueError(f"unknown policy {policy!r}")
+        r = max(1, min(r, max_r))
+        ranks.append((info.path, int(r)))
+    return CompressionPlan(ranks=tuple(ranks))
+
+
+def _leaves_by_path(tree: Any) -> dict[str, jax.Array]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    return {jax.tree_util.keystr(kp): leaf for kp, leaf in flat}
+
+
+def init_compressor_state(
+    params: Any, plan: CompressionPlan, key: jax.Array
+) -> dict[str, LowRankState]:
+    """One LowRankState per compressed leaf, keyed by path string."""
+    by_path = _leaves_by_path(params)
+    state: dict[str, LowRankState] = {}
+    for i, (path, rank) in enumerate(plan.ranks):
+        leaf = by_path[path]
+        state[path] = init_leaf_state(
+            tuple(leaf.shape), rank, jax.random.fold_in(key, i), leaf.dtype
+        )
+    return state
+
+
+def resize_compressor_state(
+    state: dict[str, LowRankState], plan: CompressionPlan, key: jax.Array
+) -> dict[str, LowRankState]:
+    """Migrate warm-start Q / EF buffers when DAC changes ranks or leaves."""
+    new_state: dict[str, LowRankState] = {}
+    for i, (path, rank) in enumerate(plan.ranks):
+        if path in state:
+            new_state[path] = resize_rank(state[path], rank, jax.random.fold_in(key, i))
+        else:
+            raise KeyError(f"no compressor state for newly-compressed leaf {path}")
+    return new_state
+
+
+def sync_grads(
+    grads: Any,
+    comp_state: dict[str, LowRankState],
+    plan: CompressionPlan,
+    psum_mean: PsumFn,
+    use_kernels: bool = False,
+) -> tuple[Any, dict[str, LowRankState]]:
+    """Data-parallel gradient synchronization under a compression plan.
+
+    Runs inside the (manual pod+data) shard_map region of the train step.
+    Compressed leaves: PowerSGD factor psums + error feedback. Others: plain
+    psum-mean. Returns (synced grads, new compressor state).
+    """
+    rank_by_path = plan.as_dict()
+    flat, treedef = jax.tree_util.tree_flatten_with_path(grads)
+    out_leaves = []
+    new_state = dict(comp_state)
+    for key_path, g in flat:
+        path = jax.tree_util.keystr(key_path)
+        if path in rank_by_path:
+            g_hat, st = compress_leaf(
+                g, comp_state[path], psum_mean, use_kernels=use_kernels
+            )
+            new_state[path] = st
+            out_leaves.append(g_hat)
+        else:
+            out_leaves.append(psum_mean(g))
+    synced = jax.tree_util.tree_unflatten(treedef, out_leaves)
+    return synced, new_state
+
+
+def plan_wire_bytes(
+    leaves: list[LeafInfo], plan: CompressionPlan, bytes_per_elem: int = 2
+) -> tuple[int, int]:
+    """(compressed_bytes, full_bytes) moved per step by the DP sync.
+
+    Exact byte accounting — this feeds comm_model, Fig. 9, Tables III/VI.
+    """
+    rank_by_path = plan.as_dict()
+    comp = 0
+    full = 0
+    for info in leaves:
+        nelem = 1
+        for d in info.shape:
+            nelem *= d
+        full += nelem * bytes_per_elem
+        if info.path in rank_by_path:
+            comp += compressed_bytes(info.shape, rank_by_path[info.path], bytes_per_elem)
+        else:
+            comp += nelem * bytes_per_elem
+    return comp, full

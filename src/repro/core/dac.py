@@ -1,0 +1,141 @@
+"""DAC — Dynamic Alignment Compressor (paper §IV-D, Algorithms 1 and 2).
+
+Host-side control plane. Owns:
+
+  * rank bounds [r_min, r_max] from the comm model (Eq. 2 / footnote 1),
+  * the adaptive warm-up decision (§IV-D2),
+  * window-based rank adjustment for pipeline stage 1 (Algorithm 1),
+  * stage-aligned rank adjustment for stages i > 1 (Algorithm 2, Eq. 4).
+
+Nothing here touches device state: DAC consumes scalar entropy readings
+(produced on-device by GDS) and emits per-stage integer ranks; the trainer
+re-specializes the compiled step only when the rank vector changes
+(window-level, as the paper prescribes to amortize "memory reallocation").
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from .comm_model import CommModel
+from .cqm import CQM
+
+__all__ = ["DACConfig", "window_rank_adjust", "stage_aligned_ranks", "DAC"]
+
+
+@dataclasses.dataclass(frozen=True)
+class DACConfig:
+    window: int = 1000            # w, iterations per adjustment window (Tab. VII)
+    adjust_limit: int = 2         # s, max |rank delta| per window (Constraint 2)
+    warmup_frac_min: float = 0.10  # empirical floor on the warm-up phase
+    r_min_divisor: float = 5.0    # r_min = r_max / divisor, in [4, 6]
+    quantize_to: int = 2          # snap ranks to multiples (bounds compile cache)
+
+
+def window_rank_adjust(
+    r_prev: int,
+    r_new: int,
+    r_min: int,
+    r_max: int,
+    s: int,
+) -> int:
+    """Algorithm 1 lines 3-10: limit the per-window move to ±s and clamp.
+
+    ``r_new`` is the Theorem-3 (Eq. 11/15) rank computed by CQM from the
+    window-mean entropy; the output is the applied rank for stage 1.
+    """
+    if abs(r_new - r_prev) > s:
+        r_new = r_prev + s if r_new > r_prev else r_prev - s
+    return max(r_min, min(r_max, r_new))
+
+
+def stage_aligned_ranks(
+    r_stage1: int,
+    num_stages: int,
+    comm: CommModel,
+    t_micro_back: float,
+    r_min: int,
+    r_max: int,
+) -> list[int]:
+    """Algorithm 2: align all stages' comm completion with stage 1 (Eq. 4).
+
+    Stage 1 starts its DP sync last (its backward finishes last in 1F1B);
+    stage i has an (i-1) * T_microBack head start, so it can afford
+    T_com(r^{s1}) + (i-1) * T_microBack of communication — i.e. a *larger*
+    (more accurate) rank — and still finish with stage 1.
+    """
+    t1 = comm.t_com(r_stage1)
+    ranks = [r_stage1]
+    for i in range(2, num_stages + 1):
+        t_i = t1 + (i - 1) * t_micro_back
+        ranks.append(comm.rank_for_time(t_i, r_min, r_max))
+    return ranks
+
+
+@dataclasses.dataclass
+class DAC:
+    """Stateful per-training-run DAC instance.
+
+    One CQM anchors the entropy->rank law (on the representative — largest —
+    compressed shape, as the paper's layer-invariance observation justifies:
+    relative error trends are consistent across layers, Fig. 10).
+    """
+
+    cqm: CQM
+    comm: CommModel
+    cfg: DACConfig
+    r_min: int
+    r_max: int
+    num_stages: int
+    t_micro_back: float
+    total_iterations: int
+
+    # mutable control state
+    warmed_up: bool = False
+    r_stage1: int = 0
+    window_index: int = 0
+
+    def __post_init__(self) -> None:
+        self.r_stage1 = self.r_max
+
+    # -- §IV-D2: adaptive warm-up -------------------------------------------
+    def maybe_end_warmup(self, h_window: float, step: int) -> bool:
+        """End warm-up when the Theorem-3 rank first drops below r_max, but
+        never before 10% of total iterations (the empirical constraint)."""
+        if self.warmed_up:
+            return True
+        if step < self.cfg.warmup_frac_min * self.total_iterations:
+            return False
+        if not self.cqm.anchored:
+            # anchor the fixed-error constraint at (r_max, current entropy)
+            self.cqm.anchor(self.r_max, h_window)
+            return False
+        r_new = self.cqm.rank_for_entropy(h_window)
+        if r_new < self.r_max:
+            self.warmed_up = True
+            self.r_stage1 = self.r_max
+        return self.warmed_up
+
+    # -- Algorithm 1 + 2 ------------------------------------------------------
+    def update(self, h_window: float) -> list[int]:
+        """Per-window update: new per-stage rank vector (stage 1 first)."""
+        self.window_index += 1
+        if not self.cqm.anchored:
+            self.cqm.anchor(self.r_max, h_window)
+        r_new = self.cqm.rank_for_entropy(h_window)
+        r1 = window_rank_adjust(
+            self.r_stage1, r_new, self.r_min, self.r_max, self.cfg.adjust_limit
+        )
+        q = max(1, self.cfg.quantize_to)
+        r1 = max(self.r_min, min(self.r_max, round(r1 / q) * q))
+        self.r_stage1 = r1
+        ranks = stage_aligned_ranks(
+            r1, self.num_stages, self.comm, self.t_micro_back,
+            self.r_min, self.r_max,
+        )
+        return [max(self.r_min, min(self.r_max, round(r / q) * q)) for r in ranks]
+
+    def current_ranks(self) -> list[int]:
+        return stage_aligned_ranks(
+            self.r_stage1, self.num_stages, self.comm, self.t_micro_back,
+            self.r_min, self.r_max,
+        )

@@ -1,0 +1,2 @@
+"""Pallas TPU kernels for EDGC's compression hot-spots (+ jnp oracles)."""
+from . import ops, ref

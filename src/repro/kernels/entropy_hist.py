@@ -1,0 +1,63 @@
+"""Pallas kernel: histogram counts for the GDS entropy estimator.
+
+GDS needs a 256-bin histogram of a beta-sampled gradient slice every 1/alpha
+iterations. On GPU the reference implementation copies the sample to host;
+on TPU that transfer stalls the step, so we bin on-device: one pass over the
+sample in VMEM-sized tiles, each tile scattering into a per-program partial
+histogram that the grid accumulates (revisiting output blocks is free —
+the (1, bins) histogram block stays resident).
+
+mu/sigma (for the bin range) are cheap jnp reductions computed by the ops
+wrapper; the kernel gets (lo, inv_width) as scalar prefetch-style operands
+(a (1, 1) block in SMEM-compatible layout).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import jax.experimental.pallas as pl
+
+F32 = jnp.float32
+
+
+def _hist_kernel(scal_ref, x_ref, o_ref, *, num_bins: int):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+    lo = scal_ref[0, 0]
+    inv_w = scal_ref[0, 1]
+    x = x_ref[...].astype(F32)                     # (1, bx)
+    idx = jnp.clip(((x - lo) * inv_w).astype(jnp.int32), 0, num_bins - 1)
+    onehot = (idx[0, :, None] == jnp.arange(num_bins)[None, :]).astype(F32)
+    o_ref[...] += jnp.sum(onehot, axis=0, keepdims=True)  # (1, bins)
+
+
+def hist_counts(x, lo, inv_width, *, num_bins: int = 256, bx: int = 2048,
+                interpret: bool = True):
+    """Histogram counts of flat x (N,) given precomputed (lo, 1/bin_width)."""
+    n = x.shape[0]
+    bx = min(bx, n)
+    pad = (-n) % bx
+    if pad:
+        # pad with lo - 1/inv_width (clips into bin 0); subtracted after
+        x = jnp.concatenate([x, jnp.full((pad,), jnp.nan, x.dtype)], 0)
+        # NaN would poison; use a sentinel far below lo and fix bin 0 after
+        x = x.at[n:].set(lo - 1e6)
+    scal = jnp.stack([lo, inv_width]).reshape(1, 2).astype(F32)
+    counts = pl.pallas_call(
+        functools.partial(_hist_kernel, num_bins=num_bins),
+        grid=(x.shape[0] // bx,),
+        in_specs=[
+            pl.BlockSpec((1, 2), lambda i: (0, 0)),
+            pl.BlockSpec((1, bx), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((1, num_bins), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, num_bins), F32),
+        interpret=interpret,
+    )(scal, x.reshape(1, -1))
+    counts = counts[0]
+    if pad:
+        counts = counts.at[0].add(-float(pad))
+    return counts

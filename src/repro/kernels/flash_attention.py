@@ -1,0 +1,120 @@
+"""Pallas flash-attention (forward) — kills the score-materialization traffic.
+
+The roofline (EXPERIMENTS §Roofline) shows the memory term dominating every
+train/prefill row, and the HLO walk attributes most of it to materialized
+(block_q x Tk) attention scores: the pure-jnp blockwise attention still
+writes/reads every score block through HBM (~2 * B*H*T*Tk*4 bytes per
+layer). The fix is the classic flash schedule: tile Q in VMEM, stream K/V
+tiles, keep the softmax running statistics (m, l) and the output accumulator
+in VMEM scratch — scores never leave VMEM.
+
+Layout: grid (B*Hkv*rep, Tq/bq, Tk/bk); the K-tile axis is the innermost
+(sequential) grid dim, accumulating into VMEM scratch. Causal masking skips
+fully-masked tiles via ``pl.when``. GQA is handled by indexing the kv head
+as (head // rep).
+
+Forward-only: training integration would pair it with a custom_vjp backward
+kernel (the standard recompute form); serving prefill uses it as-is. The
+oracle is ref.flash_reference == blockwise_attention semantics.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+import jax.experimental.pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+F32 = jnp.float32
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                  scale: float, causal: bool, bq: int, bk: int, rep: int):
+    kb = pl.program_id(2)
+    qb = pl.program_id(1)
+
+    @pl.when(kb == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    def body():
+        q = q_ref[0].astype(F32)                    # (bq, d)
+        k = k_ref[0].astype(F32)                    # (bk, d)
+        s = jnp.dot(q, k.T, preferred_element_type=F32) * scale  # (bq, bk)
+        if causal:
+            q_pos = qb * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            k_pos = kb * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            s = jnp.where(q_pos >= k_pos, s, NEG_INF)
+        m_prev = m_ref[...]                          # (bq, 1)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)                       # (bq, bk)
+        alpha = jnp.exp(m_prev - m_new)              # (bq, 1)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        v = v_ref[0].astype(F32)                     # (bk, d)
+        acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+            p, v, preferred_element_type=F32)
+        m_ref[...] = m_new
+
+    if causal:
+        # skip K tiles strictly above the diagonal of this Q tile
+        pl.when((kb * bk) <= (qb * bq + bq - 1))(body)
+    else:
+        body()
+
+    @pl.when(kb == pl.num_programs(2) - 1)
+    def _finish():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+                    ).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, bq: int = 256,
+                    bk: int = 256, interpret: bool = True):
+    """q: (B, Tq, H, Dh); k, v: (B, Tk, Hkv, Dh). Returns (B, Tq, H, Dh).
+
+    VMEM working set per program: q/k/v tiles + (bq, Dh) accumulator +
+    (bq, bk) scores ≈ (2*bq + 2*bk) * Dh * 4 + bq*bk*4 bytes — with the
+    defaults and Dh=128, ~0.75 MB, comfortably inside a v5e core's VMEM.
+    """
+    B, Tq, H, Dh = q.shape
+    _, Tk, Hkv, _ = k.shape
+    rep = H // Hkv
+    scale = 1.0 / math.sqrt(Dh)
+    bq = min(bq, Tq)
+    bk = min(bk, Tk)
+    assert Tq % bq == 0 and Tk % bk == 0, (Tq, bq, Tk, bk)
+
+    # flatten heads into the leading grid dim: (B*H, T, Dh)
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, Tq, Dh)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * Hkv, Tk, Dh)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * Hkv, Tk, Dh)
+
+    grid = (B * H, Tq // bq, Tk // bk)
+
+    def kv_index(h, i, j):
+        # map flattened q-head index -> kv-head index (GQA)
+        return (h // rep, j, 0)
+
+    out = pl.pallas_call(
+        functools.partial(_flash_kernel, scale=scale, causal=causal,
+                          bq=bq, bk=bk, rep=rep),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, Dh), lambda h, i, j: (h, i, 0)),
+            pl.BlockSpec((1, bk, Dh), kv_index),
+            pl.BlockSpec((1, bk, Dh), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, bq, Dh), lambda h, i, j: (h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, Tq, Dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, Dh), F32),   # output accumulator
+            pltpu.VMEM((bq, 1), F32),    # running max m
+            pltpu.VMEM((bq, 1), F32),    # running sum l
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(B, H, Tq, Dh).transpose(0, 2, 1, 3)

@@ -1,0 +1,280 @@
+"""Pallas flash-attention backward — completes the training-path kernel.
+
+Standard recompute-form backward (no materialized scores in HBM):
+
+  D  = rowsum(dO ∘ O)                      (per query row)
+  P  = exp(S - L)     with L = m + log(l)  (recomputed per tile)
+  dV = Σ_q  Pᵀ dO
+  dP = dO Vᵀ
+  dS = P ∘ (dP - D)
+  dQ = Σ_k  dS K · scale
+  dK = Σ_q  dSᵀ Q · scale
+
+Two kernels with transposed grids (the classic split):
+  * dq kernel : grid (BH, n_q, n_k) — dQ tile accumulates across k tiles;
+  * dkv kernel: grid (BH, n_k, n_q) — dK/dV tiles accumulate across q tiles.
+
+``flash_attention_train`` wires fwd+bwd through jax.custom_vjp; the fwd
+saves (O, LSE) — the standard memory footprint (2 extra rows per query).
+Oracle: jax.grad of ref.flash_reference (tests/test_kernels.py).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+import jax.experimental.pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .flash_attention import flash_attention as _flash_fwd_nostats
+
+F32 = jnp.float32
+NEG_INF = -1e30
+
+
+# ----------------------------------------------------------- fwd (with LSE)
+def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, acc_ref, m_ref, l_ref,
+                *, scale: float, causal: bool, bq: int, bk: int):
+    kb = pl.program_id(2)
+    qb = pl.program_id(1)
+
+    @pl.when(kb == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    def body():
+        q = q_ref[0].astype(F32)
+        k = k_ref[0].astype(F32)
+        s = jnp.dot(q, k.T, preferred_element_type=F32) * scale
+        if causal:
+            q_pos = qb * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            k_pos = kb * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            s = jnp.where(q_pos >= k_pos, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+            p, v_ref[0].astype(F32), preferred_element_type=F32)
+        m_ref[...] = m_new
+
+    if causal:
+        pl.when((kb * bk) <= (qb * bq + bq - 1))(body)
+    else:
+        body()
+
+    @pl.when(kb == pl.num_programs(2) - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
+        lse_ref[0] = (m_ref[...] + jnp.log(l))[:, 0]
+
+
+def _recompute_p(q, k, lse_rows, *, scale, causal, qb, kb, bq, bk):
+    """P tile from saved LSE: exp(S - L)."""
+    s = jnp.dot(q, k.T, preferred_element_type=F32) * scale
+    if causal:
+        q_pos = qb * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        k_pos = kb * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        s = jnp.where(q_pos >= k_pos, s, NEG_INF)
+    return jnp.exp(s - lse_rows[:, None])
+
+
+# ----------------------------------------------------------------- dq kernel
+def _dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, dq_ref,
+               acc_ref, *, scale: float, causal: bool, bq: int, bk: int):
+    kb = pl.program_id(2)
+    qb = pl.program_id(1)
+
+    @pl.when(kb == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    def body():
+        q = q_ref[0].astype(F32)
+        k = k_ref[0].astype(F32)
+        p = _recompute_p(q, k, lse_ref[0], scale=scale, causal=causal,
+                         qb=qb, kb=kb, bq=bq, bk=bk)
+        dp = jnp.dot(do_ref[0].astype(F32), v_ref[0].astype(F32).T,
+                     preferred_element_type=F32)
+        ds = p * (dp - delta_ref[0][:, None])
+        acc_ref[...] += jnp.dot(ds, k, preferred_element_type=F32) * scale
+
+    if causal:
+        pl.when((kb * bk) <= (qb * bq + bq - 1))(body)
+    else:
+        body()
+
+    @pl.when(kb == pl.num_programs(2) - 1)
+    def _finish():
+        dq_ref[0] = acc_ref[...].astype(dq_ref.dtype)
+
+
+# ---------------------------------------------------------------- dkv kernel
+def _dkv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
+                dk_ref, dv_ref, dk_acc, dv_acc,
+                *, scale: float, causal: bool, bq: int, bk: int):
+    qb = pl.program_id(2)          # inner (accumulation) axis = q tiles
+    kb = pl.program_id(1)
+
+    @pl.when(qb == 0)
+    def _init():
+        dk_acc[...] = jnp.zeros_like(dk_acc)
+        dv_acc[...] = jnp.zeros_like(dv_acc)
+
+    def body():
+        q = q_ref[0].astype(F32)
+        k = k_ref[0].astype(F32)
+        p = _recompute_p(q, k, lse_ref[0], scale=scale, causal=causal,
+                         qb=qb, kb=kb, bq=bq, bk=bk)
+        do = do_ref[0].astype(F32)
+        dv_acc[...] += jnp.dot(p.T, do, preferred_element_type=F32)
+        dp = jnp.dot(do, v_ref[0].astype(F32).T, preferred_element_type=F32)
+        ds = p * (dp - delta_ref[0][:, None])
+        dk_acc[...] += jnp.dot(ds.T, q, preferred_element_type=F32) * scale
+
+    if causal:
+        # q tiles strictly above this k tile's diagonal contribute nothing
+        pl.when((qb * bq + bq - 1) >= (kb * bk))(body)
+    else:
+        body()
+
+    @pl.when(qb == pl.num_programs(2) - 1)
+    def _finish():
+        dk_ref[0] = dk_acc[...].astype(dk_ref.dtype)
+        dv_ref[0] = dv_acc[...].astype(dv_ref.dtype)
+
+
+# ------------------------------------------------------------------ plumbing
+def _fwd_with_stats(q, k, v, *, causal, bq, bk, interpret):
+    B, Tq, H, Dh = q.shape
+    _, Tk, Hkv, _ = k.shape
+    rep = H // Hkv
+    scale = 1.0 / math.sqrt(Dh)
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, Tq, Dh)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * Hkv, Tk, Dh)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * Hkv, Tk, Dh)
+    grid = (B * H, Tq // bq, Tk // bk)
+    kv_index = lambda h, i, j: (h // rep, j, 0)
+    o, lse = pl.pallas_call(
+        functools.partial(_fwd_kernel, scale=scale, causal=causal, bq=bq, bk=bk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, Dh), lambda h, i, j: (h, i, 0)),
+            pl.BlockSpec((1, bk, Dh), kv_index),
+            pl.BlockSpec((1, bk, Dh), kv_index),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bq, Dh), lambda h, i, j: (h, i, 0)),
+            pl.BlockSpec((1, bq), lambda h, i, j: (h, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B * H, Tq, Dh), q.dtype),
+            jax.ShapeDtypeStruct((B * H, Tq), F32),
+        ],
+        scratch_shapes=[pltpu.VMEM((bq, Dh), F32), pltpu.VMEM((bq, 1), F32),
+                        pltpu.VMEM((bq, 1), F32)],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return o, lse
+
+
+def _bwd(q, k, v, o, lse, do, *, causal, bq, bk, interpret):
+    B, Tq, H, Dh = q.shape
+    _, Tk, Hkv, _ = k.shape
+    rep = H // Hkv
+    scale = 1.0 / math.sqrt(Dh)
+    BH = B * H
+    qf = q.transpose(0, 2, 1, 3).reshape(BH, Tq, Dh)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * Hkv, Tk, Dh)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * Hkv, Tk, Dh)
+    dof = do.transpose(0, 2, 1, 3).reshape(BH, Tq, Dh)
+    of = o.transpose(0, 2, 1, 3).reshape(BH, Tq, Dh)
+    delta = jnp.sum(dof.astype(F32) * of.astype(F32), axis=-1)  # (BH, Tq)
+
+    kv_index = lambda h, i, j: (h // rep, j, 0)
+
+    dq = pl.pallas_call(
+        functools.partial(_dq_kernel, scale=scale, causal=causal, bq=bq, bk=bk),
+        grid=(BH, Tq // bq, Tk // bk),
+        in_specs=[
+            pl.BlockSpec((1, bq, Dh), lambda h, i, j: (h, i, 0)),
+            pl.BlockSpec((1, bk, Dh), kv_index),
+            pl.BlockSpec((1, bk, Dh), kv_index),
+            pl.BlockSpec((1, bq, Dh), lambda h, i, j: (h, i, 0)),
+            pl.BlockSpec((1, bq), lambda h, i, j: (h, i)),
+            pl.BlockSpec((1, bq), lambda h, i, j: (h, i)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, Dh), lambda h, i, j: (h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, Tq, Dh), q.dtype),
+        scratch_shapes=[pltpu.VMEM((bq, Dh), F32)],
+        interpret=interpret,
+    )(qf, kf, vf, dof, lse, delta)
+
+    # dK/dV accumulate over q tiles PER Q-HEAD; sum GQA groups afterwards.
+    kv_q_index = lambda h, i, j: (h // rep, i, 0)
+    dk, dv = pl.pallas_call(
+        functools.partial(_dkv_kernel, scale=scale, causal=causal, bq=bq, bk=bk),
+        grid=(BH, Tk // bk, Tq // bq),
+        in_specs=[
+            pl.BlockSpec((1, bq, Dh), lambda h, i, j: (h, j, 0)),
+            pl.BlockSpec((1, bk, Dh), kv_q_index),
+            pl.BlockSpec((1, bk, Dh), kv_q_index),
+            pl.BlockSpec((1, bq, Dh), lambda h, i, j: (h, j, 0)),
+            pl.BlockSpec((1, bq), lambda h, i, j: (h, j)),
+            pl.BlockSpec((1, bq), lambda h, i, j: (h, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bk, Dh), lambda h, i, j: (h, i, 0)),
+            pl.BlockSpec((1, bk, Dh), lambda h, i, j: (h, i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((BH, Tk, Dh), F32),
+            jax.ShapeDtypeStruct((BH, Tk, Dh), F32),
+        ],
+        scratch_shapes=[pltpu.VMEM((bk, Dh), F32), pltpu.VMEM((bk, Dh), F32)],
+        interpret=interpret,
+    )(qf, kf, vf, dof, lse, delta)
+
+    dq = dq.reshape(B, H, Tq, Dh).transpose(0, 2, 1, 3)
+    # GQA: sum the rep query heads sharing each kv head
+    dk = dk.reshape(B, Hkv, rep, Tk, Dh).sum(axis=2).transpose(0, 2, 1, 3)
+    dv = dv.reshape(B, Hkv, rep, Tk, Dh).sum(axis=2).transpose(0, 2, 1, 3)
+    return dq, dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+# ------------------------------------------------------------- custom_vjp op
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def flash_attention_train(q, k, v, causal: bool = True, bq: int = 256,
+                          bk: int = 256, interpret: bool = True):
+    o, _ = _fwd_with_stats(q, k, v, causal=causal, bq=min(bq, q.shape[1]),
+                           bk=min(bk, k.shape[1]), interpret=interpret)
+    B, Tq, H, Dh = q.shape
+    return o.reshape(B, H, Tq, Dh).transpose(0, 2, 1, 3)
+
+
+def _vjp_fwd(q, k, v, causal, bq, bk, interpret):
+    bq = min(bq, q.shape[1])
+    bk = min(bk, k.shape[1])
+    o, lse = _fwd_with_stats(q, k, v, causal=causal, bq=bq, bk=bk,
+                             interpret=interpret)
+    B, Tq, H, Dh = q.shape
+    o_out = o.reshape(B, H, Tq, Dh).transpose(0, 2, 1, 3)
+    return o_out, (q, k, v, o_out, lse)
+
+
+def _vjp_bwd(causal, bq, bk, interpret, res, do):
+    q, k, v, o, lse = res
+    bq = min(bq, q.shape[1])
+    bk = min(bk, k.shape[1])
+    dq, dk, dv = _bwd(q, k, v, o, lse, do, causal=causal, bq=bq, bk=bk,
+                      interpret=interpret)
+    return dq.astype(q.dtype), dk, dv
+
+
+flash_attention_train.defvjp(_vjp_fwd, _vjp_bwd)

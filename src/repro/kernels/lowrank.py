@@ -1,0 +1,169 @@
+"""Pallas TPU kernels for the PowerSGD compression hot-spots.
+
+The compression pipeline touches the full (m, n) gradient three times per
+step: P = (G + E) @ Q, Q = (G + E)^T @ P_hat, and the decompress+residual
+G_hat = P_hat Q^T / E' = (G + E) - G_hat. Uncompressed these are four HBM
+sweeps of the gradient (EF add, two factor matmuls, residual); the kernels
+fuse the EF add into each consumer so every sweep reads G and E exactly once
+— the arithmetic intensity of the factor matmuls is ~r FLOPs/byte, so they
+are HBM-bound and the fusion is worth exactly one sweep (~25%).
+
+Tiling: (bm, bn) VMEM tiles of the gradient, MXU-aligned (multiples of 128
+on the contracting dims); the thin factor (n x r or m x r panel, r <= 256)
+stays resident across the accumulation grid axis. fp32 accumulation.
+
+All kernels run under ``interpret=True`` on CPU (how tests validate them
+against ref.py) and compile for TPU with the same BlockSpecs.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import jax.experimental.pallas as pl
+
+F32 = jnp.float32
+
+
+def _tile(dim: int, pref: int) -> int:
+    """Largest MXU-friendly tile <= pref that divides dim (fallback: dim)."""
+    for t in (pref, pref // 2, pref // 4, 256, 128):
+        if t and t <= dim and dim % t == 0:
+            return t
+    return dim
+
+
+# --------------------------------------------------------------- P = (G+E)@Q
+def _p_kernel(g_ref, e_ref, q_ref, o_ref):
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+    m_blk = g_ref[...].astype(F32) + e_ref[...].astype(F32)   # fused EF add
+    o_ref[...] += jnp.dot(m_blk, q_ref[...].astype(F32),
+                          preferred_element_type=F32)
+
+
+def ef_lowrank_p(grad, err, q, *, bm: int = 256, bn: int = 512,
+                 interpret: bool = True):
+    """P = (grad + err) @ q.  grad/err (m, n), q (n, r) -> (m, r) fp32."""
+    m, n = grad.shape
+    r = q.shape[1]
+    bm, bn = _tile(m, bm), _tile(n, bn)
+    grid = (m // bm, n // bn)
+    return pl.pallas_call(
+        _p_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((bn, r), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, r), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, r), F32),
+        interpret=interpret,
+    )(grad, err, q)
+
+
+# ------------------------------------------------------------ Q = (G+E)^T@P
+def _q_kernel(g_ref, e_ref, p_ref, o_ref):
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+    m_blk = g_ref[...].astype(F32) + e_ref[...].astype(F32)
+    o_ref[...] += jnp.dot(m_blk.T, p_ref[...].astype(F32),
+                          preferred_element_type=F32)
+
+
+def ef_lowrank_q(grad, err, p_hat, *, bm: int = 512, bn: int = 256,
+                 interpret: bool = True):
+    """Q = (grad + err)^T @ p_hat.  grad/err (m, n), p_hat (m, r) -> (n, r)."""
+    m, n = grad.shape
+    r = p_hat.shape[1]
+    bm, bn = _tile(m, bm), _tile(n, bn)
+    grid = (n // bn, m // bm)   # accumulate over m
+    return pl.pallas_call(
+        _q_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bn), lambda j, i: (i, j)),
+            pl.BlockSpec((bm, bn), lambda j, i: (i, j)),
+            pl.BlockSpec((bm, r), lambda j, i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bn, r), lambda j, i: (j, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, r), F32),
+        interpret=interpret,
+    )(grad, err, p_hat)
+
+
+# --------------------------------------- G_hat = P Q^T ; E' = (G+E) - G_hat
+def _dec_kernel(p_ref, q_ref, g_ref, e_ref, ghat_ref, newerr_ref):
+    g_hat = jnp.dot(p_ref[...].astype(F32), q_ref[...].astype(F32).T,
+                    preferred_element_type=F32)
+    ghat_ref[...] = g_hat.astype(ghat_ref.dtype)
+    m_blk = g_ref[...].astype(F32) + e_ref[...].astype(F32)
+    newerr_ref[...] = (m_blk - g_hat).astype(newerr_ref.dtype)
+
+
+def decompress_residual(p_hat, q, grad, err, *, bm: int = 256, bn: int = 512,
+                        interpret: bool = True):
+    """(g_hat, new_err) both (m, n), one pass, no accumulation grid axis."""
+    m, n = grad.shape
+    r = q.shape[1]
+    bm, bn = _tile(m, bm), _tile(n, bn)
+    grid = (m // bm, n // bn)
+    return pl.pallas_call(
+        _dec_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, r), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, r), lambda i, j: (j, 0)),
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, n), grad.dtype),
+            jax.ShapeDtypeStruct((m, n), grad.dtype),
+        ],
+        interpret=interpret,
+    )(p_hat, q, grad, err)
+
+
+# ------------------------------------------------------- Gram-Schmidt panel
+def _gs_kernel(p_ref, o_ref, *, r: int, eps: float):
+    """Single-block modified Gram-Schmidt; the (m, r) panel lives in VMEM.
+
+    r is static and small (<= 256): the column loop unrolls; each step is a
+    VPU dot + rank-1 update on the resident panel.
+    """
+    p = p_ref[...].astype(F32)
+    for i in range(r):
+        v = p[:, i]
+        if i > 0:
+            u = p[:, :i]                          # already orthonormal
+            coef = jnp.einsum("mk,m->k", u, v)    # (i,)
+            v = v - u @ coef
+        v = v / (jnp.sqrt(jnp.sum(v * v)) + eps)
+        p = p.at[:, i].set(v)
+    o_ref[...] = p
+
+
+def gram_schmidt_panel(p, *, eps: float = 1e-8, interpret: bool = True):
+    """Orthonormalize an (m, r) panel in one VMEM-resident kernel call.
+
+    VMEM budget: m * r * 4 bytes (<= ~4 MB for m=16384, r=64). ops.py falls
+    back to jnp QR above that.
+    """
+    m, r = p.shape
+    return pl.pallas_call(
+        functools.partial(_gs_kernel, r=r, eps=eps),
+        grid=(1,),
+        in_specs=[pl.BlockSpec((m, r), lambda i: (0, 0))],
+        out_specs=pl.BlockSpec((m, r), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, r), F32),
+        interpret=interpret,
+    )(p)

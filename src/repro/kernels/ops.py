@@ -1,0 +1,86 @@
+"""Public jit'd wrappers for the Pallas kernels, with shape-aware fallbacks.
+
+Callers use these; the wrappers pick interpret mode off the backend (CPU ->
+interpret=True so the identical kernel bodies execute in Python), route
+shapes the kernels can't tile (non-divisible, too large for a VMEM panel)
+to the ref.py oracles, and handle dtype promotion.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from . import entropy_hist as _hist
+from . import lowrank as _lr
+from . import ref
+
+F32 = jnp.float32
+
+
+def _interpret() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def _tileable(m: int, n: int) -> bool:
+    return m % 128 == 0 and n % 128 == 0
+
+
+@partial(jax.jit, static_argnames=())
+def lowrank_p(grad, err, q):
+    m, n = grad.shape
+    if not _tileable(m, n):
+        return ref.ef_lowrank_p(grad, err, q)
+    return _lr.ef_lowrank_p(grad, err, q, interpret=_interpret())
+
+
+@partial(jax.jit, static_argnames=())
+def lowrank_q(grad, err, p_hat):
+    m, n = grad.shape
+    if not _tileable(m, n):
+        return ref.ef_lowrank_q(grad, err, p_hat)
+    return _lr.ef_lowrank_q(grad, err, p_hat, interpret=_interpret())
+
+
+@partial(jax.jit, static_argnames=())
+def decompress_residual(p_hat, q, grad, err):
+    m, n = grad.shape
+    if not _tileable(m, n):
+        return ref.decompress_residual(p_hat, q, grad, err)
+    return _lr.decompress_residual(p_hat, q, grad, err, interpret=_interpret())
+
+
+@partial(jax.jit, static_argnames=())
+def orthonormalize(p):
+    """Gram-Schmidt panel kernel under ~4 MB VMEM, else jnp QR."""
+    m, r = p.shape
+    if m * r * 4 > (4 << 20) or m % 8 != 0:
+        return jnp.linalg.qr(p.astype(F32))[0]
+    return _lr.gram_schmidt_panel(p, interpret=_interpret())
+
+
+# legacy alias used by core.powersgd's use_kernels path
+def lowrank_matmul(m_mat, q):
+    """M @ Q with the P-kernel (EF already folded into m_mat by the caller)."""
+    zeros = jnp.zeros_like(m_mat)
+    mm, nn = m_mat.shape
+    if not _tileable(mm, nn):
+        return m_mat.astype(F32) @ q.astype(F32)
+    return _lr.ef_lowrank_p(m_mat, zeros, q, interpret=_interpret())
+
+
+@partial(jax.jit, static_argnames=("num_bins", "range_sigmas"))
+def sampled_entropy_hist(x, num_bins: int = 256, range_sigmas: float = 8.0):
+    """Histogram differential entropy via the Pallas binning kernel."""
+    eps = 1e-12
+    x = x.astype(F32).reshape(-1)
+    mu = jnp.mean(x)
+    sigma = jnp.std(x) + eps
+    lo = mu - range_sigmas * sigma
+    width = (2.0 * range_sigmas * sigma) / num_bins
+    counts = _hist.hist_counts(x, lo, 1.0 / width, num_bins=num_bins,
+                               interpret=_interpret())
+    p = counts / x.shape[0]
+    plogp = jnp.where(p > 0, p * jnp.log(p + eps), 0.0)
+    return -jnp.sum(plogp) + jnp.log(width + eps)

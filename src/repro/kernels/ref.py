@@ -1,0 +1,82 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+def ef_lowrank_p(grad: jax.Array, err: jax.Array, q: jax.Array) -> jax.Array:
+    """Fused error-feedback + P factor: P = (grad + err) @ q, fp32 accum.
+
+    grad, err: (m, n); q: (n, r) -> (m, r).
+    """
+    m_mat = grad.astype(F32) + err.astype(F32)
+    return m_mat @ q.astype(F32)
+
+
+def ef_lowrank_q(grad: jax.Array, err: jax.Array, p_hat: jax.Array) -> jax.Array:
+    """Fused error-feedback + Q factor: Q = (grad + err)^T @ p_hat.
+
+    grad, err: (m, n); p_hat: (m, r) -> (n, r).
+    """
+    m_mat = grad.astype(F32) + err.astype(F32)
+    return m_mat.T @ p_hat.astype(F32)
+
+
+def decompress_residual(p_hat: jax.Array, q: jax.Array, grad: jax.Array,
+                        err: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """g_hat = p_hat @ q^T and the new EF residual (grad + err) - g_hat."""
+    g_hat = p_hat.astype(F32) @ q.astype(F32).T
+    new_err = grad.astype(F32) + err.astype(F32) - g_hat
+    return g_hat, new_err
+
+
+def gram_schmidt(p: jax.Array, eps: float = 1e-8) -> jax.Array:
+    """Column-wise modified Gram-Schmidt (m, r) -> orthonormal (m, r)."""
+    m, r = p.shape
+    p = p.astype(F32)
+    cols = []
+    for i in range(r):
+        v = p[:, i]
+        for u in cols:
+            v = v - jnp.dot(u, v) * u
+        v = v / (jnp.linalg.norm(v) + eps)
+        cols.append(v)
+    return jnp.stack(cols, axis=1)
+
+
+def sampled_entropy_hist(x: jax.Array, num_bins: int = 256,
+                         range_sigmas: float = 8.0, eps: float = 1e-12
+                         ) -> jax.Array:
+    """Histogram differential entropy of a flat sample (nats).
+
+    Matches repro.core.entropy.histogram_entropy exactly (same binning).
+    """
+    x = x.astype(F32).reshape(-1)
+    mu = jnp.mean(x)
+    sigma = jnp.std(x) + eps
+    lo = mu - range_sigmas * sigma
+    width = (2.0 * range_sigmas * sigma) / num_bins
+    idx = jnp.clip(((x - lo) / width).astype(jnp.int32), 0, num_bins - 1)
+    counts = jnp.zeros((num_bins,), F32).at[idx].add(1.0)
+    p = counts / x.shape[0]
+    plogp = jnp.where(p > 0, p * jnp.log(p + eps), 0.0)
+    return -jnp.sum(plogp) + jnp.log(width + eps)
+
+
+def flash_reference(q, k, v, causal: bool = True):
+    """Plain full-materialization GQA attention (flash kernel's oracle)."""
+    import math
+    B, Tq, H, Dh = q.shape
+    _, Tk, Hkv, _ = k.shape
+    rep = H // Hkv
+    qh = q.reshape(B, Tq, Hkv, rep, Dh).astype(F32)
+    s = jnp.einsum("bqgrd,bkgd->bgrqk", qh, k.astype(F32)) / math.sqrt(Dh)
+    if causal:
+        mask = jnp.arange(Tq)[:, None] >= jnp.arange(Tk)[None, :]
+        s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bgrqk,bkgd->bqgrd", p, v.astype(F32))
+    return o.reshape(B, Tq, H, Dh).astype(q.dtype)

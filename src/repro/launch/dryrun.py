@@ -1,0 +1,324 @@
+"""Multi-pod dry-run: lower + compile every (arch x input-shape x mesh).
+
+Proves the distribution config is coherent without hardware: 512 fake host
+devices stand in for 2 pods x 256 v5e chips; every combination must
+``.lower().compile()``, and the compiled artifacts yield the roofline terms
+(cost_analysis = per-device FLOPs/bytes; collective bytes parsed from the
+partitioned HLO).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun                   # everything
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-32b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --multi-pod       # 2-pod mesh
+  ... --out results.json
+"""
+# The fake-device flag MUST precede any jax import (device count locks at
+# first init). Do NOT move these lines or set this flag anywhere global.
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+import argparse
+import json
+import re
+import time
+import traceback
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCHS, INPUT_SHAPES, get_config, sharding_mode
+from repro.core import classify_leaves, make_plan
+from repro.core.compressor import NO_COMPRESSION
+from repro.dist.sharding import batch_pspec, cache_pspecs, param_shardings
+from repro.launch.mesh import dp_axes, make_production_mesh
+from repro.models.model import ModelConfig, build_model
+from repro.optim import adam
+from repro.train.step import (
+    TrainStepConfig, make_train_step, replicate_comp_state, state_shardings,
+)
+
+DTYPE_BYTES = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "s8": 1,
+               "u8": 1, "pred": 1, "f64": 8, "s64": 8, "u64": 8, "f8e4m3": 1,
+               "f8e5m2": 1, "s16": 2, "u16": 2}
+
+COLLECTIVE_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+
+# ------------------------------------------------------------ HLO parsing
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Sum bytes of all array shapes in an HLO result type string."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Per-op-kind result bytes of every collective in a partitioned module."""
+    out = {k: 0 for k in COLLECTIVE_OPS}
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        m = re.match(r"%?[\w.\-]+\s*=\s*(\([^)]*\)|[\w,\[\]{}\s]*?)\s*"
+                     r"(all-reduce|all-gather|reduce-scatter|all-to-all|"
+                     r"collective-permute)(-start)?\(", ls)
+        if m:
+            out[m.group(2)] += _shape_bytes(m.group(1))
+    return out
+
+
+# ------------------------------------------------------------- input specs
+def input_specs(cfg: ModelConfig, shape_name: str) -> dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for the batch of one input shape."""
+    spec = INPUT_SHAPES[shape_name]
+    B, T = spec["global_batch"], spec["seq_len"]
+    kind = spec["kind"]
+    tok = jax.ShapeDtypeStruct
+    if kind in ("train", "prefill"):
+        batch = {"tokens": tok((B, T), jnp.int32)}
+        if kind == "train":
+            batch["labels"] = tok((B, T), jnp.int32)
+        if cfg.family == "whisper":
+            batch["frames"] = tok((B, cfg.audio_frames, cfg.d_model), cfg.jdtype)
+        if cfg.family == "vlm":
+            batch["patches"] = tok((B, cfg.num_patches, cfg.d_model), cfg.jdtype)
+        return batch
+    # decode: ONE new token against a seq_len-deep cache
+    return {"tokens": tok((B,), jnp.int32)}
+
+
+def _eval_shape_tree(fn, *args):
+    return jax.eval_shape(fn, *args)
+
+
+# ------------------------------------------------------------- one combo
+def lower_one(arch: str, shape_name: str, mesh, policy: str = "edgc",
+              rank: int = 64, verbose: bool = True,
+              opt_dtype: str = "float32") -> dict:
+    """Lower+compile one (arch, shape, mesh); return the roofline record."""
+    spec = INPUT_SHAPES[shape_name]
+    kind = spec["kind"]
+    B, T = spec["global_batch"], spec["seq_len"]
+    mode = sharding_mode(arch)
+    variant = "long" if shape_name == "long_500k" else "full"
+    cfg = get_config(arch, variant)
+    if cfg is None:
+        return {"arch": arch, "shape": shape_name, "skipped": True,
+                "reason": "long_500k inapplicable (see DESIGN §5)"}
+    model = build_model(cfg)
+    t0 = time.time()
+
+    params_shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    pshard = param_shardings(params_shapes, mesh, fsdp=(mode == "auto"))
+
+    if kind == "train":
+        rec = _lower_train(arch, cfg, model, mesh, mode, params_shapes,
+                           pshard, shape_name, policy, rank, opt_dtype)
+    elif kind == "prefill":
+        rec = _lower_prefill(cfg, model, mesh, params_shapes, pshard, shape_name)
+    else:
+        rec = _lower_decode(cfg, model, mesh, params_shapes, pshard, shape_name)
+    rec.update({"arch": arch, "shape": shape_name, "mode": mode,
+                "mesh": "x".join(map(str, mesh.devices.shape)),
+                "compile_s": round(time.time() - t0, 1)})
+    return rec
+
+
+def _record(compiled, hlo_text: str, pod_size: int = 0) -> dict:
+    from repro.launch.hlo_cost import analyze_hlo
+    ca = compiled.cost_analysis() or {}
+    ma = compiled.memory_analysis()
+    # loop-scaled walker: cost_analysis counts while bodies ONCE, which
+    # undercounts layer-scanned models by their trip counts (hlo_cost.py)
+    walked = analyze_hlo(hlo_text, pod_size=pod_size)
+    coll = {k: int(v) for k, v in walked["collective_bytes"].items()}
+    cross = {k: int(v) for k, v in walked.get("collective_bytes_cross", {}).items()}
+    return {
+        "flops_per_chip": float(walked["flops"]),
+        "bytes_per_chip": float(walked["bytes"]),
+        "collective_bytes_per_chip": coll,
+        "collective_total": int(sum(coll.values())),
+        "collective_cross_pod": cross,
+        "collective_cross_total": int(sum(cross.values())),
+        "xla_cost_analysis": {
+            "flops_unscaled": float(ca.get("flops", 0.0)),
+            "bytes_unscaled": float(ca.get("bytes accessed", 0.0)),
+        },
+        "memory": {
+            "argument_bytes": ma.argument_size_in_bytes,
+            "output_bytes": ma.output_size_in_bytes,
+            "temp_bytes": ma.temp_size_in_bytes,
+            "alias_bytes": ma.alias_size_in_bytes,
+            "code_bytes": ma.generated_code_size_in_bytes,
+        },
+    }
+
+
+def _lower_train(arch, cfg, model, mesh, mode, params_shapes, pshard,
+                 shape_name, policy, rank, opt_dtype="float32"):
+    spec = INPUT_SHAPES[shape_name]
+    B = spec["global_batch"]
+    axes = dp_axes(mesh)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    world = int(np.prod([sizes.get(a, 1) for a in axes])) or 1
+
+    if mode == "auto":
+        plan = NO_COMPRESSION
+    else:
+        leaves = classify_leaves(params_shapes, cfg.num_layers, cfg.num_stages,
+                                 min_dim=128)
+        plan = make_plan(policy if policy != "edgc" else "edgc", leaves,
+                         stage_ranks=[rank] * cfg.num_stages,
+                         fixed_rank=rank, num_stages=cfg.num_stages)
+
+    acfg = adam.AdamConfig(opt_dtype=opt_dtype)
+
+    def init_state():
+        params = model.init(jax.random.PRNGKey(0))
+        ost = adam.init(params, acfg)
+        from repro.core.compressor import init_compressor_state
+        comp = init_compressor_state(params, plan, jax.random.PRNGKey(1))
+        comp = replicate_comp_state(comp, world if mode == "dp_tp" else 1)
+        return {"params": params, "opt_m": ost.m, "opt_v": ost.v,
+                "opt_step": ost.step, "comp": comp}
+
+    state_shapes = jax.eval_shape(init_state)
+    sshard = state_shardings(state_shapes, model, mesh, fsdp=(mode == "auto"))
+    if mode == "auto":
+        # params/opt sharded FSDP+TP; comp empty
+        sshard["params"] = pshard
+        sshard["opt_m"] = pshard
+        sshard["opt_v"] = pshard
+
+    batch = input_specs(cfg, shape_name)
+    bshard = {k: NamedSharding(mesh, batch_pspec(v.ndim, mesh, B))
+              for k, v in batch.items()}
+
+    scfg = TrainStepConfig(mode=mode if mode == "dp_tp" else "auto",
+                           policy_plan=plan, measure_entropy=(mode == "dp_tp"),
+                           remat=cfg.remat, adam=acfg)
+    step = make_train_step(model, mesh, scfg)
+    jstep = jax.jit(step, in_shardings=(sshard, bshard),
+                    out_shardings=(sshard, NamedSharding(mesh, P())),
+                    donate_argnums=0)
+    with mesh:
+        lowered = jstep.lower(state_shapes, batch)
+        compiled = lowered.compile()
+    pod = 256 if "pod" in mesh.axis_names else 0
+    rec = _record(compiled, compiled.as_text(), pod_size=pod)
+    rec["policy"] = policy if plan.ranks else "none"
+    rec["compressed_leaves"] = len(plan.ranks)
+    return rec
+
+
+def _lower_prefill(cfg, model, mesh, params_shapes, pshard, shape_name):
+    spec = INPUT_SHAPES[shape_name]
+    B = spec["global_batch"]
+    batch = input_specs(cfg, shape_name)
+    bshard = {k: NamedSharding(mesh, batch_pspec(v.ndim, mesh, B))
+              for k, v in batch.items()}
+    out_shard = NamedSharding(mesh, batch_pspec(3, mesh, B))
+
+    jfwd = jax.jit(model.forward, in_shardings=(pshard, bshard),
+                   out_shardings=out_shard)
+    with mesh:
+        lowered = jfwd.lower(params_shapes, batch)
+        compiled = lowered.compile()
+    pod = 256 if "pod" in mesh.axis_names else 0
+    return _record(compiled, compiled.as_text(), pod_size=pod)
+
+
+def _lower_decode(cfg, model, mesh, params_shapes, pshard, shape_name):
+    spec = INPUT_SHAPES[shape_name]
+    B, T = spec["global_batch"], spec["seq_len"]
+
+    if cfg.family == "whisper":
+        from repro.models import encdec
+        cache_shapes = jax.eval_shape(lambda: encdec.init_cache(cfg, B, T))
+    else:
+        cache_shapes = jax.eval_shape(lambda: model.init_cache(B, T))
+    cshard = jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s),
+        cache_pspecs(cache_shapes, mesh, B))
+    tokens = jax.ShapeDtypeStruct((B,), jnp.int32)
+    tshard = NamedSharding(mesh, batch_pspec(1, mesh, B))
+    logit_shard = NamedSharding(mesh, batch_pspec(2, mesh, B))
+
+    jdec = jax.jit(model.decode_step,
+                   in_shardings=(pshard, cshard, tshard),
+                   out_shardings=(logit_shard, cshard),
+                   donate_argnums=1)
+    with mesh:
+        lowered = jdec.lower(params_shapes, cache_shapes, tokens)
+        compiled = lowered.compile()
+    pod = 256 if "pod" in mesh.axis_names else 0
+    return _record(compiled, compiled.as_text(), pod_size=pod)
+
+
+# ------------------------------------------------------------------- main
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="one arch id (default: all)")
+    ap.add_argument("--shape", default=None, help="one input shape (default: all)")
+    ap.add_argument("--multi-pod", action="store_true",
+                    help="use the 2x16x16 (512-chip) mesh")
+    ap.add_argument("--policy", default="edgc")
+    ap.add_argument("--rank", type=int, default=64)
+    ap.add_argument("--out", default=None, help="write JSON records here")
+    args = ap.parse_args()
+
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    archs = [args.arch] if args.arch else [a for a in ARCHS if a != "gpt2"]
+    shapes = [args.shape] if args.shape else list(INPUT_SHAPES)
+
+    records = []
+    for arch in archs:
+        for shape_name in shapes:
+            tag = f"{arch} x {shape_name} [{'x'.join(map(str, mesh.devices.shape))}]"
+            try:
+                rec = lower_one(arch, shape_name, mesh,
+                                policy=args.policy, rank=args.rank)
+                if rec.get("skipped"):
+                    print(f"SKIP {tag}: {rec['reason']}", flush=True)
+                else:
+                    mem = rec["memory"]
+                    per_chip_gb = (mem["argument_bytes"] + mem["temp_bytes"]) / 2**30
+                    print(f"OK   {tag}: {rec['flops_per_chip']:.3e} FLOP/chip, "
+                          f"{rec['bytes_per_chip']:.3e} B/chip, "
+                          f"coll {rec['collective_total']/2**20:.1f} MiB/chip, "
+                          f"mem {per_chip_gb:.2f} GiB/chip, "
+                          f"{rec['compile_s']}s", flush=True)
+            except Exception as e:
+                rec = {"arch": arch, "shape": shape_name, "error": str(e),
+                       "traceback": traceback.format_exc()}
+                print(f"FAIL {tag}: {e}", flush=True)
+            records.append(rec)
+            if args.out:
+                with open(args.out, "w") as f:
+                    json.dump(records, f, indent=1)
+
+    n_ok = sum(1 for r in records if "flops_per_chip" in r)
+    n_skip = sum(1 for r in records if r.get("skipped"))
+    n_fail = len(records) - n_ok - n_skip
+    print(f"\ndone: {n_ok} ok, {n_skip} skipped, {n_fail} failed")
+    if n_fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

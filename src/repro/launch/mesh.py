@@ -1,0 +1,38 @@
+"""Production mesh definitions.
+
+``make_production_mesh`` is a FUNCTION (not a module constant) so importing
+this module never touches jax device state — the dry-run sets
+XLA_FLAGS=--xla_force_host_platform_device_count=512 before first jax init,
+and smoke tests/benches must keep seeing 1 device.
+
+Mesh shapes (per the brief):
+  single-pod : (16, 16)       axes (data, model)        = 256 chips
+  multi-pod  : (2, 16, 16)    axes (pod, data, model)   = 512 chips
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_host_mesh", "dp_axes", "tp_axis"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(data: int = 1, model: int = 1, pod: int = 0):
+    """Small mesh over however many (fake or real) devices exist — tests."""
+    if pod:
+        return jax.make_mesh((pod, data, model), ("pod", "data", "model"))
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def dp_axes(mesh) -> tuple[str, ...]:
+    """The data-parallel (manual / EDGC-compressed) axes of a mesh."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def tp_axis(mesh) -> str | None:
+    return "model" if "model" in mesh.axis_names else None

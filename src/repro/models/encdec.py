@@ -1,0 +1,200 @@
+"""Whisper-style encoder-decoder (audio family).
+
+Per the brief, the modality frontend (mel-spectrogram + conv feature
+extractor) is a STUB: the batch provides precomputed frame embeddings
+``frames`` of shape (B, audio_frames, d_model) — exactly what whisper's two
+conv layers emit. We implement the transformer backbone: a bidirectional
+encoder over frames (sinusoidal positions) and a causal decoder with
+cross-attention (learned positions), trained with teacher forcing.
+
+Decode: self-attn KV cache + *precomputed* cross-attention K/V (computed
+once from the encoder output at cache init — the standard serving layout).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from .model import Model, ModelConfig, register_family
+
+F32 = jnp.float32
+
+
+def _enc_block_init(key, cfg: ModelConfig):
+    k1, k2 = jax.random.split(key)
+    dt = cfg.jdtype
+    return {
+        "attn_norm_scale": jnp.ones((cfg.d_model,), dt),
+        "attn_norm_bias": jnp.zeros((cfg.d_model,), dt),
+        "attn": L.attn_init(k1, cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+                            cfg.hd, dt),
+        "mlp_norm_scale": jnp.ones((cfg.d_model,), dt),
+        "mlp_norm_bias": jnp.zeros((cfg.d_model,), dt),
+        "mlp": L.mlp_init(k2, cfg.d_model, cfg.d_ff, dt, gated=False, bias=True),
+    }
+
+
+def _dec_block_init(key, cfg: ModelConfig):
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = _enc_block_init(jax.random.fold_in(key, 7), cfg)
+    dt = cfg.jdtype
+    p["cross_norm_scale"] = jnp.ones((cfg.d_model,), dt)
+    p["cross_norm_bias"] = jnp.zeros((cfg.d_model,), dt)
+    p["cross"] = L.attn_init(k3, cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+                             cfg.hd, dt)
+    return p
+
+
+def init(key, cfg: ModelConfig):
+    enc_layers = cfg.encoder_layers or cfg.num_layers
+    ks = jax.random.split(key, 6)
+    dt = cfg.jdtype
+    return {
+        "enc_blocks": jax.vmap(lambda k: _enc_block_init(k, cfg))(
+            jax.random.split(ks[0], enc_layers)),
+        "enc_norm_scale": jnp.ones((cfg.d_model,), dt),
+        "enc_norm_bias": jnp.zeros((cfg.d_model,), dt),
+        "embed": {"tok": L.embed_init(ks[1], cfg.vocab_size, cfg.d_model, dt)},
+        "dec_pos": (jax.random.normal(ks[2], (cfg.max_position, cfg.d_model), F32)
+                    * 0.01).astype(dt),
+        "dec_blocks": jax.vmap(lambda k: _dec_block_init(k, cfg))(
+            jax.random.split(ks[3], cfg.num_layers)),
+        "final_norm_scale": jnp.ones((cfg.d_model,), dt),
+        "final_norm_bias": jnp.zeros((cfg.d_model,), dt),
+    }
+
+
+def _ln(x, p, prefix, cfg):
+    return L.layer_norm(x, p[f"{prefix}_scale"], p[f"{prefix}_bias"], cfg.norm_eps)
+
+
+def encode(params, frames, cfg: ModelConfig):
+    """frames: (B, S, d) stubbed conv-frontend output."""
+    B, S, d = frames.shape
+    x = frames + L.sinusoidal_pos(S, d, frames.dtype)
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+
+    def body(h, bp):
+        a = _ln(h, bp, "attn_norm", cfg)
+        a = L.attn_apply(bp["attn"], a, num_heads=cfg.num_heads,
+                         num_kv_heads=cfg.num_kv_heads, head_dim=cfg.hd,
+                         causal=False, positions=positions, use_rope=False,
+                         norm_eps=cfg.norm_eps, block_q=cfg.block_q)
+        h = h + a
+        m = _ln(h, bp, "mlp_norm", cfg)
+        return h + L.mlp_apply(bp["mlp"], m, act="gelu"), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["enc_blocks"])
+    return _ln(x, params, "enc_norm", cfg)
+
+
+def decode_train(params, tokens, enc_out, cfg: ModelConfig):
+    B, T = tokens.shape
+    x = jnp.take(params["embed"]["tok"], tokens, axis=0)
+    x = x + jax.lax.dynamic_slice_in_dim(params["dec_pos"], 0, T, 0)
+    positions = jnp.broadcast_to(jnp.arange(T), (B, T))
+
+    def body(h, bp):
+        a = _ln(h, bp, "attn_norm", cfg)
+        a = L.attn_apply(bp["attn"], a, num_heads=cfg.num_heads,
+                         num_kv_heads=cfg.num_kv_heads, head_dim=cfg.hd,
+                         causal=True, positions=positions, use_rope=False,
+                         norm_eps=cfg.norm_eps, block_q=cfg.block_q)
+        h = h + a
+        c = _ln(h, bp, "cross_norm", cfg)
+        ek, ev = L.cross_kv(bp["cross"], enc_out, num_kv_heads=cfg.num_kv_heads,
+                            head_dim=cfg.hd)
+        c = L.cross_attn_apply(bp["cross"], c, ek, ev, num_heads=cfg.num_heads,
+                               num_kv_heads=cfg.num_kv_heads, head_dim=cfg.hd)
+        h = h + c
+        m = _ln(h, bp, "mlp_norm", cfg)
+        return h + L.mlp_apply(bp["mlp"], m, act="gelu"), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["dec_blocks"])
+    x = _ln(x, params, "final_norm", cfg)
+    return L.lm_logits(x, params["embed"]["tok"], tie=True)  # whisper ties
+
+
+def forward(params, batch, cfg: ModelConfig):
+    enc_out = encode(params, batch["frames"], cfg)
+    return decode_train(params, batch["tokens"], enc_out, cfg)
+
+
+def loss_fn(params, batch, cfg: ModelConfig):
+    logits = forward(params, batch, cfg)
+    loss = L.cross_entropy(logits, batch["labels"], batch.get("mask"))
+    return loss, {"loss": loss}
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, enc_out=None,
+               frames=None, params=None):
+    """Decode cache. If params+frames given, precompute cross K/V."""
+    dt = cfg.jdtype
+    Ld = cfg.num_layers
+    S = cfg.audio_frames
+    cache = {
+        "k": jnp.zeros((Ld, batch, max_len, cfg.num_kv_heads, cfg.hd), dt),
+        "v": jnp.zeros((Ld, batch, max_len, cfg.num_kv_heads, cfg.hd), dt),
+        "cross_k": jnp.zeros((Ld, batch, S, cfg.num_kv_heads, cfg.hd), dt),
+        "cross_v": jnp.zeros((Ld, batch, S, cfg.num_kv_heads, cfg.hd), dt),
+        "len": jnp.zeros((), jnp.int32),
+    }
+    if params is not None and (enc_out is not None or frames is not None):
+        if enc_out is None:
+            enc_out = encode(params, frames, cfg)
+        cks, cvs = jax.vmap(
+            lambda bp: L.cross_kv(bp["cross"], enc_out,
+                                  num_kv_heads=cfg.num_kv_heads, head_dim=cfg.hd)
+        )(params["dec_blocks"])
+        cache["cross_k"], cache["cross_v"] = cks, cvs
+    return cache
+
+
+def decode_step(params, cache, tokens, cfg: ModelConfig):
+    B = tokens.shape[0]
+    cache_len = cache["len"]
+    x = jnp.take(params["embed"]["tok"], tokens[:, None], axis=0)
+    pos = jax.lax.dynamic_slice_in_dim(params["dec_pos"], cache_len, 1, 0)
+    x = x + pos
+
+    def body(h, inp):
+        bp, ck, cv, xk, xv = inp
+        a = _ln(h, bp, "attn_norm", cfg)
+        a, ck, cv = L.attn_decode(bp["attn"], a, ck, cv, cache_len,
+                                  num_heads=cfg.num_heads,
+                                  num_kv_heads=cfg.num_kv_heads, head_dim=cfg.hd,
+                                  use_rope=False, norm_eps=cfg.norm_eps)
+        h = h + a
+        c = _ln(h, bp, "cross_norm", cfg)
+        c = L.cross_attn_apply(bp["cross"], c, xk, xv, num_heads=cfg.num_heads,
+                               num_kv_heads=cfg.num_kv_heads, head_dim=cfg.hd)
+        h = h + c
+        m = _ln(h, bp, "mlp_norm", cfg)
+        return h + L.mlp_apply(bp["mlp"], m, act="gelu"), (ck, cv)
+
+    x, (ks, vs) = jax.lax.scan(
+        body, x,
+        (params["dec_blocks"], cache["k"], cache["v"],
+         cache["cross_k"], cache["cross_v"]))
+    x = _ln(x, params, "final_norm", cfg)
+    logits = L.lm_logits(x, params["embed"]["tok"], tie=True)[:, 0]
+    new_cache = dict(cache)
+    new_cache.update({"k": ks, "v": vs, "len": cache_len + 1})
+    return logits, new_cache
+
+
+@register_family("whisper")
+def _build(cfg: ModelConfig) -> Model:
+    return Model(
+        config=cfg,
+        init=lambda key: init(key, cfg),
+        loss_fn=lambda p, b: loss_fn(p, b, cfg),
+        forward=lambda p, b: forward(p, b, cfg),
+        init_cache=lambda bs, max_len=448: init_cache(cfg, bs, max_len),
+        decode_step=lambda p, c, t: decode_step(p, c, t, cfg),
+    )

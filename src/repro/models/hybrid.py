@@ -1,0 +1,145 @@
+"""Zamba2-style hybrid: Mamba2 backbone + a SHARED attention block.
+
+Zamba2 [arXiv:2411.15242] interleaves Mamba2 layers with a single
+parameter-shared full-attention block applied periodically through the depth.
+We implement the assigned spec: ``num_layers`` Mamba2 layers grouped into
+runs of ``attn_every``; after each full run the shared attention+MLP block
+(one parameter set, reused) is applied. Parameters are shared; KV caches are
+NOT (one per application site).
+
+Decode carries: per-mamba-layer (SSM state + conv tail) and per-site KV
+caches — all O(1) or O(window) per token, so long_500k runs natively.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from . import ssm
+from .model import Model, ModelConfig, register_family
+
+F32 = jnp.float32
+
+
+def _num_groups(cfg: ModelConfig) -> int:
+    return (cfg.num_layers + cfg.attn_every - 1) // cfg.attn_every
+
+
+def _group_sizes(cfg: ModelConfig) -> list[int]:
+    g = _num_groups(cfg)
+    base, extra = divmod(cfg.num_layers, g)
+    return [base + (1 if i < extra else 0) for i in range(g)]
+
+
+def init(key, cfg: ModelConfig):
+    ks = jax.random.split(key, _num_groups(cfg) + 4)
+    dt = cfg.jdtype
+    groups = []
+    for gi, sz in enumerate(_group_sizes(cfg)):
+        gkeys = jax.random.split(ks[gi], sz)
+        groups.append({"mamba": jax.vmap(lambda k: ssm.mamba2_init(k, cfg))(gkeys)})
+    shared_key1, shared_key2 = jax.random.split(ks[-4])
+    return {
+        "embed": {"tok": L.embed_init(ks[-3], cfg.vocab_size, cfg.d_model, dt)},
+        "groups": groups,
+        "shared": {
+            "attn_norm_scale": jnp.ones((cfg.d_model,), dt),
+            "attn": L.attn_init(shared_key1, cfg.d_model, cfg.num_heads,
+                                cfg.num_kv_heads, cfg.hd, dt),
+            "mlp_norm_scale": jnp.ones((cfg.d_model,), dt),
+            "mlp": L.mlp_init(shared_key2, cfg.d_model, cfg.d_ff, dt, gated=True),
+        },
+        "final_norm_scale": jnp.ones((cfg.d_model,), dt),
+        "lm_head": L.dense_init(ks[-1], cfg.d_model, cfg.vocab_size, dt),
+    }
+
+
+def _shared_apply(sp, x, cfg: ModelConfig, positions):
+    h = L.rms_norm(x, sp["attn_norm_scale"], cfg.norm_eps)
+    h = L.attn_apply(
+        sp["attn"], h, num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
+        head_dim=cfg.hd, causal=True, positions=positions,
+        rope_theta=cfg.rope_theta, use_rope=True, window=cfg.sliding_window,
+        norm_eps=cfg.norm_eps, block_q=cfg.block_q,
+    )
+    x = x + h
+    h = L.rms_norm(x, sp["mlp_norm_scale"], cfg.norm_eps)
+    return x + L.mlp_apply(sp["mlp"], h, act="silu")
+
+
+def forward(params, batch, cfg: ModelConfig):
+    tokens = batch["tokens"]
+    B, T = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(T), (B, T))
+    x = jnp.take(params["embed"]["tok"], tokens, axis=0)
+    for group in params["groups"]:
+        def body(h, mp):
+            return ssm.mamba2_apply(mp, h, cfg), None
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        x, _ = jax.lax.scan(body, x, group["mamba"])
+        x = _shared_apply(params["shared"], x, cfg, positions)
+    x = L.rms_norm(x, params["final_norm_scale"], cfg.norm_eps)
+    return L.lm_logits(x, params["lm_head"], tie=False)
+
+
+def loss_fn(params, batch, cfg: ModelConfig):
+    logits = forward(params, batch, cfg)
+    loss = L.cross_entropy(logits, batch["labels"], batch.get("mask"))
+    return loss, {"loss": loss}
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    C = cfg.sliding_window if cfg.sliding_window > 0 else max_len
+    dt = cfg.jdtype
+    groups = []
+    for sz in _group_sizes(cfg):
+        st = ssm.mamba2_state_init(cfg, batch)
+        groups.append({
+            "mamba": jax.tree_util.tree_map(
+                lambda a: jnp.broadcast_to(a, (sz,) + a.shape), st),
+            "attn_k": jnp.zeros((batch, C, cfg.num_kv_heads, cfg.hd), dt),
+            "attn_v": jnp.zeros((batch, C, cfg.num_kv_heads, cfg.hd), dt),
+        })
+    return {"groups": groups, "len": jnp.zeros((), jnp.int32)}
+
+
+def decode_step(params, cache, tokens, cfg: ModelConfig):
+    cache_len = cache["len"]
+    x = jnp.take(params["embed"]["tok"], tokens, axis=0)     # (B, d)
+    new_groups = []
+    sp = params["shared"]
+    for group, gc in zip(params["groups"], cache["groups"]):
+        def body(h, inp):
+            mp, st = inp
+            h, st = ssm.mamba2_decode(mp, h, st, cfg)
+            return h, st
+        x, new_mamba = jax.lax.scan(body, x, (group["mamba"], gc["mamba"]))
+        # shared attention on the single token
+        h = L.rms_norm(x[:, None], sp["attn_norm_scale"], cfg.norm_eps)
+        a, ck, cv = L.attn_decode(
+            sp["attn"], h, gc["attn_k"], gc["attn_v"], cache_len,
+            num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
+            head_dim=cfg.hd, rope_theta=cfg.rope_theta, use_rope=True,
+            window=cfg.sliding_window, norm_eps=cfg.norm_eps,
+        )
+        x1 = x[:, None] + a
+        h = L.rms_norm(x1, sp["mlp_norm_scale"], cfg.norm_eps)
+        x = (x1 + L.mlp_apply(sp["mlp"], h, act="silu"))[:, 0]
+        new_groups.append({"mamba": new_mamba, "attn_k": ck, "attn_v": cv})
+    x = L.rms_norm(x, params["final_norm_scale"], cfg.norm_eps)
+    logits = jnp.einsum("bd,dv->bv", x, params["lm_head"], preferred_element_type=F32)
+    return logits, {"groups": new_groups, "len": cache_len + 1}
+
+
+@register_family("zamba")
+def _build(cfg: ModelConfig) -> Model:
+    return Model(
+        config=cfg,
+        init=lambda key: init(key, cfg),
+        loss_fn=lambda p, b: loss_fn(p, b, cfg),
+        forward=lambda p, b: forward(p, b, cfg),
+        init_cache=lambda bs, max_len=32768: init_cache(cfg, bs, max_len),
+        decode_step=lambda p, c, t: decode_step(p, c, t, cfg),
+    )

@@ -1,0 +1,126 @@
+"""Model registry: one ModelConfig dataclass + build_model() for every family.
+
+``build_model(cfg)`` returns a :class:`Model` bundle with a uniform surface:
+
+  * ``init(key) -> params``
+  * ``loss_fn(params, batch) -> (loss, metrics)``   — training objective
+  * ``forward(params, batch) -> logits``            — full-seq (prefill)
+  * ``init_cache(batch_size) -> cache``             — decode state
+  * ``decode_step(params, cache, tokens) -> (logits, cache)`` — ONE token
+
+``batch`` is a dict: always ``tokens``/``labels`` (B, T); audio adds
+``frames`` (B, S_audio, d_model) and VLM adds ``patches`` (B, P, d_model) —
+the stubbed modality frontends per the brief.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str = "model"
+    family: str = "dense"        # dense | moe | xlstm | zamba | whisper | vlm
+    num_layers: int = 2
+    d_model: int = 256
+    num_heads: int = 4
+    num_kv_heads: int = 4
+    d_ff: int = 1024
+    vocab_size: int = 1024
+    head_dim: int = 0            # 0 -> d_model // num_heads
+    num_stages: int = 1          # virtual pipeline stages (EDGC/DAC grouping)
+    # dense options
+    norm: str = "rmsnorm"        # rmsnorm | layernorm
+    act: str = "silu"            # silu (gated) | gelu (gated) | gelu_plain
+    pos: str = "rope"            # rope | learned | none
+    qk_norm: bool = False
+    qkv_bias: bool = False
+    tie_embeddings: bool = False
+    rope_theta: float = 1e4
+    norm_eps: float = 1e-5
+    sliding_window: int = 0      # 0 = full attention; >0 = window size
+    max_position: int = 1 << 20
+    # moe
+    num_experts: int = 0
+    experts_per_token: int = 0
+    capacity_factor: float = 1.25
+    router_aux_weight: float = 0.01
+    moe_group: int = 1024        # GShard dispatch group size (perf knob)
+    # ssm / hybrid
+    ssm_state: int = 0
+    conv_kernel: int = 4
+    chunk: int = 128             # chunk size for linear-recurrence scan
+    attn_every: int = 6          # zamba: shared attn block cadence
+    slstm_every: int = 2         # xlstm: every k-th block is sLSTM
+    # whisper
+    encoder_layers: int = 0
+    audio_frames: int = 1500     # encoder positions after the conv stub
+    # vlm
+    num_patches: int = 576       # prepended image patch embeddings
+    # numerics
+    dtype: str = "float32"       # param/activation dtype
+    block_q: int = 512           # attention query-block size
+    remat: bool = False          # checkpoint each block (recompute in bwd)
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or (self.d_model // self.num_heads)
+
+    @property
+    def jdtype(self):
+        return getattr(jnp, self.dtype)
+
+    def stage_sizes(self) -> list[int]:
+        """Split num_layers into num_stages near-even contiguous groups."""
+        L, S = self.num_layers, max(1, self.num_stages)
+        base, extra = divmod(L, S)
+        return [base + (1 if i < extra else 0) for i in range(S)]
+
+
+class Model(NamedTuple):
+    config: ModelConfig
+    init: Callable[[jax.Array], Any]
+    loss_fn: Callable[[Any, dict], tuple[jax.Array, dict]]
+    forward: Callable[[Any, dict], jax.Array]
+    init_cache: Callable[[int], Any]
+    decode_step: Callable[[Any, Any, jax.Array], tuple[jax.Array, Any]]
+
+
+_REGISTRY: dict[str, Callable[[ModelConfig], Model]] = {}
+
+
+def register_family(name: str):
+    def deco(fn):
+        _REGISTRY[name] = fn
+        return fn
+    return deco
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    if cfg.family not in _REGISTRY:
+        # import side-effect registration
+        from . import transformer, moe, ssm, hybrid, encdec, vlm  # noqa: F401
+    if cfg.family not in _REGISTRY:
+        raise KeyError(f"unknown model family {cfg.family!r}")
+    return _REGISTRY[cfg.family](cfg)
+
+
+def param_count(params: Any) -> int:
+    return sum(int(l.size) for l in jax.tree_util.tree_leaves(params))
+
+
+def active_param_count(cfg: ModelConfig, params: Any) -> int:
+    """Active params per token (MoE: top-k of the expert population)."""
+    total = param_count(params)
+    if cfg.family != "moe" or cfg.num_experts == 0:
+        return total
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+    expert_leaves = sum(
+        int(l.size) for kp, l in flat if "expert" in jax.tree_util.keystr(kp)
+    )
+    active_frac = cfg.experts_per_token / max(1, cfg.num_experts)
+    return int(total - expert_leaves + expert_leaves * active_frac)

@@ -1,0 +1,480 @@
+"""SSM / recurrent families: xLSTM (mLSTM + sLSTM blocks) and Mamba2 blocks.
+
+The shared compute core is a *chunked linear recurrence*
+
+    S_t = a_t * S_{t-1} + k_t (x) v_t          (matrix state per head)
+    y_t = q_t . S_t
+
+evaluated chunk-parallel: intra-chunk terms are an attention-like product
+with a decay mask D_ts = exp(Lambda_t - Lambda_s) (Lambda = cumsum log a),
+inter-chunk terms flow through a ``lax.scan`` over chunk states. This is the
+TPU-native adaptation (DESIGN §3): the intra-chunk part is MXU matmuls over
+(chunk x chunk) tiles; the sequential scan touches T/chunk steps instead
+of T. mLSTM (xLSTM) and Mamba2 (SSD) both lower onto this helper —
+mLSTM adds a normalizer channel, Mamba2 derives its decay from dt*A.
+
+Numerics note (documented deviation): mLSTM's exponential input gate is run
+through a sigmoid-stabilized form (i_t = sigmoid(i_raw)) in the chunked path;
+the sLSTM path implements the paper's true exponential gating with the m_t
+stabilizer state, which is well-defined in its sequential scan.
+
+Decode: all blocks carry O(1)-per-token recurrent state (matrix state +
+conv tail), which is why the SSM archs run ``long_500k`` natively.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from .model import Model, ModelConfig, register_family
+
+F32 = jnp.float32
+
+
+# ------------------------------------------------------------- linear recurrence
+def chunked_linear_recurrence(q, k, v, log_a, chunk: int, s0=None):
+    """y_t = q_t . S_t with S_t = a_t S_{t-1} + k_t (x) v_t, chunk-parallel.
+
+    q, k: (B, T, H, Dk); v: (B, T, H, Dv); log_a: (B, T, H) (<= 0).
+    Returns (y (B, T, H, Dv), S_final (B, H, Dk, Dv)).
+    T must be a multiple of ``chunk`` (callers pad).
+    """
+    B, T, H, Dk = q.shape
+    Dv = v.shape[-1]
+    assert T % chunk == 0, (T, chunk)
+    N = T // chunk
+    qc = q.reshape(B, N, chunk, H, Dk)
+    kc = k.reshape(B, N, chunk, H, Dk)
+    vc = v.reshape(B, N, chunk, H, Dv)
+    la = log_a.reshape(B, N, chunk, H).astype(F32)
+    La = jnp.cumsum(la, axis=2)                       # (B,N,C,H) inclusive
+
+    # intra-chunk: D_ts = exp(La_t - La_s) for s <= t (t,s within chunk)
+    scores = jnp.einsum("bnthk,bnshk->bnhts", qc.astype(F32), kc.astype(F32))
+    ldiff = La[..., :, None, :] - La[..., None, :, :]  # (B,N,t,s,H)... fix axes
+    ldiff = jnp.transpose(ldiff, (0, 1, 4, 2, 3))      # (B,N,H,t,s)
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+    decay = jnp.where(tri, jnp.exp(ldiff), 0.0)
+    y_intra = jnp.einsum("bnhts,bnshv->bnthv", scores * decay, vc.astype(F32))
+
+    # inter-chunk: scan over chunk-final states
+    if s0 is None:
+        s0 = jnp.zeros((B, H, Dk, Dv), F32)
+    La_end = La[:, :, -1, :]                           # (B,N,H)
+    # per-chunk input to the state: sum_s exp(La_end - La_s) k_s v_s
+    w = jnp.exp(La_end[:, :, None, :] - La)            # (B,N,C,H)
+    kw = kc.astype(F32) * w[..., None]
+    chunk_in = jnp.einsum("bnshk,bnshv->bnhkv", kw, vc.astype(F32))
+    chunk_decay = jnp.exp(La_end)                      # (B,N,H)
+
+    def body(s, inp):
+        cin, cdec = inp                                # (B,H,Dk,Dv), (B,H)
+        s_prev = s
+        s = cdec[..., None, None] * s + cin
+        return s, s_prev
+
+    # scan over the chunk axis: move N to the front
+    s_final, s_prevs = jax.lax.scan(
+        body, s0,
+        (jnp.moveaxis(chunk_in, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)),
+    )
+    s_prevs = jnp.moveaxis(s_prevs, 0, 1)              # (B,N,H,Dk,Dv) state at chunk start
+    qw = qc.astype(F32) * jnp.exp(La)[..., None]       # q_t scaled by decay from chunk start
+    y_cross = jnp.einsum("bnthk,bnhkv->bnthv", qw, s_prevs)
+
+    y = (y_intra + y_cross).reshape(B, T, H, Dv)
+    return y, s_final
+
+
+def recurrence_decode(q, k, v, log_a, s):
+    """One-token update: q,k (B,H,Dk), v (B,H,Dv), log_a (B,H), s (B,H,Dk,Dv)."""
+    a = jnp.exp(log_a.astype(F32))[..., None, None]
+    s = a * s + jnp.einsum("bhk,bhv->bhkv", k.astype(F32), v.astype(F32))
+    y = jnp.einsum("bhk,bhkv->bhv", q.astype(F32), s)
+    return y, s
+
+
+# ---------------------------------------------------------------- causal conv
+def causal_conv_init(key, channels: int, kernel: int, dtype):
+    return {"w": (jax.random.normal(key, (kernel, channels), F32) / math.sqrt(kernel)).astype(dtype),
+            "b": jnp.zeros((channels,), dtype)}
+
+
+def causal_conv_apply(p, x):
+    """Depthwise causal conv along T. x: (B, T, C)."""
+    k = p["w"].shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(xp[:, i: i + x.shape[1]] * p["w"][i].astype(F32) for i in range(k))
+    return (out + p["b"].astype(F32)).astype(x.dtype)
+
+
+def causal_conv_decode(p, x_t, tail):
+    """x_t: (B, C) new input; tail: (B, k-1, C) previous inputs."""
+    k = p["w"].shape[0]
+    window = jnp.concatenate([tail, x_t[:, None]], axis=1)      # (B,k,C)
+    out = jnp.einsum("bkc,kc->bc", window.astype(F32), p["w"].astype(F32))
+    out = out + p["b"].astype(F32)
+    return out.astype(x_t.dtype), window[:, 1:]
+
+
+# ======================================================================= mLSTM
+def mlstm_init(key, cfg: ModelConfig):
+    d = cfg.d_model
+    d_inner = 2 * d
+    H = cfg.num_heads
+    dh = d_inner // H
+    ks = jax.random.split(key, 8)
+    dt = cfg.jdtype
+    return {
+        "norm_scale": jnp.ones((d,), dt),
+        "up_x": L.dense_init(ks[0], d, d_inner, dt),
+        "up_z": L.dense_init(ks[1], d, d_inner, dt),
+        "conv": causal_conv_init(ks[2], d_inner, cfg.conv_kernel, dt),
+        "wq": L.dense_init(ks[3], d_inner, d_inner, dt),
+        "wk": L.dense_init(ks[4], d_inner, d_inner, dt),
+        "wv": L.dense_init(ks[5], d_inner, d_inner, dt),
+        "w_gates": L.dense_init(ks[6], d_inner, 2 * H, dt),  # i, f per head
+        "gate_bias": jnp.concatenate([jnp.zeros((H,), F32), 3.0 * jnp.ones((H,), F32)]).astype(F32),
+        "head_norm_scale": jnp.ones((d_inner,), dt),
+        "down": L.dense_init(ks[7], d_inner, d, dt),
+    }
+
+
+def _mlstm_qkv_gates(p, xc, xz, H: int):
+    """Shared by train and decode: q,k,v heads + per-head log decay/input gate."""
+    d_inner = xc.shape[-1]
+    dh = d_inner // H
+    q = jnp.einsum("...d,de->...e", xc, p["wq"], preferred_element_type=F32)
+    k = jnp.einsum("...d,de->...e", xc, p["wk"], preferred_element_type=F32)
+    v = jnp.einsum("...d,de->...e", xz, p["wv"], preferred_element_type=F32)
+    gates = jnp.einsum("...d,de->...e", xc, p["w_gates"], preferred_element_type=F32)
+    gates = gates + p["gate_bias"]
+    i_raw, f_raw = jnp.split(gates, 2, axis=-1)        # (..., H)
+    i_gate = jax.nn.sigmoid(i_raw)                     # stabilized input gate
+    log_a = jax.nn.log_sigmoid(f_raw)                  # log forget/decay
+    shape = xc.shape[:-1] + (H, dh)
+    scale = 1.0 / math.sqrt(dh)
+    return (q.reshape(shape) * scale, k.reshape(shape) * i_gate[..., None],
+            v.reshape(shape), log_a)
+
+
+def mlstm_apply(p, x, cfg: ModelConfig):
+    """x: (B, T, d). Matrix-memory LSTM with normalizer channel."""
+    B, T, d = x.shape
+    H = cfg.num_heads
+    h = L.rms_norm(x, p["norm_scale"], cfg.norm_eps)
+    xz = jnp.einsum("btd,de->bte", h, p["up_z"], preferred_element_type=F32).astype(x.dtype)
+    xc = jnp.einsum("btd,de->bte", h, p["up_x"], preferred_element_type=F32).astype(x.dtype)
+    xc = jax.nn.silu(causal_conv_apply(p["conv"], xc).astype(F32)).astype(x.dtype)
+    q, k, v, log_a = _mlstm_qkv_gates(p, xc, xz, H)
+    # normalizer channel: append ones to v
+    v_aug = jnp.concatenate([v, jnp.ones(v.shape[:-1] + (1,), v.dtype)], axis=-1)
+    pad = (-T) % cfg.chunk
+    if pad:
+        zpad = lambda a: jnp.pad(a, [(0, 0), (0, pad)] + [(0, 0)] * (a.ndim - 2))
+        q, k, v_aug, log_a = map(zpad, (q, k, v_aug, log_a))
+    y_aug, _ = chunked_linear_recurrence(q, k, v_aug, log_a, cfg.chunk)
+    y_aug = y_aug[:, :T]
+    y, norm = y_aug[..., :-1], y_aug[..., -1:]
+    y = y / jnp.maximum(jnp.abs(norm), 1.0)
+    y = y.reshape(B, T, -1).astype(x.dtype)
+    y = L.rms_norm(y, p["head_norm_scale"], cfg.norm_eps)
+    y = y * jax.nn.silu(xz.astype(F32)).astype(x.dtype)
+    out = jnp.einsum("bte,ed->btd", y, p["down"], preferred_element_type=F32)
+    return x + out.astype(x.dtype)
+
+
+def mlstm_decode(p, x_t, state, cfg: ModelConfig):
+    """x_t: (B, d); state: {'s': (B,H,Dk,Dv+1), 'conv': (B,k-1,d_inner)}."""
+    B, d = x_t.shape
+    H = cfg.num_heads
+    h = L.rms_norm(x_t, p["norm_scale"], cfg.norm_eps)
+    xz = jnp.einsum("bd,de->be", h, p["up_z"], preferred_element_type=F32).astype(x_t.dtype)
+    xc = jnp.einsum("bd,de->be", h, p["up_x"], preferred_element_type=F32).astype(x_t.dtype)
+    xc, conv_tail = causal_conv_decode(p["conv"], xc, state["conv"])
+    xc = jax.nn.silu(xc.astype(F32)).astype(x_t.dtype)
+    q, k, v, log_a = _mlstm_qkv_gates(p, xc, xz, H)
+    v_aug = jnp.concatenate([v, jnp.ones(v.shape[:-1] + (1,), v.dtype)], axis=-1)
+    y_aug, s = recurrence_decode(q, k, v_aug, log_a, state["s"])
+    y, norm = y_aug[..., :-1], y_aug[..., -1:]
+    y = (y / jnp.maximum(jnp.abs(norm), 1.0)).reshape(B, -1).astype(x_t.dtype)
+    y = L.rms_norm(y, p["head_norm_scale"], cfg.norm_eps)
+    y = y * jax.nn.silu(xz.astype(F32)).astype(x_t.dtype)
+    out = jnp.einsum("be,ed->bd", y, p["down"], preferred_element_type=F32)
+    return x_t + out.astype(x_t.dtype), {"s": s, "conv": conv_tail}
+
+
+def mlstm_state_init(cfg: ModelConfig, batch: int):
+    d_inner = 2 * cfg.d_model
+    H = cfg.num_heads
+    dh = d_inner // H
+    return {
+        "s": jnp.zeros((batch, H, dh, dh + 1), F32),
+        "conv": jnp.zeros((batch, cfg.conv_kernel - 1, d_inner), cfg.jdtype),
+    }
+
+
+# ======================================================================= sLSTM
+def slstm_init(key, cfg: ModelConfig):
+    d = cfg.d_model
+    H = cfg.num_heads
+    dh = d // H
+    ks = jax.random.split(key, 7)
+    dt = cfg.jdtype
+    d_ff = int(d * 4 / 3 / 2) * 2  # xLSTM proj factor 4/3, even
+    return {
+        "norm_scale": jnp.ones((d,), dt),
+        "w_in": L.dense_init(ks[0], d, 4 * d, dt),          # z, i, f, o pre-acts
+        "r_blocks": (jax.random.normal(ks[1], (H, dh, 4 * dh), F32)
+                     / math.sqrt(dh)).astype(dt),           # block-diag recurrence
+        "gate_bias": jnp.concatenate(
+            [jnp.zeros((2 * d,), F32), 3.0 * jnp.ones((d,), F32), jnp.zeros((d,), F32)]
+        ).astype(F32),
+        "head_norm_scale": jnp.ones((d,), dt),
+        "ffn_norm_scale": jnp.ones((d,), dt),
+        "ffn": L.mlp_init(ks[2], d, d_ff, dt, gated=True),
+    }
+
+
+def _slstm_cell(p, x_pre, h_prev, c_prev, n_prev, m_prev, H: int):
+    """One sLSTM step with true exponential gating + m stabilizer.
+
+    x_pre: (B, 4d) input pre-activations; h_prev/c_prev/n_prev: (B, d);
+    m_prev: (B, d) stabilizer. Returns (h, c, n, m).
+    """
+    B, d4 = x_pre.shape
+    d = d4 // 4
+    dh = d // H
+    hh = h_prev.reshape(B, H, dh)
+    rec = jnp.einsum("bhd,hde->bhe", hh.astype(F32), p["r_blocks"].astype(F32))
+    pre = x_pre.astype(F32) + rec.reshape(B, 4 * d) + p["gate_bias"]
+    z_raw, i_raw, f_raw, o_raw = jnp.split(pre, 4, axis=-1)
+    z = jnp.tanh(z_raw)
+    o = jax.nn.sigmoid(o_raw)
+    log_f = jax.nn.log_sigmoid(f_raw)          # exp-gate via log-sigmoid form
+    m = jnp.maximum(log_f + m_prev, i_raw)
+    i_s = jnp.exp(i_raw - m)
+    f_s = jnp.exp(log_f + m_prev - m)
+    c = f_s * c_prev + i_s * z
+    n = f_s * n_prev + i_s
+    h = o * c / jnp.maximum(n, 1e-6)
+    return h, c, n, m
+
+
+def slstm_apply(p, x, cfg: ModelConfig):
+    """x: (B, T, d) — sequential scan over T (sLSTM is inherently recurrent)."""
+    B, T, d = x.shape
+    H = cfg.num_heads
+    hx = L.rms_norm(x, p["norm_scale"], cfg.norm_eps)
+    x_pre = jnp.einsum("btd,de->bte", hx, p["w_in"], preferred_element_type=F32)
+
+    def step(carry, xp):
+        h_prev, c, n, m = carry
+        h, c, n, m = _slstm_cell(p, xp, h_prev, c, n, m, H)
+        return (h, c, n, m), h
+
+    zeros = jnp.zeros((B, d), F32)
+    init = (zeros, zeros, zeros, zeros - 10.0)
+    _, hs = jax.lax.scan(step, init, jnp.moveaxis(x_pre, 1, 0))
+    y = jnp.moveaxis(hs, 0, 1).astype(x.dtype)           # (B,T,d)
+    y = L.rms_norm(y, p["head_norm_scale"], cfg.norm_eps)
+    x = x + y
+    h2 = L.rms_norm(x, p["ffn_norm_scale"], cfg.norm_eps)
+    return x + L.mlp_apply(p["ffn"], h2, act="silu")
+
+
+def slstm_decode(p, x_t, state, cfg: ModelConfig):
+    """x_t: (B, d); state: dict h/c/n/m each (B, d)."""
+    hx = L.rms_norm(x_t, p["norm_scale"], cfg.norm_eps)
+    x_pre = jnp.einsum("bd,de->be", hx, p["w_in"], preferred_element_type=F32)
+    h, c, n, m = _slstm_cell(p, x_pre, state["h"], state["c"], state["n"],
+                             state["m"], cfg.num_heads)
+    y = L.rms_norm(h.astype(x_t.dtype), p["head_norm_scale"], cfg.norm_eps)
+    x = x_t + y
+    h2 = L.rms_norm(x, p["ffn_norm_scale"], cfg.norm_eps)
+    out = x + L.mlp_apply(p["ffn"], h2, act="silu")
+    return out, {"h": h, "c": c, "n": n, "m": m}
+
+
+def slstm_state_init(cfg: ModelConfig, batch: int):
+    d = cfg.d_model
+    z = jnp.zeros((batch, d), F32)
+    return {"h": z, "c": z, "n": z, "m": z - 10.0}
+
+
+# ================================================================ xLSTM model
+def _pair_init(key, cfg: ModelConfig):
+    k1, k2 = jax.random.split(key)
+    return {"mlstm": mlstm_init(k1, cfg), "slstm": slstm_init(k2, cfg)}
+
+
+def xlstm_init(key, cfg: ModelConfig):
+    assert cfg.num_layers % 2 == 0, "xlstm stacks (mLSTM, sLSTM) pairs"
+    n_pairs = cfg.num_layers // 2
+    ks = jax.random.split(key, 3)
+    dt = cfg.jdtype
+    pair_keys = jax.random.split(ks[0], n_pairs)
+    return {
+        "embed": {"tok": L.embed_init(ks[1], cfg.vocab_size, cfg.d_model, dt)},
+        "pairs": jax.vmap(lambda k: _pair_init(k, cfg))(pair_keys),
+        "final_norm_scale": jnp.ones((cfg.d_model,), dt),
+        "lm_head": L.dense_init(ks[2], cfg.d_model, cfg.vocab_size, dt),
+    }
+
+
+def xlstm_forward(params, batch, cfg: ModelConfig):
+    x = jnp.take(params["embed"]["tok"], batch["tokens"], axis=0)
+
+    def body(h, pair):
+        h = mlstm_apply(pair["mlstm"], h, cfg)
+        h = slstm_apply(pair["slstm"], h, cfg)
+        return h, None
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["pairs"])
+    x = L.rms_norm(x, params["final_norm_scale"], cfg.norm_eps)
+    return L.lm_logits(x, params["lm_head"], tie=False)
+
+
+def xlstm_loss(params, batch, cfg: ModelConfig):
+    logits = xlstm_forward(params, batch, cfg)
+    loss = L.cross_entropy(logits, batch["labels"], batch.get("mask"))
+    return loss, {"loss": loss}
+
+
+def xlstm_cache_init(cfg: ModelConfig, batch: int):
+    n_pairs = cfg.num_layers // 2
+    def stack(tree):
+        return jax.tree_util.tree_map(
+            lambda a: jnp.broadcast_to(a, (n_pairs,) + a.shape), tree)
+    return {
+        "mlstm": stack(mlstm_state_init(cfg, batch)),
+        "slstm": stack(slstm_state_init(cfg, batch)),
+        "len": jnp.zeros((), jnp.int32),
+    }
+
+
+def xlstm_decode(params, cache, tokens, cfg: ModelConfig):
+    x = jnp.take(params["embed"]["tok"], tokens, axis=0)   # (B, d)
+
+    def body(h, inp):
+        pair, ms, ss = inp
+        h2, ms = mlstm_decode(pair["mlstm"], h, ms, cfg)
+        h3, ss = slstm_decode(pair["slstm"], h2, ss, cfg)
+        return h3, (ms, ss)
+
+    x, (ms, ss) = jax.lax.scan(body, x, (params["pairs"], cache["mlstm"], cache["slstm"]))
+    x = L.rms_norm(x, params["final_norm_scale"], cfg.norm_eps)
+    logits = jnp.einsum("bd,dv->bv", x, params["lm_head"], preferred_element_type=F32)
+    return logits, {"mlstm": ms, "slstm": ss, "len": cache["len"] + 1}
+
+
+@register_family("xlstm")
+def _build_xlstm(cfg: ModelConfig) -> Model:
+    return Model(
+        config=cfg,
+        init=lambda key: xlstm_init(key, cfg),
+        loss_fn=lambda p, b: xlstm_loss(p, b, cfg),
+        forward=lambda p, b: xlstm_forward(p, b, cfg),
+        init_cache=lambda bs, max_len=0: xlstm_cache_init(cfg, bs),
+        decode_step=lambda p, c, t: xlstm_decode(p, c, t, cfg),
+    )
+
+
+# ====================================================================== Mamba2
+def mamba2_init(key, cfg: ModelConfig):
+    d = cfg.d_model
+    d_inner = 2 * d
+    n = cfg.ssm_state
+    H = d_inner // 64                     # headdim 64 (Mamba2 default)
+    ks = jax.random.split(key, 6)
+    dt = cfg.jdtype
+    return {
+        "norm_scale": jnp.ones((d,), dt),
+        "in_proj": L.dense_init(ks[0], d, 2 * d_inner + 2 * n + H, dt),
+        "conv": causal_conv_init(ks[1], d_inner + 2 * n, cfg.conv_kernel, dt),
+        "a_log": jnp.zeros((H,), F32),                       # A = -exp(a_log)
+        "dt_bias": jnp.log(jnp.expm1(jnp.full((H,), 0.01))).astype(F32),
+        "d_skip": jnp.ones((H,), F32),
+        "out_norm_scale": jnp.ones((d_inner,), dt),
+        "out_proj": L.dense_init(ks[2], d_inner, d, dt),
+    }
+
+
+def _mamba2_project(p, h, cfg: ModelConfig):
+    d = cfg.d_model
+    d_inner = 2 * d
+    n = cfg.ssm_state
+    H = d_inner // 64
+    zxbcdt = jnp.einsum("...d,de->...e", h, p["in_proj"], preferred_element_type=F32)
+    z = zxbcdt[..., :d_inner]
+    xbc = zxbcdt[..., d_inner: 2 * d_inner + 2 * n].astype(h.dtype)
+    dt_raw = zxbcdt[..., -H:]
+    return z, xbc, dt_raw
+
+
+def _mamba2_ssm_inputs(p, xbc, dt_raw, cfg: ModelConfig):
+    d_inner = 2 * cfg.d_model
+    n = cfg.ssm_state
+    H = d_inner // 64
+    x = xbc[..., :d_inner]
+    b = xbc[..., d_inner: d_inner + n]
+    c = xbc[..., d_inner + n:]
+    dt = jax.nn.softplus(dt_raw + p["dt_bias"])            # (..., H) > 0
+    log_a = -dt * jnp.exp(p["a_log"])                      # (..., H) <= 0
+    shape = x.shape[:-1] + (H, 64)
+    xh = x.reshape(shape)
+    # B/C shared across heads (n_groups=1); input scaled by dt per head
+    k = jnp.broadcast_to(b[..., None, :], x.shape[:-1] + (H, n))
+    q = jnp.broadcast_to(c[..., None, :], x.shape[:-1] + (H, n))
+    v = xh * dt[..., None]
+    return q, k, v, log_a, xh
+
+
+def mamba2_apply(p, x, cfg: ModelConfig):
+    B, T, d = x.shape
+    h = L.rms_norm(x, p["norm_scale"], cfg.norm_eps)
+    z, xbc, dt_raw = _mamba2_project(p, h, cfg)
+    xbc = jax.nn.silu(causal_conv_apply(p["conv"], xbc).astype(F32)).astype(x.dtype)
+    q, k, v, log_a, xh = _mamba2_ssm_inputs(p, xbc, dt_raw, cfg)
+    pad = (-T) % cfg.chunk
+    if pad:
+        zp = lambda a: jnp.pad(a, [(0, 0), (0, pad)] + [(0, 0)] * (a.ndim - 2))
+        q, k, v, log_a = map(zp, (q, k, v, log_a))
+    y, _ = chunked_linear_recurrence(q, k, v, log_a, cfg.chunk)
+    y = y[:, :T] + p["d_skip"][:, None] * xh.astype(F32)   # D skip per head
+    y = y.reshape(B, T, -1)
+    y = y * jax.nn.silu(z)
+    y = L.rms_norm(y.astype(x.dtype), p["out_norm_scale"], cfg.norm_eps)
+    out = jnp.einsum("bte,ed->btd", y, p["out_proj"], preferred_element_type=F32)
+    return x + out.astype(x.dtype)
+
+
+def mamba2_decode(p, x_t, state, cfg: ModelConfig):
+    """x_t: (B, d); state: {'s': (B,H,n,64), 'conv': (B,k-1,Cc)}."""
+    h = L.rms_norm(x_t, p["norm_scale"], cfg.norm_eps)
+    z, xbc, dt_raw = _mamba2_project(p, h, cfg)
+    xbc, conv_tail = causal_conv_decode(p["conv"], xbc, state["conv"])
+    xbc = jax.nn.silu(xbc.astype(F32)).astype(x_t.dtype)
+    q, k, v, log_a, xh = _mamba2_ssm_inputs(p, xbc, dt_raw, cfg)
+    y, s = recurrence_decode(q, k, v, log_a, state["s"])
+    y = y + p["d_skip"][:, None] * xh.astype(F32)
+    y = y.reshape(x_t.shape[0], -1)
+    y = y * jax.nn.silu(z)
+    y = L.rms_norm(y.astype(x_t.dtype), p["out_norm_scale"], cfg.norm_eps)
+    out = jnp.einsum("be,ed->bd", y, p["out_proj"], preferred_element_type=F32)
+    return x_t + out.astype(x_t.dtype), {"s": s, "conv": conv_tail}
+
+
+def mamba2_state_init(cfg: ModelConfig, batch: int):
+    d_inner = 2 * cfg.d_model
+    n = cfg.ssm_state
+    H = d_inner // 64
+    return {
+        "s": jnp.zeros((batch, H, n, 64), F32),
+        "conv": jnp.zeros((batch, cfg.conv_kernel - 1, d_inner + 2 * n), cfg.jdtype),
+    }

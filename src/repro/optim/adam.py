@@ -1,0 +1,93 @@
+"""AdamW + cosine LR schedule with linear warmup (the paper's training setup).
+
+Pure-functional, pytree-shaped state (m, v mirror the params). Weight decay
+is masked off 1-D leaves (norms, biases) per standard practice. The state is
+float32 regardless of param dtype; ``opt_dtype='bfloat16'`` halves m/v for
+the memory-bound monster configs (documented in EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamState(NamedTuple):
+    step: jax.Array          # scalar int32
+    m: Any                   # pytree like params
+    v: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamConfig:
+    lr: float = 3e-4
+    betas: tuple[float, float] = (0.9, 0.95)
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+    opt_dtype: str = "float32"
+
+
+def lr_at(cfg: AdamConfig, step) -> jax.Array:
+    """Linear warmup -> cosine decay to min_lr_frac * lr."""
+    step = jnp.asarray(step, jnp.float32)
+    warm = cfg.lr * step / max(1, cfg.warmup_steps)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / max(1, cfg.total_steps - cfg.warmup_steps), 0.0, 1.0)
+    cos = cfg.lr * (cfg.min_lr_frac + (1 - cfg.min_lr_frac)
+                    * 0.5 * (1.0 + jnp.cos(math.pi * prog)))
+    return jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def init(params, cfg: AdamConfig) -> AdamState:
+    dt = getattr(jnp, cfg.opt_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    return AdamState(
+        step=jnp.zeros((), jnp.int32),
+        m=jax.tree_util.tree_map(zeros, params),
+        v=jax.tree_util.tree_map(zeros, params),
+    )
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in jax.tree_util.tree_leaves(tree)))
+
+
+def update(params, grads, state: AdamState, cfg: AdamConfig):
+    """One AdamW step. Returns (new_params, new_state, metrics)."""
+    b1, b2 = cfg.betas
+    step = state.step + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-12)) if cfg.grad_clip > 0 else 1.0
+    lr = lr_at(cfg, step)
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+    dt = getattr(jnp, cfg.opt_dtype)
+
+    def leaf(p, g, m, v):
+        g32 = g.astype(jnp.float32) * scale
+        m32 = b1 * m.astype(jnp.float32) + (1 - b1) * g32
+        v32 = b2 * v.astype(jnp.float32) + (1 - b2) * g32 * g32
+        upd = (m32 / c1) / (jnp.sqrt(v32 / c2) + cfg.eps)
+        if cfg.weight_decay > 0 and p.ndim >= 2:
+            upd = upd + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * upd).astype(p.dtype), m32.astype(dt), v32.astype(dt)
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = jax.tree_util.tree_leaves(grads)
+    flat_m = jax.tree_util.tree_leaves(state.m)
+    flat_v = jax.tree_util.tree_leaves(state.v)
+    out = [leaf(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree_util.tree_unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree_util.tree_unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree_util.tree_unflatten(treedef, [o[2] for o in out])
+    return new_p, AdamState(step=step, m=new_m, v=new_v), {
+        "lr": lr, "grad_norm": gnorm,
+    }

@@ -1,0 +1,48 @@
+"""Minimal-but-real checkpointing: numpy-archive of the full train state.
+
+No orbax offline, so checkpoints are ``.npz`` files plus a JSON manifest of
+the pytree structure. Works for any state pytree (params, opt, compressor),
+restores onto the host, and the trainer re-device_puts with its shardings.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def _flatten(state: Any):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(state)
+    names = [jax.tree_util.keystr(kp) for kp, _ in flat]
+    arrays = [np.asarray(leaf) for _, leaf in flat]
+    return names, arrays, treedef
+
+
+def save(path: str, state: Any, extra: dict | None = None) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    names, arrays, _ = _flatten(state)
+    np.savez(path + ".npz", **{f"leaf_{i}": a for i, a in enumerate(arrays)})
+    manifest = {"names": names, "extra": extra or {}}
+    with open(path + ".json", "w") as f:
+        json.dump(manifest, f)
+
+
+def restore(path: str, like: Any) -> tuple[Any, dict]:
+    """Restore into the structure of ``like`` (shape/dtype checked)."""
+    with open(path + ".json") as f:
+        manifest = json.load(f)
+    data = np.load(path + ".npz")
+    flat, treedef = jax.tree_util.tree_flatten_with_path(like)
+    names = [jax.tree_util.keystr(kp) for kp, _ in flat]
+    if names != manifest["names"]:
+        raise ValueError("checkpoint structure mismatch")
+    leaves = []
+    for i, (_, ref) in enumerate(flat):
+        arr = data[f"leaf_{i}"]
+        if tuple(arr.shape) != tuple(ref.shape):
+            raise ValueError(f"shape mismatch for {names[i]}: {arr.shape} vs {ref.shape}")
+        leaves.append(arr.astype(np.asarray(ref).dtype))
+    return jax.tree_util.tree_unflatten(treedef, leaves), manifest["extra"]

@@ -1,0 +1,204 @@
+"""Train / eval / serve step builders.
+
+Two distribution modes (DESIGN §3, §5):
+
+  * ``dp_tp``  — paper-faithful Megatron semantics. The step body runs in a
+    ``shard_map`` MANUAL over the (pod, data) axes — each replica computes
+    local grads for its batch shard — while the 'model' axis stays AUTO
+    (GSPMD applies the Megatron TP rules from dist/sharding.py). The DP
+    gradient sync is explicit: EDGC/PowerSGD factor pmeans for compressed
+    leaves, plain pmean for the rest. This is where the paper lives.
+
+  * ``auto``   — pure pjit (no shard_map): params FSDP-sharded over 'data'
+    + TP over 'model'; XLA inserts the gradient reduce. Used by the
+    memory-bound monster archs where replicated-DP params cannot fit
+    (llama3-405b, kimi-k2-1t, qwen3-moe-235b); compression policy must be
+    'none' in this mode (the sync is a fused reduce-scatter).
+
+The returned step functions are NOT jitted here — launch/dryrun.py lowers
+them with explicit in/out shardings, and the trainer wraps them in its
+compile cache keyed by CompressionPlan.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core.compressor import CompressionPlan, sync_grads
+from repro.core.entropy import GDSConfig, grads_entropy
+from repro.dist.collectives import make_dp_pmean
+from repro.dist.sharding import batch_pspec, param_shardings
+from repro.launch.mesh import dp_axes
+from repro.models.model import Model
+from repro.optim import adam
+
+__all__ = ["TrainStepConfig", "make_train_step", "make_serve_step",
+           "make_prefill_step", "TrainState"]
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainStepConfig:
+    mode: str = "dp_tp"            # dp_tp | auto
+    policy_plan: CompressionPlan = CompressionPlan(ranks=())
+    gds: GDSConfig = GDSConfig()
+    measure_entropy: bool = True
+    use_kernels: bool = False
+    remat: bool = True             # activation checkpointing over blocks
+    adam: adam.AdamConfig = dataclasses.field(default_factory=adam.AdamConfig)
+
+
+class TrainState(dict):
+    """params / opt / comp (compressor) / step — a plain dict pytree."""
+
+
+def _loss_with_remat(model: Model, remat: bool):
+    if not remat:
+        return model.loss_fn
+    return jax.checkpoint(model.loss_fn, static_argnums=())
+
+
+def make_train_step(model: Model, mesh, cfg: TrainStepConfig):
+    """Returns (step_fn, in_shardings, out_shardings) ready for jax.jit.
+
+    step signature: (state, batch) -> (state, metrics)
+      state = {params, opt_m, opt_v, opt_step, comp}
+      metrics = {loss, grad_norm, lr, entropy}
+    """
+    axes = dp_axes(mesh)
+    adam_cfg = cfg.adam
+
+    loss_fn = _loss_with_remat(model, cfg.remat)
+
+    manual = cfg.mode == "dp_tp" and bool(axes)
+
+    def local_step(state, batch):
+        params = state["params"]
+        # Compressor state (the PowerSGD error-feedback residual) is
+        # PER-WORKER: it enters with a leading replica dim sharded over the
+        # manual axes (locally size 1) — squeeze it here, restore on exit.
+        comp_in = state["comp"]
+        if manual:
+            comp_in = jax.tree_util.tree_map(lambda a: a[0], comp_in)
+
+        def lf(p):
+            loss, mets = loss_fn(p, batch)
+            return loss, mets
+
+        (loss, mets), grads = jax.value_and_grad(lf, has_aux=True)(params)
+        pmean = make_dp_pmean(axes) if manual else (lambda x: x)
+        loss = pmean(loss)
+        synced, comp = sync_grads(grads, comp_in, cfg.policy_plan,
+                                  pmean, use_kernels=cfg.use_kernels)
+        entropy = (grads_entropy(synced, cfg.gds)
+                   if cfg.measure_entropy else jnp.zeros((), jnp.float32))
+        opt_state = adam.AdamState(state["opt_step"], state["opt_m"], state["opt_v"])
+        params, opt_state, opt_mets = adam.update(params, synced, opt_state, adam_cfg)
+        if manual:
+            comp = jax.tree_util.tree_map(lambda a: a[None], comp)
+        new_state = {
+            "params": params,
+            "opt_m": opt_state.m, "opt_v": opt_state.v, "opt_step": opt_state.step,
+            "comp": comp,
+        }
+        metrics = {"loss": loss, "entropy": entropy, **opt_mets,
+                   **{k: pmean(v) for k, v in mets.items() if k != "loss"}}
+        return new_state, metrics
+
+    if manual:
+        state_specs = {
+            "params": P(), "opt_m": P(), "opt_v": P(), "opt_step": P(),
+            "comp": P(tuple(axes)),   # per-worker EF/Q, replica dim first
+        }
+        step = jax.shard_map(
+            local_step, mesh=mesh,
+            in_specs=(state_specs, _batch_specs_manual(axes)),
+            out_specs=({**state_specs}, P()),
+            axis_names=set(axes), check_vma=False,
+        )
+    else:
+        step = local_step
+    return step
+
+
+def replicate_comp_state(comp, world: int):
+    """Give compressor leaves their leading per-worker replica dim.
+
+    The warm-start Q must be IDENTICAL across workers at init (PowerSGD
+    requirement), so a broadcast — not independent inits — is correct.
+    """
+    return jax.tree_util.tree_map(
+        lambda a: jnp.broadcast_to(a[None], (world,) + a.shape), comp)
+
+
+def _batch_specs_manual(axes):
+    """Manual in_spec for the batch dict: leading dim sharded over DP axes.
+
+    shard_map accepts a pytree-prefix of specs; a single spec broadcasts to
+    every dict entry, and all batch arrays carry the batch dim first.
+    """
+    return P(tuple(axes))
+
+
+def state_shardings(state, model: Model, mesh, fsdp: bool = False):
+    """NamedShardings for the TrainState pytree.
+
+    params (and their opt m/v mirrors) follow the TP rules. Compressor
+    state: the per-worker replica dim leads (manual axes); the EF residual's
+    TRAILING dims must mirror its param's TP spec — a replicated EF is
+    param-sized per chip AND forces XLA to all-gather the (TP-sharded)
+    gradient to add it (observed: +120 GiB/chip of gathers on qwen3-32b,
+    EXPERIMENTS §Perf H1). Q factors are rank-thin and stay replicated.
+    """
+    from repro.dist.sharding import param_pspecs
+
+    pshard = param_shardings(state["params"], mesh, fsdp=fsdp)
+    rep = NamedSharding(mesh, P())
+    axes = dp_axes(mesh)
+    lead = (tuple(axes),) if axes else ()
+
+    pspecs_flat = {
+        jax.tree_util.keystr(kp): spec
+        for kp, spec in jax.tree_util.tree_flatten_with_path(
+            param_pspecs(state["params"], mesh))[0]
+    }
+
+    comp_shardings = {}
+    for path, st in state["comp"].items():
+        pspec = pspecs_flat.get(path, P())
+        comp_shardings[path] = type(st)(
+            q=NamedSharding(mesh, P(*lead)),
+            err=NamedSharding(mesh, P(*lead, *tuple(pspec))),
+        )
+    return {
+        "params": pshard,
+        "opt_m": pshard, "opt_v": pshard,
+        "opt_step": rep,
+        "comp": comp_shardings,
+    }
+
+
+def batch_shardings(batch, mesh, batch_size: int):
+    return {
+        k: NamedSharding(mesh, batch_pspec(v.ndim, mesh, batch_size))
+        for k, v in batch.items()
+    }
+
+
+# ----------------------------------------------------------------- serving
+def make_prefill_step(model: Model):
+    """Full-sequence forward (inference prefill): (params, batch) -> logits."""
+    def prefill(params, batch):
+        return model.forward(params, batch)
+    return prefill
+
+
+def make_serve_step(model: Model):
+    """One decode step: (params, cache, tokens (B,)) -> (logits, cache)."""
+    def serve(params, cache, tokens):
+        return model.decode_step(params, cache, tokens)
+    return serve

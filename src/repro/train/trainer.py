@@ -1,0 +1,185 @@
+"""Trainer: the host loop that runs EDGC (or a baseline policy) end to end.
+
+Responsibilities:
+  * build model/optimizer/compressor state (+ shardings on a mesh),
+  * drive the EDGCController: alpha-gated entropy readings, window
+    boundaries, plan changes,
+  * maintain the compile cache — one jitted step per CompressionPlan
+    (rank changes re-specialize at window boundaries only, paper §IV-C),
+  * account exact DP-sync wire bytes per step (feeds Tables III/VI),
+  * checkpoint.
+
+Runs identically on 1 CPU device (fidelity experiments) and on a mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Iterator
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core import (
+    EDGCConfig, EDGCController, classify_leaves, init_compressor_state,
+    plan_wire_bytes, resize_compressor_state,
+)
+from repro.models.model import Model
+from repro.optim import adam
+from repro.train import checkpoint as ckpt_mod
+from repro.train.step import (
+    TrainStepConfig, batch_shardings, make_train_step,
+    replicate_comp_state, state_shardings,
+)
+from repro.launch.mesh import dp_axes
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    total_steps: int = 1000
+    log_every: int = 50
+    ckpt_every: int = 0             # 0 = no checkpoints
+    ckpt_path: str = "ckpt/state"
+    min_compress_dim: int = 64
+    measure_entropy: bool = True
+    remat: bool = False
+    use_kernels: bool = False
+    adam: adam.AdamConfig = dataclasses.field(default_factory=adam.AdamConfig)
+
+
+class Trainer:
+    def __init__(self, model: Model, mesh, edgc_cfg: EDGCConfig,
+                 tcfg: TrainerConfig, seed: int = 0) -> None:
+        self.model = model
+        self.mesh = mesh
+        self.edgc_cfg = edgc_cfg
+        self.tcfg = tcfg
+
+        key = jax.random.PRNGKey(seed)
+        params = model.init(key)
+        self.leaves = classify_leaves(
+            params, model.config.num_layers, edgc_cfg.num_stages,
+            min_dim=tcfg.min_compress_dim,
+        )
+        sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        self.world = int(np.prod([sizes.get(a, 1) for a in dp_axes(mesh)])) or 1
+        self.controller = EDGCController(edgc_cfg, self.leaves, world=self.world)
+
+        ost = adam.init(params, tcfg.adam)
+        comp = init_compressor_state(params, self.controller.plan,
+                                     jax.random.fold_in(key, 99))
+        comp = replicate_comp_state(comp, self.world)
+        self.state = {"params": params, "opt_m": ost.m, "opt_v": ost.v,
+                      "opt_step": ost.step, "comp": comp}
+        self._shard_state()
+
+        self._step_cache: dict[Any, Any] = {}
+        self._comp_key = jax.random.fold_in(key, 123)
+        self.history: list[dict] = []
+        self.bytes_synced = 0           # exact DP wire bytes so far
+        self.bytes_full = 0             # what no-compression would have moved
+
+    # ------------------------------------------------------------------ setup
+    def _shard_state(self) -> None:
+        self._sshard = state_shardings(self.state, self.model, self.mesh)
+        self.state = jax.device_put(self.state, self._sshard)
+
+    def _get_step(self):
+        plan = self.controller.plan
+        key = (plan, self.tcfg.measure_entropy)
+        if key not in self._step_cache:
+            scfg = TrainStepConfig(
+                mode="dp_tp", policy_plan=plan,
+                gds=self.edgc_cfg.gds,
+                measure_entropy=self.tcfg.measure_entropy,
+                use_kernels=self.tcfg.use_kernels,
+                remat=self.tcfg.remat,
+            )
+            raw = make_train_step(self.model, self.mesh, scfg)
+            self._step_cache[key] = jax.jit(
+                raw,
+                in_shardings=(self._sshard, None),
+                out_shardings=(self._sshard, NamedSharding(self.mesh, P())),
+                donate_argnums=0,
+            )
+        return self._step_cache[key]
+
+    def _apply_plan_change(self) -> None:
+        """Resize/extend compressor state to the new plan (host-side)."""
+        plan = self.controller.plan
+        comp_host = jax.tree_util.tree_map(lambda a: a[0], self.state["comp"])
+        by_path = dict(comp_host) if isinstance(comp_host, dict) else comp_host
+        # new leaves need fresh state; existing ones are resized
+        params = self.state["params"]
+        from repro.core.compressor import init_compressor_state as init_cs
+        fresh = init_cs(params, plan, self._comp_key)
+        for path in list(fresh.keys()):
+            if path in by_path:
+                from repro.core.powersgd import resize_rank
+                fresh[path] = resize_rank(
+                    by_path[path], dict(plan.ranks)[path], self._comp_key)
+        comp = replicate_comp_state(fresh, self.world)
+        self.state = dict(self.state)
+        self.state["comp"] = comp
+        self._shard_state()
+
+    # ------------------------------------------------------------------- run
+    def run(self, batches: Iterator[dict], num_steps: int | None = None
+            ) -> list[dict]:
+        """Run ``num_steps`` (default: remaining up to total_steps).
+
+        Can be called repeatedly; the global step counter persists, so
+        windows/warm-up continue correctly across calls.
+        """
+        tcfg, ctrl = self.tcfg, self.controller
+        comp_bytes, full_bytes = plan_wire_bytes(self.leaves, ctrl.plan)
+        window = self.edgc_cfg.dac.window
+        t0 = time.time()
+        start = getattr(self, "_global_step", 0)
+        end = min(tcfg.total_steps, start + (num_steps if num_steps is not None
+                                             else tcfg.total_steps - start))
+        for step_idx in range(start, end):
+            batch = next(batches)
+            batch = {k: jnp.asarray(v) for k, v in batch.items()}
+            step_fn = self._get_step()
+            self.state, mets = step_fn(self.state, batch)
+
+            self.bytes_synced += comp_bytes
+            self.bytes_full += full_bytes
+
+            if ctrl.wants_entropy(step_idx):
+                ctrl.on_entropy(step_idx, float(mets["entropy"]))
+
+            if (step_idx + 1) % window == 0:
+                if ctrl.on_window_end(step_idx):
+                    self._apply_plan_change()
+                    comp_bytes, full_bytes = plan_wire_bytes(self.leaves, ctrl.plan)
+
+            if step_idx % tcfg.log_every == 0 or step_idx == tcfg.total_steps - 1:
+                rec = {
+                    "step": step_idx,
+                    "loss": float(mets["loss"]),
+                    "entropy": float(mets["entropy"]),
+                    "grad_norm": float(mets["grad_norm"]),
+                    "lr": float(mets["lr"]),
+                    "bytes_synced": self.bytes_synced,
+                    "bytes_full": self.bytes_full,
+                    "ranks": ctrl.dac.current_ranks() if not ctrl.in_warmup else [],
+                    "wall_s": time.time() - t0,
+                }
+                self.history.append(rec)
+
+            if tcfg.ckpt_every and (step_idx + 1) % tcfg.ckpt_every == 0:
+                ckpt_mod.save(f"{tcfg.ckpt_path}_{step_idx+1}", self.state,
+                              extra={"step": step_idx + 1})
+        self._global_step = end
+        return self.history
+
+    # --------------------------------------------------------------- summary
+    def comm_savings(self) -> float:
+        """Fraction of DP-sync bytes saved vs no compression (Table III)."""
+        if self.bytes_full == 0:
+            return 0.0
+        return 1.0 - self.bytes_synced / self.bytes_full

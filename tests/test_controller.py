@@ -1,0 +1,101 @@
+"""EDGCController invariants under arbitrary entropy trajectories."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import EDGCConfig, EDGCController, GDSConfig, LeafInfo
+from repro.core.dac import DACConfig
+
+
+def _leaves():
+    return [
+        LeafInfo(path=f"['stages'][{s}]['blocks']['mlp']['up']",
+                 shape=(4, 512, 2048), stage=s, eligible=True)
+        for s in range(4)
+    ] + [
+        LeafInfo(path="['embed']['tok']", shape=(50257, 512), stage=0,
+                 eligible=False),
+    ]
+
+
+def _controller(policy="edgc", window=50, total=2000):
+    cfg = EDGCConfig(policy=policy, num_stages=4, total_iterations=total,
+                     gds=GDSConfig(alpha=0.5, beta=0.25),
+                     dac=DACConfig(window=window, adjust_limit=4))
+    return EDGCController(cfg, _leaves(), world=16)
+
+
+@given(seed=st.integers(0, 2**31), drift=st.floats(-0.02, 0.02))
+@settings(max_examples=25, deadline=None)
+def test_ranks_always_in_bounds(seed, drift):
+    """Whatever entropy does, applied ranks stay in [r_min, r_max]."""
+    ctrl = _controller()
+    rng = np.random.default_rng(seed)
+    h = -5.0
+    step = 0
+    for w in range(20):
+        for _ in range(10):
+            if ctrl.wants_entropy(step):
+                ctrl.on_entropy(step, h + rng.normal() * 0.05)
+            h += drift
+            step += 5
+        ctrl.on_window_end(step)
+        for _, rank in ctrl.plan.ranks:
+            assert ctrl.r_min <= rank <= ctrl.r_max or rank <= ctrl.r_max
+
+
+@given(seed=st.integers(0, 2**31))
+@settings(max_examples=10, deadline=None)
+def test_warmup_never_compresses_before_10pct(seed):
+    ctrl = _controller(total=1000)
+    rng = np.random.default_rng(seed)
+    step = 0
+    while step < 99:  # below the 10% floor
+        if ctrl.wants_entropy(step):
+            ctrl.on_entropy(step, -5.0 - step * 0.01)  # falling fast
+        step += 1
+        if step % 50 == 0:
+            ctrl.on_window_end(step)
+        assert ctrl.plan.ranks == (), "compressed during the warm-up floor"
+
+
+def test_rank_moves_bounded_per_window():
+    ctrl = _controller(window=50)
+    # warm up past the floor with stable entropy, then crash entropy
+    step = 0
+    for w in range(8):
+        for _ in range(25):
+            if ctrl.wants_entropy(step):
+                ctrl.on_entropy(step, -5.0)
+            step += 2
+        ctrl.on_window_end(step)
+    prev = None
+    for w in range(6):
+        for _ in range(25):
+            if ctrl.wants_entropy(step):
+                ctrl.on_entropy(step, -5.0 - (w + 1) * 0.3)  # crash
+            step += 2
+        ctrl.on_window_end(step)
+        if ctrl.rank_history:
+            r1 = ctrl.rank_history[-1][1][0]
+            if prev is not None:
+                limit = ctrl.cfg.dac.adjust_limit + ctrl.cfg.dac.quantize_to
+                assert prev - r1 <= limit, "moved faster than Alg.1 allows"
+            prev = r1
+
+
+def test_baseline_policies_have_static_plans():
+    for policy in ("fixed", "optimus"):
+        ctrl = _controller(policy=policy)
+        plan0 = ctrl.plan
+        for step in (50, 100, 150):
+            ctrl.on_window_end(step)
+        assert ctrl.plan == plan0
+
+
+def test_plan_cache_boundedness():
+    """Quantization bounds the number of distinct plans (compile cache)."""
+    ctrl = _controller()
+    q = ctrl.cfg.dac.quantize_to
+    possible = (ctrl.r_max - ctrl.r_min) // q + 2
+    assert possible < 300  # sane compile-cache bound for this population

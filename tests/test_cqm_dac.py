@@ -1,0 +1,103 @@
+"""CQM control law + DAC algorithms 1 & 2 + controller transitions."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.comm_model import CommModel, rank_bounds
+from repro.core.cqm import CQM, rank_from_entropy_delta
+from repro.core.dac import (
+    DAC, DACConfig, stage_aligned_ranks, window_rank_adjust,
+)
+
+
+def _comm(world=16):
+    return CommModel.from_shapes([(1024, 4096)] * 24, world=world)
+
+
+def test_cqm_anchor_and_direction():
+    c = CQM(m=256, n=1024)
+    c.anchor(64, h0=-3.0)
+    assert c.rank_for_entropy(-3.0) == 64          # no entropy change
+    assert c.rank_for_entropy(-3.5) < 64           # entropy down -> rank down
+    assert c.rank_for_entropy(-2.5) >= 64          # entropy up -> rank up
+
+
+@given(h0=st.floats(-6, 0), dh=st.floats(0, 1))
+@settings(max_examples=30, deadline=None)
+def test_theorem3_never_increases_on_entropy_drop(h0, dh):
+    r1 = rank_from_entropy_delta(48, h0, h0 - dh, 256, 1024)
+    assert r1 <= 48
+
+
+@given(r_prev=st.integers(8, 120), r_new=st.integers(0, 200),
+       s=st.integers(1, 8))
+@settings(max_examples=50, deadline=None)
+def test_window_adjust_constraints(r_prev, r_new, s):
+    """Algorithm 1: move <= s per window, always inside [r_min, r_max]."""
+    out = window_rank_adjust(r_prev, r_new, 8, 128, s)
+    assert 8 <= out <= 128
+    if 8 <= r_prev <= 128:
+        assert abs(out - r_prev) <= s
+
+
+def test_stage_alignment_monotone():
+    """Later stages have more slack -> rank non-decreasing in stage index."""
+    comm = _comm()
+    ranks = stage_aligned_ranks(32, 4, comm, t_micro_back=comm.t_com(8),
+                                r_min=8, r_max=128)
+    assert ranks[0] == 32
+    assert all(b >= a for a, b in zip(ranks, ranks[1:]))
+
+
+def test_stage_alignment_eq4_exact():
+    comm = _comm()
+    t_micro = comm.t_com(10)
+    ranks = stage_aligned_ranks(32, 3, comm, t_micro, 1, 10_000)
+    # Eq. 4: r_i = (T_com(r1) + (i-1) t_micro) / eta
+    for i, r in enumerate(ranks[1:], start=2):
+        expected = round((comm.t_com(32) + (i - 1) * t_micro) / comm.eta)
+        assert r == pytest.approx(expected, abs=1)
+
+
+def test_rank_bounds_sane():
+    comm = _comm()
+    r_min, r_max = rank_bounds(comm, max_possible=512)
+    assert 1 <= r_min < r_max <= 512
+    # Eq. 2 holds at r_max, fails just past it (or r_max hit the cap)
+    assert comm.t_total(r_max) <= comm.t_uncompressed() * 1.001
+    if r_max < 512:
+        assert comm.t_total(r_max + 2) > comm.t_uncompressed() * 0.999
+
+
+def _dac(total=1000):
+    cqm = CQM(m=256, n=1024)
+    comm = _comm()
+    return DAC(cqm=cqm, comm=comm, cfg=DACConfig(window=100, adjust_limit=4),
+               r_min=8, r_max=64, num_stages=4,
+               t_micro_back=comm.t_com(4), total_iterations=total)
+
+
+def test_warmup_respects_10pct_floor():
+    dac = _dac(total=1000)
+    # huge entropy drop, but before 10% of iterations
+    assert not dac.maybe_end_warmup(-5.0, step=50)
+    assert not dac.warmed_up
+
+
+def test_warmup_ends_on_entropy_drop():
+    dac = _dac(total=1000)
+    dac.maybe_end_warmup(-3.0, step=150)   # anchors
+    assert not dac.warmed_up
+    dac.maybe_end_warmup(-3.4, step=250)   # entropy fell -> r_new < r_max
+    assert dac.warmed_up
+
+
+def test_dac_update_moves_slowly():
+    dac = _dac()
+    dac.maybe_end_warmup(-3.0, step=150)
+    dac.maybe_end_warmup(-3.4, step=250)
+    r_before = dac.r_stage1
+    ranks = dac.update(-5.0)               # massive drop
+    assert r_before - dac.r_stage1 <= dac.cfg.adjust_limit + dac.cfg.quantize_to
+    assert all(dac.r_min <= r <= dac.r_max for r in ranks)
+    assert len(ranks) == 4

@@ -1,0 +1,79 @@
+"""Dry-run plumbing units (no 512-device init needed): input_specs shapes,
+arch registry completeness, INPUT_SHAPES contract."""
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCHS, INPUT_SHAPES, get_config, sharding_mode
+from repro.launch.dryrun import input_specs
+
+ARCH_IDS = [a for a in ARCHS if a != "gpt2"]
+
+
+def test_registry_complete():
+    assert len(ARCH_IDS) == 10
+    assert set(INPUT_SHAPES) == {"train_4k", "prefill_32k", "decode_32k",
+                                 "long_500k"}
+    for a in ARCH_IDS:
+        assert get_config(a, "full") is not None
+        assert get_config(a, "reduced") is not None
+        assert sharding_mode(a) in ("dp_tp", "auto")
+
+
+def test_exact_assigned_shapes():
+    """The FULL configs match the assigned table exactly."""
+    c = get_config("kimi-k2-1t-a32b", "full")
+    assert (c.num_layers, c.d_model, c.num_heads, c.num_kv_heads,
+            c.d_ff, c.vocab_size, c.num_experts, c.experts_per_token) == \
+        (61, 7168, 64, 8, 2048, 163840, 384, 8)
+    c = get_config("qwen3-32b", "full")
+    assert (c.num_layers, c.d_model, c.num_heads, c.num_kv_heads, c.d_ff,
+            c.vocab_size, c.head_dim, c.qk_norm) == \
+        (64, 5120, 64, 8, 25600, 151936, 128, True)
+    c = get_config("llama3-405b", "full")
+    assert (c.num_layers, c.d_model, c.num_heads, c.num_kv_heads, c.d_ff,
+            c.vocab_size) == (126, 16384, 128, 8, 53248, 128256)
+    c = get_config("zamba2-7b", "full")
+    assert (c.num_layers, c.d_model, c.ssm_state) == (81, 3584, 64)
+    c = get_config("xlstm-125m", "full")
+    assert (c.num_layers, c.d_model, c.vocab_size) == (12, 768, 50304)
+    c = get_config("whisper-base", "full")
+    assert (c.num_layers, c.encoder_layers, c.d_model, c.vocab_size) == \
+        (6, 6, 512, 51865)
+    c = get_config("qwen3-moe-235b-a22b", "full")
+    assert (c.num_layers, c.num_experts, c.experts_per_token, c.d_ff) == \
+        (94, 128, 8, 1536)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.parametrize("shape", list(INPUT_SHAPES))
+def test_input_specs_shapes(arch, shape):
+    cfg_var = "long" if shape == "long_500k" else "full"
+    cfg = get_config(arch, cfg_var)
+    if cfg is None:
+        assert arch == "whisper-base" and shape == "long_500k"
+        return
+    spec = INPUT_SHAPES[shape]
+    B, T = spec["global_batch"], spec["seq_len"]
+    specs = input_specs(cfg, shape)
+    assert specs["tokens"].dtype == jnp.int32
+    if spec["kind"] == "decode":
+        assert specs["tokens"].shape == (B,)        # ONE new token
+    else:
+        assert specs["tokens"].shape == (B, T)
+    if spec["kind"] == "train":
+        assert specs["labels"].shape == (B, T)
+    if cfg.family == "whisper" and spec["kind"] != "decode":
+        assert specs["frames"].shape == (B, cfg.audio_frames, cfg.d_model)
+    if cfg.family == "vlm" and spec["kind"] != "decode":
+        assert specs["patches"].shape == (B, cfg.num_patches, cfg.d_model)
+
+
+def test_long_500k_requires_subquadratic():
+    """Dense archs must select a bounded-memory attention for long_500k."""
+    for arch in ARCH_IDS:
+        cfg = get_config(arch, "long")
+        if cfg is None:
+            continue
+        if cfg.family in ("dense", "moe", "vlm"):
+            assert cfg.sliding_window > 0, f"{arch} long_500k needs a window"
+        # ssm/zamba: recurrent state, inherently O(1) per token

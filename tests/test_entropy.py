@@ -1,0 +1,85 @@
+"""GDS entropy estimators: Lemma 2, histogram, sampling, properties."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.entropy import (
+    GDSConfig, gaussian_entropy, grads_entropy, histogram_entropy,
+    strided_sample,
+)
+
+GAUSS_H1 = 0.5 * math.log(2 * math.pi * math.e)  # H of N(0,1) in nats
+
+
+def test_lemma2_gaussian_entropy():
+    rng = np.random.default_rng(0)
+    for sigma in (1.0, 0.1, 3.0):
+        x = jnp.asarray(rng.standard_normal(200_000) * sigma, jnp.float32)
+        expected = math.log(sigma) + GAUSS_H1
+        assert float(gaussian_entropy(x)) == pytest.approx(expected, abs=0.02)
+
+
+def test_histogram_close_to_gaussian_on_normal_data():
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.standard_normal(500_000), jnp.float32)
+    assert float(histogram_entropy(x)) == pytest.approx(GAUSS_H1, abs=0.05)
+
+
+def test_histogram_detects_nongaussian():
+    """Uniform has LOWER entropy than a Gaussian of equal variance."""
+    rng = np.random.default_rng(2)
+    u = jnp.asarray(rng.uniform(-np.sqrt(3), np.sqrt(3), 500_000), jnp.float32)
+    h_u = float(histogram_entropy(u))
+    assert h_u < GAUSS_H1
+    assert h_u == pytest.approx(math.log(2 * math.sqrt(3)), abs=0.05)
+
+
+@given(beta=st.sampled_from([1.0, 0.5, 0.25, 0.1, 0.05]))
+@settings(max_examples=10, deadline=None)
+def test_sampled_entropy_tracks_full(beta):
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.standard_normal(400_000) * 0.37, jnp.float32)
+    full = float(histogram_entropy(x))
+    sampled = float(histogram_entropy(strided_sample(x, beta)))
+    assert sampled == pytest.approx(full, abs=0.05)
+
+
+def test_strided_sample_size_and_determinism():
+    x = jnp.arange(1000, dtype=jnp.float32)
+    s1 = strided_sample(x, 0.25)
+    s2 = strided_sample(x, 0.25)
+    assert s1.shape[0] == 250
+    assert bool(jnp.all(s1 == s2))
+
+
+@given(scale=st.floats(0.01, 10.0))
+@settings(max_examples=20, deadline=None)
+def test_entropy_monotone_in_scale(scale):
+    """H(aX) = H(X) + log a — entropy must increase with spread."""
+    rng = np.random.default_rng(4)
+    base = rng.standard_normal(100_000).astype(np.float32)
+    h1 = float(gaussian_entropy(jnp.asarray(base)))
+    h2 = float(gaussian_entropy(jnp.asarray(base * scale)))
+    assert h2 == pytest.approx(h1 + math.log(scale), abs=0.01)
+
+
+def test_grads_entropy_weighted_mean():
+    rng = np.random.default_rng(5)
+    grads = {
+        "a": jnp.asarray(rng.standard_normal((256, 256)), jnp.float32),
+        "b": jnp.asarray(rng.standard_normal((256, 256)) * 0.1, jnp.float32),
+    }
+    h = float(grads_entropy(grads, GDSConfig(beta=1.0)))
+    ha = GAUSS_H1
+    hb = math.log(0.1) + GAUSS_H1
+    assert h == pytest.approx((ha + hb) / 2, abs=0.05)
+
+
+def test_gds_alpha_gate():
+    cfg = GDSConfig(alpha=0.1)
+    measured = [s for s in range(100) if cfg.should_measure(s)]
+    assert len(measured) == 10

@@ -1,0 +1,185 @@
+"""Pallas kernel validation: shape/dtype sweeps vs the ref.py oracles.
+
+Required by the brief: for each kernel, sweep shapes & dtypes and
+assert_allclose against the pure-jnp oracle (interpret=True on CPU).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+from repro.kernels import lowrank as lr
+from repro.kernels import entropy_hist as eh
+
+SHAPES = [(128, 128), (256, 512), (512, 256), (384, 640), (1024, 128)]
+DTYPES = [jnp.float32, jnp.bfloat16]
+RANKS = [4, 16, 64]
+
+
+def _rand(shape, dtype, seed):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal(shape), jnp.float32).astype(dtype)
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("rank", [4, 64])
+def test_p_kernel_sweep(shape, dtype, rank):
+    m, n = shape
+    g, e = _rand(shape, dtype, 0), _rand(shape, dtype, 1)
+    q = _rand((n, rank), jnp.float32, 2)
+    got = lr.ef_lowrank_p(g, e, q, interpret=True)
+    want = ref.ef_lowrank_p(g, e, q)
+    tol = 1e-4 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=tol, atol=tol * 10)
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_q_kernel_sweep(shape, dtype):
+    m, n = shape
+    rank = 16
+    g, e = _rand(shape, dtype, 3), _rand(shape, dtype, 4)
+    p_hat = _rand((m, rank), jnp.float32, 5)
+    got = lr.ef_lowrank_q(g, e, p_hat, interpret=True)
+    want = ref.ef_lowrank_q(g, e, p_hat)
+    tol = 1e-4 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=tol, atol=tol * 10)
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_decompress_kernel_sweep(shape, dtype):
+    m, n = shape
+    rank = 8
+    g, e = _rand(shape, dtype, 6), _rand(shape, dtype, 7)
+    p_hat = _rand((m, rank), jnp.float32, 8)
+    q = _rand((n, rank), jnp.float32, 9)
+    gh, ne = lr.decompress_residual(p_hat, q, g, e, interpret=True)
+    ghr, ner = ref.decompress_residual(p_hat, q, g, e)
+    tol = 1e-4 if dtype == jnp.float32 else 1e-1
+    np.testing.assert_allclose(np.asarray(gh, np.float32),
+                               np.asarray(ghr, np.float32), rtol=tol, atol=tol * 10)
+    np.testing.assert_allclose(np.asarray(ne, np.float32),
+                               np.asarray(ner, np.float32), rtol=tol, atol=tol * 10)
+
+
+@pytest.mark.parametrize("m", [64, 256, 1024])
+@pytest.mark.parametrize("r", RANKS)
+def test_gram_schmidt_panel_sweep(m, r):
+    p = _rand((m, r), jnp.float32, 10)
+    got = lr.gram_schmidt_panel(p, interpret=True)
+    # orthonormal + same span as the oracle
+    eye = np.asarray(got.T @ got)
+    np.testing.assert_allclose(eye, np.eye(r), atol=2e-4)
+    want = ref.gram_schmidt(p)
+    overlap = np.abs(np.asarray(got.T @ want))
+    np.testing.assert_allclose(overlap, np.eye(r), atol=2e-3)
+
+
+@pytest.mark.parametrize("n", [1000, 4096, 100_000])
+@pytest.mark.parametrize("bins", [64, 256])
+def test_entropy_hist_kernel_sweep(n, bins):
+    x = _rand((n,), jnp.float32, 11) * 0.37
+    got = float(ops.sampled_entropy_hist(x, num_bins=bins))
+    want = float(ref.sampled_entropy_hist(x, num_bins=bins))
+    assert got == pytest.approx(want, abs=1e-5)
+
+
+@given(mexp=st.integers(1, 3), nexp=st.integers(1, 3),
+       rank=st.sampled_from([4, 8, 32]))
+@settings(max_examples=10, deadline=None)
+def test_p_kernel_property(mexp, nexp, rank):
+    m, n = 128 * mexp, 128 * nexp
+    g, e = _rand((m, n), jnp.float32, 12), _rand((m, n), jnp.float32, 13)
+    q = _rand((n, rank), jnp.float32, 14)
+    got = lr.ef_lowrank_p(g, e, q, interpret=True)
+    want = ref.ef_lowrank_p(g, e, q)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-3)
+
+
+def test_ops_fallback_untileable():
+    """Non-128-multiple shapes silently use the oracle — same numbers."""
+    g, e = _rand((100, 300), jnp.float32, 15), _rand((100, 300), jnp.float32, 16)
+    q = _rand((300, 8), jnp.float32, 17)
+    np.testing.assert_allclose(np.asarray(ops.lowrank_p(g, e, q)),
+                               np.asarray(ref.ef_lowrank_p(g, e, q)),
+                               rtol=1e-5)
+
+
+def test_hist_kernel_padding_correct():
+    """Non-multiple-of-block sizes: the pad sentinel must not leak counts."""
+    x = _rand((3001,), jnp.float32, 18)
+    got = float(ops.sampled_entropy_hist(x))
+    want = float(ref.sampled_entropy_hist(x))
+    # f32 accumulation order differs between the blocked kernel and the
+    # single-pass oracle; the histogram itself is exact (pad-count corrected)
+    assert got == pytest.approx(want, abs=1e-4)
+
+
+FLASH_CASES = [
+    # (B, Tq, Tk, H, Hkv, Dh, bq, bk)
+    (2, 256, 256, 4, 2, 64, 64, 64),
+    (1, 512, 512, 8, 8, 128, 128, 128),
+    (2, 128, 384, 4, 1, 32, 64, 128),   # cross-attn-like, Tq != Tk
+]
+
+
+@pytest.mark.parametrize("case", FLASH_CASES)
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_flash_attention_sweep(case, causal, dtype):
+    from repro.kernels.flash_attention import flash_attention
+    B, Tq, Tk, H, Hkv, Dh, bq, bk = case
+    if causal and Tq != Tk:
+        pytest.skip("causal requires aligned q/k positions here")
+    q = _rand((B, Tq, H, Dh), dtype, 31)
+    k = _rand((B, Tk, Hkv, Dh), dtype, 32)
+    v = _rand((B, Tk, Hkv, Dh), dtype, 33)
+    got = flash_attention(q, k, v, causal=causal, bq=bq, bk=bk)
+    want = ref.flash_reference(q, k, v, causal=causal)
+    tol = 2e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol * 10)
+
+
+def test_flash_matches_model_blockwise():
+    """The model's blockwise attention and the Pallas flash kernel agree."""
+    from repro.kernels.flash_attention import flash_attention
+    from repro.models.layers import blockwise_attention
+    q = _rand((2, 256, 4, 64), jnp.float32, 34)
+    k = _rand((2, 256, 2, 64), jnp.float32, 35)
+    v = _rand((2, 256, 2, 64), jnp.float32, 36)
+    got = flash_attention(q, k, v, causal=True, bq=64, bk=64)
+    want = blockwise_attention(q, k, v, causal=True, block_q=64)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-4)
+
+
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("shape", [(2, 128, 4, 2, 32), (1, 256, 8, 8, 64)])
+def test_flash_backward_matches_autodiff(causal, shape):
+    """custom_vjp flash bwd vs jax.grad of the full-materialization oracle."""
+    from repro.kernels.flash_attention_bwd import flash_attention_train
+    B, T, H, Hkv, D = shape
+    q = _rand((B, T, H, D), jnp.float32, 41)
+    k = _rand((B, T, Hkv, D), jnp.float32, 42)
+    v = _rand((B, T, Hkv, D), jnp.float32, 43)
+
+    def loss_flash(q, k, v):
+        return jnp.sum(jnp.sin(flash_attention_train(q, k, v, causal, 64, 64)))
+
+    def loss_ref(q, k, v):
+        return jnp.sum(jnp.sin(ref.flash_reference(q, k, v, causal=causal)))
+
+    g1 = jax.grad(loss_flash, argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(loss_ref, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-4)

@@ -1,0 +1,68 @@
+"""Marchenko–Pastur law + g-table: correctness vs real SVD, properties."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.mp_law import g_table, mp_cdf, mp_support, sample_eigenvalues
+
+
+def test_mp_cdf_monotone_and_normalized():
+    m, n = 128, 512
+    a, b = mp_support(m, n)
+    lam = np.linspace(a, b, 1000)
+    cdf = mp_cdf(lam, m, n)
+    assert cdf[0] == pytest.approx(0.0, abs=1e-6)
+    assert cdf[-1] == pytest.approx(1.0, abs=1e-6)
+    assert np.all(np.diff(cdf) >= -1e-12)
+
+
+@pytest.mark.parametrize("m,n", [(64, 256), (128, 128), (256, 1024)])
+def test_gtable_matches_svd(m, n):
+    tbl = g_table(m, n)
+    rng = np.random.default_rng(0)
+    A = rng.standard_normal((m, n))
+    s = np.linalg.svd(A, compute_uv=False)
+    # r = m-1 is excluded: the extreme spectral edge is high-variance in a
+    # single draw (and rank ~ m is never a useful compression operating point)
+    for r in (0, m // 8, m // 2, 7 * m // 8):
+        actual = np.sqrt((s[r:] ** 2).sum())
+        assert tbl(r) == pytest.approx(actual, rel=0.05)
+
+
+def test_gtable_monotone_decreasing():
+    tbl = g_table(64, 256)
+    g = tbl.g
+    assert np.all(np.diff(g) <= 1e-9)
+    assert g[-1] == pytest.approx(0.0, abs=1e-9)
+
+
+@given(r=st.integers(0, 64))
+@settings(max_examples=30, deadline=None)
+def test_inverse_consistency(r):
+    tbl = g_table(64, 256)
+    assert tbl.rank_for_error(tbl(r)) <= r  # conservative inverse
+
+
+@given(h_drop=st.floats(0.0, 0.5))
+@settings(max_examples=30, deadline=None)
+def test_theorem3_monotone_in_entropy(h_drop):
+    """Entropy decrease never increases the rank (Theorem 3 direction)."""
+    tbl = g_table(64, 256)
+    r0 = 32
+    r1 = tbl.theorem3_rank(r0, 3.0, 3.0 - h_drop)
+    assert r1 <= r0
+
+
+def test_sample_eigenvalues_mass():
+    """Total eigenvalue mass ~ E||A||_F^2 = m*n for unit variance."""
+    m, n = 128, 512
+    lam = sample_eigenvalues(m, n)
+    assert lam.sum() == pytest.approx(m * n, rel=0.02)
+
+
+def test_randomized_variant_agrees():
+    m, n = 128, 512
+    det = sample_eigenvalues(m, n, stratified=True)
+    rnd = sample_eigenvalues(m, n, stratified=False,
+                             rng=np.random.default_rng(7))
+    assert rnd.sum() == pytest.approx(det.sum(), rel=0.1)

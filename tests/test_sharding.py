@@ -1,0 +1,144 @@
+"""Partition rules, batch/cache specs, FSDP application, HLO collective parser."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.dist.sharding import (
+    apply_fsdp, batch_pspec, cache_pspecs, param_pspecs,
+)
+from repro.launch.mesh import make_host_mesh
+from repro.models.model import ModelConfig, build_model
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return make_host_mesh(data=1, model=1)
+
+
+def _leaf_specs(params, mesh):
+    specs = param_pspecs(params, mesh)
+    flat = jax.tree_util.tree_flatten_with_path(specs)[0]
+    return {jax.tree_util.keystr(kp): s for kp, s in flat}
+
+
+def test_dense_tp_rules(mesh):
+    cfg = ModelConfig(name="t", family="dense", num_layers=2, d_model=128,
+                      num_heads=4, num_kv_heads=2, d_ff=256, vocab_size=512)
+    model = build_model(cfg)
+    params = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    specs = _leaf_specs(params, mesh)
+    wq = next(s for p, s in specs.items() if "wq" in p)
+    wo = next(s for p, s in specs.items() if "wo" in p)
+    up = next(s for p, s in specs.items() if "'up'" in p)
+    down = next(s for p, s in specs.items() if "'down'" in p)
+    emb = next(s for p, s in specs.items() if "tok" in p)
+    assert wq[-1] == "model" and wo[-2] == "model"       # column / row
+    assert up[-1] == "model" and down[-2] == "model"
+    assert emb[0] == "model"                              # vocab sharded
+    for p, s in specs.items():
+        if "norm" in p:
+            assert "model" not in tuple(s)
+
+
+def test_moe_expert_parallel(mesh):
+    cfg = ModelConfig(name="m", family="moe", num_layers=2, d_model=128,
+                      num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=512,
+                      num_experts=4, experts_per_token=2)
+    model = build_model(cfg)
+    params = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    specs = _leaf_specs(params, mesh)
+    gate = next(s for p, s in specs.items() if "experts" in p and "gate" in p)
+    # (layers, E, d, f): expert dim sharded
+    assert gate[1] == "model"
+    router = next(s for p, s in specs.items() if "router" in p)
+    assert "model" not in tuple(router)
+
+
+def test_divisibility_guard():
+    """Dims not divisible by the model-axis size are never sharded."""
+    mesh16 = make_host_mesh(data=1, model=1)  # size 1 divides everything
+    cfg = ModelConfig(name="t", family="dense", num_layers=2, d_model=100,
+                      num_heads=4, num_kv_heads=2, d_ff=130, vocab_size=500)
+    model = build_model(cfg)
+    params = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    # simulate a 16-way model axis by checking the rule path directly
+    from repro.dist.sharding import _spec_for
+
+    class FakeMesh:
+        axis_names = ("data", "model")
+        class devices:
+            shape = (1, 16)
+    s = _spec_for("stages[0].blocks.attn.wq", (2, 100, 130), FakeMesh)
+    assert "model" not in tuple(s)  # 130 % 16 != 0 -> dropped
+
+
+def test_batch_pspec_divisibility(mesh):
+    class FakeMesh:
+        axis_names = ("pod", "data", "model")
+        class devices:
+            shape = (2, 16, 16)
+    assert batch_pspec(2, FakeMesh, batch_size=256)[0] == ("pod", "data")
+    assert batch_pspec(2, FakeMesh, batch_size=16)[0] in ("pod", ("pod",))  # 16 % 32 != 0
+    assert batch_pspec(2, FakeMesh, batch_size=1)[0] is None
+
+
+def test_cache_pspecs(mesh):
+    cfg = ModelConfig(name="t", family="dense", num_layers=2, d_model=128,
+                      num_heads=4, num_kv_heads=4, d_ff=256, vocab_size=512)
+    model = build_model(cfg)
+    cache = jax.eval_shape(lambda: model.init_cache(8, 64))
+
+    class FakeMesh:
+        axis_names = ("data", "model")
+        class devices:
+            shape = (4, 2)
+    specs = cache_pspecs(cache, FakeMesh, batch_size=8)
+    kspec = specs["stages"][0]["k"]
+    # (layers, B, C, Hkv, hd): batch over data, kv-heads over model
+    assert kspec[1] in ("data", ("data",))
+    assert kspec[3] == "model"
+    assert specs["len"] == P()
+
+
+def test_fsdp_application(mesh):
+    cfg = ModelConfig(name="t", family="dense", num_layers=2, d_model=256,
+                      num_heads=4, num_kv_heads=2, d_ff=4096, vocab_size=8192)
+    model = build_model(cfg)
+    params = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+
+    class FakeMesh:
+        axis_names = ("data", "model")
+        class devices:
+            shape = (16, 16)
+    specs = param_pspecs(params, FakeMesh)
+    fsdp = apply_fsdp(specs, params, FakeMesh, "data")
+    flat_f = jax.tree_util.tree_flatten_with_path(fsdp)[0]
+    flat_p = {jax.tree_util.keystr(kp): l for kp, l
+              in jax.tree_util.tree_flatten_with_path(params)[0]}
+    got_data = 0
+    for kp, s in flat_f:
+        path = jax.tree_util.keystr(kp)
+        leaf = flat_p[path]
+        if leaf.size >= (1 << 20):
+            if "data" in jax.tree_util.tree_leaves(tuple(s)):
+                got_data += 1
+    assert got_data > 0  # big leaves actually picked up the fsdp axis
+
+
+def test_collective_parser():
+    from repro.launch.dryrun import _shape_bytes, collective_bytes
+    hlo = """
+  %ar = bf16[128,256] all-reduce(bf16[128,256] %x), replica_groups={}
+  %ag.1 = f32[512]{0} all-gather(f32[32] %y), dimensions={0}
+  %t = (f32[16,16], f32[16,16]) all-to-all(f32[16,16] %a, f32[16,16] %b)
+  %cp = u32[4] collective-permute(u32[4] %c)
+  %noise = f32[8] add(f32[8] %p, f32[8] %q)
+"""
+    out = collective_bytes(hlo)
+    assert out["all-reduce"] == 128 * 256 * 2
+    assert out["all-gather"] == 512 * 4
+    assert out["all-to-all"] == 2 * 16 * 16 * 4
+    assert out["collective-permute"] == 4 * 4
+    assert _shape_bytes("bf16[2,3]") == 12
