@@ -13,7 +13,7 @@ import time
 import numpy as np
 
 from repro.core import CommModel, rank_bounds
-from repro.core.compressor import plan_wire_bytes, make_plan, classify_leaves
+from repro.core.compressor import classify_leaves
 from repro.configs.gpt2 import GPT2_2_5B
 from repro.models.model import build_model
 

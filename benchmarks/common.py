@@ -3,8 +3,6 @@ from __future__ import annotations
 
 import time
 
-import jax
-import numpy as np
 
 from repro.configs.gpt2 import GPT2_FIDELITY
 from repro.core import EDGCConfig, GDSConfig

@@ -16,7 +16,6 @@ import jax
 import numpy as np
 
 from repro.core import theoretical_error
-from repro.core.mp_law import g_table
 
 from .common import csv_row, fidelity_data, fidelity_trainer
 
@@ -51,7 +50,6 @@ def run(steps: int = 200) -> list[str]:
     # capture a real gradient mid-training
     tr.run(iter([next(batches) for _ in range(steps)]))
     import jax.numpy as jnp
-    from repro.optim import adam as adam_mod
     model = tr.model
     params = tr.state["params"]
     batch = {k: jnp.asarray(v) for k, v in next(batches).items()}

@@ -19,7 +19,6 @@ import json
 
 import jax
 
-from repro.configs import get_config
 from repro.core.comm_model import TPU_V5E
 from repro.launch.dryrun import lower_one
 from repro.launch.mesh import make_production_mesh

@@ -14,9 +14,7 @@ from __future__ import annotations
 
 import time
 
-import numpy as np
 
-from repro.core import CommModel
 from .common import csv_row, run_policy
 
 

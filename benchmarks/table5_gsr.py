@@ -13,7 +13,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.entropy import GDSConfig, gaussian_entropy, histogram_entropy, strided_sample
+from repro.core.entropy import histogram_entropy, strided_sample
 
 from .common import csv_row
 

@@ -10,12 +10,11 @@ from __future__ import annotations
 
 import time
 
-import numpy as np
 
 from repro.core import CommModel
 from repro.core.compressor import make_plan, plan_wire_bytes
 
-from .common import csv_row, run_policy, fidelity_trainer
+from .common import csv_row, run_policy
 
 
 def run(steps: int = 300) -> list[str]:

@@ -2,7 +2,6 @@
 
   PYTHONPATH=src python examples/quickstart.py
 """
-import jax
 
 from repro.configs.gpt2 import GPT2_FIDELITY
 from repro.core import EDGCConfig, GDSConfig

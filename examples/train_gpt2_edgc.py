@@ -5,7 +5,6 @@ large DP-sync byte reduction.
 
   PYTHONPATH=src python examples/train_gpt2_edgc.py
 """
-import jax
 
 from repro.configs.gpt2 import GPT2_FIDELITY
 from repro.core import EDGCConfig, GDSConfig

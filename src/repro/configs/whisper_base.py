@@ -1,5 +1,4 @@
 """Whisper-base — enc-dec, conv frontend stubbed [arXiv:2212.04356]."""
-import dataclasses
 from repro.models.model import ModelConfig
 
 FULL = ModelConfig(

@@ -1,5 +1,4 @@
 """xLSTM-125M — alternating sLSTM + mLSTM blocks [arXiv:2405.04517]."""
-import dataclasses
 from repro.models.model import ModelConfig
 
 FULL = ModelConfig(

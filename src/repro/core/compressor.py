@@ -26,7 +26,6 @@ import re
 from typing import Any, Callable
 
 import jax
-import jax.numpy as jnp
 
 from .powersgd import (
     LowRankState,

@@ -15,7 +15,6 @@ from __future__ import annotations
 import dataclasses
 import math
 
-import numpy as np
 
 from .mp_law import GTable, g_table
 

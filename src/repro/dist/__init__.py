@@ -1,0 +1,34 @@
+"""Distribution substrate: partition rules + DP-sync collectives.
+
+``sharding``    — path-based TP/FSDP partition rules over ("pod", "data",
+                  "model") meshes: params, batches, KV caches.
+``collectives`` — the manual-axis (pod, data) gradient-sync primitives the
+                  EDGC compressor plugs into, plus a shard_map compat shim.
+"""
+from repro.dist.collectives import (
+    dp_sync_grads,
+    dp_world_size,
+    make_dp_pmean,
+    make_dp_psum,
+    shard_map_dp,
+)
+from repro.dist.sharding import (
+    apply_fsdp,
+    batch_pspec,
+    cache_pspecs,
+    param_pspecs,
+    param_shardings,
+)
+
+__all__ = [
+    "apply_fsdp",
+    "batch_pspec",
+    "cache_pspecs",
+    "dp_sync_grads",
+    "dp_world_size",
+    "make_dp_pmean",
+    "make_dp_psum",
+    "param_pspecs",
+    "param_shardings",
+    "shard_map_dp",
+]

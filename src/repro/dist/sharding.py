@@ -1,0 +1,195 @@
+"""Path-based partition rules for ("pod", "data", "model") meshes.
+
+Megatron-style tensor parallelism over the 'model' axis, keyed on the leaf's
+path string (works for both ``jax.tree_util.keystr`` output like
+``['stages'][0]['blocks']['attn']['wq']`` and dotted paths like
+``stages[0].blocks.attn.wq``):
+
+  * column-parallel (shard the OUTPUT dim): wq/wk/wv, mlp up/gate, ssm
+    in_proj / up_x / up_z, lm_head — activations stay sharded into the
+    row-parallel partner, no resharding in between;
+  * row-parallel (shard the INPUT dim): wo, mlp down, ssm out_proj — the
+    all-reduce lands after the matmul, once per block;
+  * expert-parallel: MoE ``experts`` stacks (..., E, d, f) shard the expert
+    dim over 'model' (GShard expert parallelism);
+  * vocab-parallel: token embeddings shard dim 0 (the vocab dim);
+  * replicated: norms, biases, scales, routers, convs, SSM time constants,
+    positional tables — small or routing-noise-sensitive leaves.
+
+Every rule passes through a divisibility guard: a dim that the model-axis
+size does not divide is silently left unsharded (GSPMD would otherwise pad
+or error), so the same rules serve 1x1 host meshes and 2x16x16 pods.
+
+The DATA side: ``batch_pspec`` shards the leading batch dim over the
+("pod", "data") prefix whose size divides the global batch; ``apply_fsdp``
+adds the data axis to large parameter leaves (ZeRO-3 style weight
+sharding) for the memory-bound archs that cannot hold replicated params.
+"""
+from __future__ import annotations
+
+import math
+import re
+from typing import Any
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+__all__ = [
+    "apply_fsdp",
+    "batch_pspec",
+    "cache_pspecs",
+    "param_pspecs",
+    "param_shardings",
+]
+
+# Leaves that stay replicated regardless of shape: norms/biases/scales are
+# 1-D; routers are routing-noise sensitive (DESIGN §4); convs and SSM time
+# constants are depthwise/tiny; positional tables are gathered dynamically.
+_REPLICATED = re.compile(
+    r"norm|bias|scale|router|conv|a_log|\bdt\b|pos", re.IGNORECASE
+)
+# Column-parallel: output dim (last) over 'model'.
+_COLUMN = re.compile(r"\b(wq|wk|wv|up|gate|in_proj|up_x|up_z|lm_head)\b")
+# Row-parallel: input dim (second to last) over 'model'.
+_ROW = re.compile(r"\b(wo|down|out_proj)\b")
+
+
+def _axis_sizes(mesh) -> dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def _dp_prefix(mesh) -> tuple[str, ...]:
+    """The ("pod", "data") axes present on this mesh, pod-major."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _spec_for(path: str, shape: tuple[int, ...], mesh) -> P:
+    """Partition spec for one parameter leaf, with divisibility guards."""
+    sizes = _axis_sizes(mesh)
+    msize = sizes.get("model", 1)
+    ndim = len(shape)
+    if ndim < 2 or "model" not in sizes:
+        return P()
+    if _REPLICATED.search(path):
+        return P()
+
+    entries: list[Any] = [None] * ndim
+
+    def shard(dim: int) -> P:
+        if shape[dim] % msize == 0:
+            entries[dim] = "model"
+        return P(*entries)
+
+    if "experts" in path and ndim >= 3:
+        return shard(ndim - 3)          # (..., E, d, f): expert dim
+    if "embed" in path:
+        return shard(0)                 # (V, d): vocab-parallel
+    if _COLUMN.search(path):
+        return shard(ndim - 1)
+    if _ROW.search(path):
+        return shard(ndim - 2)
+    return P()
+
+
+def param_pspecs(params: Any, mesh) -> Any:
+    """PartitionSpec pytree for a param pytree (TP rules only)."""
+    return jax.tree_util.tree_map_with_path(
+        lambda kp, leaf: _spec_for(
+            jax.tree_util.keystr(kp), tuple(leaf.shape), mesh
+        ),
+        params,
+    )
+
+
+def apply_fsdp(specs: Any, params: Any, mesh, axes,
+               min_size: int = 1 << 20) -> Any:
+    """Add the data axis to big leaves: ZeRO-3 style weight sharding.
+
+    For every leaf with >= ``min_size`` elements whose spec does not already
+    use ``axes``, the first unsharded dim divisible by the axis size picks
+    up the axis. Small leaves stay replicated — sharding them buys nothing
+    and costs an all-gather each step.
+    """
+    axes_t = (axes,) if isinstance(axes, str) else tuple(axes)
+    sizes = _axis_sizes(mesh)
+    n = math.prod(sizes.get(a, 1) for a in axes_t)
+    entry = axes_t[0] if len(axes_t) == 1 else axes_t
+
+    def one(spec: P, leaf) -> P:
+        shape = tuple(leaf.shape)
+        if not axes_t or n <= 1 or leaf.size < min_size:
+            return spec
+        entries = list(spec) + [None] * (len(shape) - len(spec))
+        used = set()
+        for e in entries:
+            used.update(e if isinstance(e, tuple) else (e,))
+        if used.intersection(axes_t):
+            return spec
+        for i, d in enumerate(shape):
+            if entries[i] is None and d % n == 0:
+                entries[i] = entry
+                return P(*entries)
+        return spec
+
+    return jax.tree_util.tree_map(one, specs, params)
+
+
+def param_shardings(params: Any, mesh, fsdp: bool = False) -> Any:
+    """NamedSharding pytree: TP rules, optionally + FSDP over (pod, data)."""
+    specs = param_pspecs(params, mesh)
+    if fsdp:
+        specs = apply_fsdp(specs, params, mesh, _dp_prefix(mesh))
+    return jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s), specs)
+
+
+def _batch_entry(batch_size: int, mesh):
+    """The spec entry for a global-batch dim: the longest ("pod", "data")
+    prefix whose total size divides the batch, pod-major (cross-pod traffic
+    is the scarce resource, so pod splits first)."""
+    sizes = _axis_sizes(mesh)
+    axes = _dp_prefix(mesh)
+    while axes:
+        n = math.prod(sizes[a] for a in axes)
+        if batch_size % n == 0:
+            return axes[0] if len(axes) == 1 else axes
+        axes = axes[:-1]
+    return None
+
+
+def batch_pspec(ndim: int, mesh, batch_size: int) -> P:
+    """Batch-dim-leading spec for an input array of rank ``ndim``."""
+    if ndim == 0:
+        return P()
+    return P(_batch_entry(batch_size, mesh), *([None] * (ndim - 1)))
+
+
+def cache_pspecs(cache: Any, mesh, batch_size: int) -> Any:
+    """Partition specs for a decode-cache pytree.
+
+    KV leaves — ``k``/``v`` of rank >= 4, laid out (..., B, C, Hkv, hd) —
+    shard batch over the data axes and kv-heads over 'model' (they were
+    produced by the column-parallel wk/wv, so this is where the values
+    already live). Everything else (SSM states, conv tails) is batch-major:
+    dim 0 shards over the data axes; scalars (the length counter) stay
+    replicated.
+    """
+    sizes = _axis_sizes(mesh)
+    msize = sizes.get("model", 1)
+    dp_entry = _batch_entry(batch_size, mesh)
+
+    def one(kp, leaf) -> P:
+        shape = tuple(leaf.shape)
+        if not shape:
+            return P()
+        name = str(getattr(kp[-1], "key", getattr(kp[-1], "idx", "")))
+        entries: list[Any] = [None] * len(shape)
+        if name in ("k", "v") and len(shape) >= 4:
+            if shape[len(shape) - 4] == batch_size:
+                entries[len(shape) - 4] = dp_entry
+            if msize > 1 and shape[-2] % msize == 0:
+                entries[-2] = "model"
+        elif shape[0] == batch_size:
+            entries[0] = dp_entry
+        return P(*entries)
+
+    return jax.tree_util.tree_map_with_path(one, cache)

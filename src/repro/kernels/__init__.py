@@ -1,2 +1,4 @@
 """Pallas TPU kernels for EDGC's compression hot-spots (+ jnp oracles)."""
 from . import ops, ref
+
+__all__ = ["ops", "ref"]

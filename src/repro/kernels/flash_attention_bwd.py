@@ -28,7 +28,6 @@ import jax.numpy as jnp
 import jax.experimental.pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from .flash_attention import flash_attention as _flash_fwd_nostats
 
 F32 = jnp.float32
 NEG_INF = -1e30

@@ -140,8 +140,8 @@ def lower_one(arch: str, shape_name: str, mesh, policy: str = "edgc",
 
 
 def _record(compiled, hlo_text: str, pod_size: int = 0) -> dict:
-    from repro.launch.hlo_cost import analyze_hlo
-    ca = compiled.cost_analysis() or {}
+    from repro.launch.hlo_cost import analyze_hlo, xla_cost_analysis
+    ca = xla_cost_analysis(compiled)
     ma = compiled.memory_analysis()
     # loop-scaled walker: cost_analysis counts while bodies ONCE, which
     # undercounts layer-scanned models by their trip counts (hlo_cost.py)

@@ -277,3 +277,16 @@ def analyze_hlo(text: str, pod_size: int = 0) -> dict:
             "collective_bytes": dict(out["coll"]),
             "collective_bytes_cross": cross,
             "collective_bytes_intra": intra}
+
+
+def xla_cost_analysis(compiled) -> dict:
+    """XLA's own (unscaled) cost analysis as a flat dict.
+
+    jaxlib has flipped ``Compiled.cost_analysis()`` between returning a dict
+    and a one-element list of dicts across releases; normalize to a dict so
+    callers can ``.get`` regardless of the installed version.
+    """
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return dict(ca or {})

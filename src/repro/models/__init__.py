@@ -1,2 +1,5 @@
 """Model zoo: functional JAX implementations of the assigned architectures."""
 from .model import Model, ModelConfig, build_model, param_count, active_param_count
+
+__all__ = ["Model", "ModelConfig", "build_model", "param_count",
+           "active_param_count"]

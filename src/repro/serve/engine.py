@@ -11,7 +11,6 @@ On a mesh the cache shards batch over (pod, data) and kv-heads over 'model'
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable
 
 import jax
 import jax.numpy as jnp

@@ -22,8 +22,6 @@ compile cache keyed by CompressionPlan.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
@@ -31,7 +29,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core.compressor import CompressionPlan, sync_grads
 from repro.core.entropy import GDSConfig, grads_entropy
-from repro.dist.collectives import make_dp_pmean
+from repro.dist.collectives import make_dp_pmean, shard_map_dp
 from repro.dist.sharding import batch_pspec, param_shardings
 from repro.launch.mesh import dp_axes
 from repro.models.model import Model
@@ -114,11 +112,11 @@ def make_train_step(model: Model, mesh, cfg: TrainStepConfig):
             "params": P(), "opt_m": P(), "opt_v": P(), "opt_step": P(),
             "comp": P(tuple(axes)),   # per-worker EF/Q, replica dim first
         }
-        step = jax.shard_map(
-            local_step, mesh=mesh,
+        step = shard_map_dp(
+            local_step, mesh,
             in_specs=(state_specs, _batch_specs_manual(axes)),
             out_specs=({**state_specs}, P()),
-            axis_names=set(axes), check_vma=False,
+            manual_axes=axes,
         )
     else:
         step = local_step

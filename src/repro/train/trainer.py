@@ -23,15 +23,20 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core import (
-    EDGCConfig, EDGCController, classify_leaves, init_compressor_state,
-    plan_wire_bytes, resize_compressor_state,
+    EDGCConfig,
+    EDGCController,
+    classify_leaves,
+    init_compressor_state,
+    plan_wire_bytes,
 )
 from repro.models.model import Model
 from repro.optim import adam
 from repro.train import checkpoint as ckpt_mod
 from repro.train.step import (
-    TrainStepConfig, batch_shardings, make_train_step,
-    replicate_comp_state, state_shardings,
+    TrainStepConfig,
+    make_train_step,
+    replicate_comp_state,
+    state_shardings,
 )
 from repro.launch.mesh import dp_axes
 

@@ -1,0 +1,20 @@
+"""Suite-wide fixtures/config.
+
+If the real `hypothesis` is importable (CI installs the `dev` extra) it is
+used untouched; otherwise the deterministic shim in _hypothesis_shim.py is
+registered so the five property-based modules still collect and run in
+hermetic environments that cannot pip-install.
+"""
+import importlib.util
+import os
+
+try:
+    import hypothesis  # noqa: F401
+except ModuleNotFoundError:
+    _spec = importlib.util.spec_from_file_location(
+        "_hypothesis_shim",
+        os.path.join(os.path.dirname(__file__), "_hypothesis_shim.py"),
+    )
+    _mod = importlib.util.module_from_spec(_spec)
+    _spec.loader.exec_module(_mod)
+    _mod.install()

@@ -1,0 +1,111 @@
+"""repro.dist.collectives: DP pmean/psum semantics and their composition
+with dp_axes/batch_pspec on pod-shaped meshes.
+
+The multi-device half runs in a subprocess (jax locks the device count at
+first init, same pattern as test_distributed.py) but stays un-`slow`: it is
+one tiny shard_map, not a train step.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+from repro.dist.collectives import dp_world_size, make_dp_pmean, make_dp_psum
+from repro.dist.sharding import batch_pspec
+from repro.launch.mesh import dp_axes
+
+
+class PodMesh:
+    axis_names = ("pod", "data", "model")
+
+    class devices:
+        shape = (2, 16, 16)
+
+
+class FlatMesh:
+    axis_names = ("data", "model")
+
+    class devices:
+        shape = (4, 2)
+
+
+def test_empty_axes_is_identity():
+    tree = {"a": 1.0, "b": [2.0, 3.0]}
+    assert make_dp_pmean(())(tree) is tree
+    assert make_dp_psum(())(tree) is tree
+
+
+def test_dp_world_size():
+    assert dp_world_size(PodMesh) == 32
+    assert dp_world_size(FlatMesh) == 4
+
+
+def test_dp_axes_batch_pspec_composition():
+    """batch_pspec shards over a pod-major PREFIX of dp_axes, never more."""
+    assert dp_axes(PodMesh) == ("pod", "data")
+    assert dp_axes(FlatMesh) == ("data",)
+
+    # divisible by the full dp product (32): both axes, pod-major
+    full = batch_pspec(3, PodMesh, batch_size=64)
+    assert full[0] == ("pod", "data")
+    assert tuple(full)[1:] == (None, None)
+    # divisible by pod (2) only: the prefix stops at pod
+    assert batch_pspec(2, PodMesh, batch_size=6)[0] in ("pod", ("pod",))
+    # divisible by nothing: replicated batch dim
+    assert batch_pspec(2, PodMesh, batch_size=3)[0] is None
+    # every sharded axis must come from dp_axes (never 'model')
+    for b in (1, 2, 3, 6, 32, 64):
+        entry = batch_pspec(4, PodMesh, batch_size=b)[0]
+        used = entry if isinstance(entry, tuple) else (entry,)
+        assert set(used) - {None} <= set(dp_axes(PodMesh))
+
+
+_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, jax.numpy as jnp
+    import numpy as np
+    from jax.sharding import PartitionSpec as P
+
+    from repro.dist.collectives import make_dp_pmean, make_dp_psum, shard_map_dp
+    from repro.launch.mesh import dp_axes, make_host_mesh
+
+    mesh = make_host_mesh(data=4, model=1, pod=2)   # (pod, data, model)
+    axes = dp_axes(mesh)
+    assert axes == ("pod", "data")
+
+    pmean = make_dp_pmean(axes)
+    psum = make_dp_psum(axes)
+
+    def body(x, y):
+        return pmean(x), pmean(x + y), psum(x)
+
+    f = shard_map_dp(body, mesh,
+                     in_specs=(P(axes), P(axes)),
+                     out_specs=(P(), P(), P()),
+                     manual_axes=axes)
+    x = jnp.arange(16.0).reshape(8, 2)
+    y = jnp.linspace(-1.0, 1.0, 16).reshape(8, 2)
+    mx, mxy, sx = jax.jit(f)(x, y)
+
+    # pmean over all 8 workers == column mean of the global batch
+    np.testing.assert_allclose(np.asarray(mx), np.asarray(x).mean(0, keepdims=True),
+                               rtol=1e-6)
+    # linearity: pmean(x + y) == pmean(x) + pmean(y)
+    my = jax.jit(shard_map_dp(pmean, mesh, in_specs=P(axes), out_specs=P(),
+                              manual_axes=axes))(y)
+    np.testing.assert_allclose(np.asarray(mxy), np.asarray(mx) + np.asarray(my),
+                               rtol=1e-6)
+    # psum == world_size * pmean
+    np.testing.assert_allclose(np.asarray(sx), 8 * np.asarray(mx), rtol=1e-6)
+    print("COLLECTIVES_OK")
+""")
+
+
+def test_dp_pmean_linearity_subprocess():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    proc = subprocess.run([sys.executable, "-c", _SCRIPT], env=env,
+                          capture_output=True, text=True, timeout=600,
+                          cwd=os.path.dirname(os.path.dirname(__file__)))
+    assert "COLLECTIVES_OK" in proc.stdout, proc.stderr[-3000:]

@@ -1,6 +1,5 @@
 """EDGCController invariants under arbitrary entropy trajectories."""
 import numpy as np
-import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core import EDGCConfig, EDGCController, GDSConfig, LeafInfo

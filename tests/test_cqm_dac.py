@@ -1,5 +1,4 @@
 """CQM control law + DAC algorithms 1 & 2 + controller transitions."""
-import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 

@@ -1,7 +1,6 @@
 """GDS entropy estimators: Lemma 2, histogram, sampling, properties."""
 import math
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

@@ -3,7 +3,7 @@ import jax
 import jax.numpy as jnp
 import pytest
 
-from repro.launch.hlo_cost import analyze_hlo, parse_hlo
+from repro.launch.hlo_cost import analyze_hlo, parse_hlo, xla_cost_analysis
 
 
 def _compile(f, *specs):
@@ -28,7 +28,7 @@ def test_scan_trip_count_scaling():
     r = analyze_hlo(c.as_text())
     assert r["flops"] == pytest.approx(2 * 128 * 256 * 256 * 21, rel=0.01)
     # XLA's own analysis counts the body once — the walker must beat it
-    assert r["flops"] > (c.cost_analysis() or {}).get("flops", 0) * 10
+    assert r["flops"] > xla_cost_analysis(c).get("flops", 0) * 10
 
 
 def test_nested_scan():

@@ -11,7 +11,6 @@ from hypothesis import given, settings, strategies as st
 
 from repro.kernels import ops, ref
 from repro.kernels import lowrank as lr
-from repro.kernels import entropy_hist as eh
 
 SHAPES = [(128, 128), (256, 512), (512, 256), (384, 640), (1024, 128)]
 DTYPES = [jnp.float32, jnp.bfloat16]

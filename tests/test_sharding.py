@@ -1,7 +1,5 @@
 """Partition rules, batch/cache specs, FSDP application, HLO collective parser."""
 import jax
-import jax.numpy as jnp
-import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
 

@@ -12,8 +12,6 @@ import numpy as np
 import pytest
 
 from repro.configs import ARCHS, get_config
-from repro.core import EDGCConfig, GDSConfig
-from repro.core.dac import DACConfig
 from repro.data.pipeline import add_modality_stubs
 from repro.models.model import build_model
 from repro.optim import adam

@@ -1,14 +1,12 @@
 """End-to-end system behaviour: training convergence, policy equivalence,
 plan transitions, distributed-step parity, checkpointing, serving.
 """
-import os
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs.gpt2 import GPT2_FIDELITY
 from repro.core import (
     EDGCConfig, GDSConfig, classify_leaves, init_compressor_state, make_plan,
     plan_wire_bytes, sync_grads,
