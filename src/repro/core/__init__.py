@@ -1,4 +1,5 @@
 """EDGC core: entropy-driven dynamic gradient compression (the paper's contribution)."""
+from .bucketing import BucketLayout, make_bucket_layout
 from .comm_model import CommModel, HardwareSpec, TPU_V5E, rank_bounds
 from .compressor import (
     CompressionPlan,
@@ -14,11 +15,18 @@ from .compressor import (
 from .controller import EDGCConfig, EDGCController
 from .cqm import CQM, rank_from_entropy_delta, theoretical_error
 from .dac import DAC, DACConfig, stage_aligned_ranks, window_rank_adjust
-from .entropy import GDSConfig, gaussian_entropy, grads_entropy, histogram_entropy
+from .entropy import (
+    GDSConfig,
+    gaussian_entropy,
+    grads_entropy,
+    grads_entropy_per_leaf,
+    histogram_entropy,
+)
 from .mp_law import GTable, g_table, mp_cdf, mp_support, sample_eigenvalues
 from .powersgd import LowRankState, compress_leaf, gram_schmidt, init_leaf_state
 
 __all__ = [
+    "BucketLayout", "make_bucket_layout",
     "CommModel", "HardwareSpec", "TPU_V5E", "rank_bounds",
     "CompressionPlan", "LeafInfo", "NO_COMPRESSION", "classify_leaves",
     "init_compressor_state", "make_plan", "plan_wire_bytes",
@@ -26,7 +34,8 @@ __all__ = [
     "EDGCConfig", "EDGCController",
     "CQM", "rank_from_entropy_delta", "theoretical_error",
     "DAC", "DACConfig", "stage_aligned_ranks", "window_rank_adjust",
-    "GDSConfig", "gaussian_entropy", "grads_entropy", "histogram_entropy",
+    "GDSConfig", "gaussian_entropy", "grads_entropy",
+    "grads_entropy_per_leaf", "histogram_entropy",
     "GTable", "g_table", "mp_cdf", "mp_support", "sample_eigenvalues",
     "LowRankState", "compress_leaf", "gram_schmidt", "init_leaf_state",
 ]

@@ -1,0 +1,306 @@
+"""Bucketed DP gradient sync: shape-grouped stacked compression + flat buckets.
+
+The per-leaf ``sync_grads`` loop issues one collective per uncompressed leaf
+and two per compressed leaf — O(num_leaves) tiny all-reduces per step, each
+paying full launch latency (TAGC, L-GreCo: fusing layers into communication
+buckets is what turns theoretical compression ratios into wall-clock wins).
+This module collapses that to O(num_shape_groups + num_buckets):
+
+  * **Shape groups** — compressed leaves sharing a matricized shape ``(m, n)``
+    and plan rank ``r`` are stacked into one ``(E, m, n)`` batch. One vmapped
+    PowerSGD round (the existing 3-D path in ``powersgd.py``) syncs the whole
+    group with exactly two stacked-factor collectives. Transformer stacks are
+    the best case: every attention projection of every layer lands in one
+    group.
+  * **Flat buckets** — uncompressed / ineligible leaves are packed in tree
+    order into size-capped buckets (default 32 MiB); each bucket moves
+    through a single collective and is sliced back apart.
+
+The :class:`BucketLayout` is derived *statically* from the leaf shapes and
+the :class:`~repro.core.compressor.CompressionPlan` — it is a hashable frozen
+dataclass, a pure function of (shapes, plan, cap), so the same layout falls
+out at trace time inside the jitted step, at init time on the host, and at
+DAC window re-plans; it composes with the trainer's plan-keyed compile cache
+without being threaded through as an extra static argument.
+
+Stacked compressor state lives in fp32 under group keys (``group:MxN:r``);
+``stack_state``/``unstack_state`` convert to/from the per-leaf format, which
+remains the parity oracle (``sync_grads(..., bucketed=False)``).
+
+Dtypes: each bucket moves in the widest dtype among its members (uniform
+bf16 trees sync in bf16, exactly the bytes and rounding of the per-leaf
+psums; only mixed-dtype buckets upcast the narrower members), so
+``plan_wire_bytes`` accounting holds for the bucketed executor too.
+Stacked compressor state is fp32 — compression internals are fp32 in both
+executors, but the stacked EF residual costs 2x the per-leaf bf16 one.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Iterable
+
+import jax
+import jax.numpy as jnp
+
+from .powersgd import LowRankState, compress_leaf, init_leaf_state, resize_rank
+
+__all__ = [
+    "DEFAULT_BUCKET_BYTES",
+    "ShapeGroup",
+    "FlatBucket",
+    "BucketLayout",
+    "make_bucket_layout",
+    "layout_for_tree",
+    "is_stacked_state",
+    "stack_state",
+    "unstack_state",
+    "resize_stacked_state",
+    "bucketed_sync_grads",
+]
+
+PsumFn = Callable[[jax.Array], jax.Array]
+
+DEFAULT_BUCKET_BYTES = 32 << 20     # 32 MiB of fp32 per flat bucket
+GROUP_PREFIX = "group:"             # stacked-state dict keys start with this
+
+Member = tuple[str, tuple[int, ...]]    # (leaf path, original leaf shape)
+
+
+def _batch_of(shape: tuple[int, ...]) -> int:
+    """Number of (m, n) slices a leaf contributes to its group's stack."""
+    return math.prod(shape[:-2]) if len(shape) > 2 else 1
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeGroup:
+    """All compressed leaves sharing matricized shape (m, n) and rank."""
+
+    m: int
+    n: int
+    rank: int
+    members: tuple[Member, ...]     # stack order = tree-flatten order
+
+    @property
+    def key(self) -> str:
+        return f"{GROUP_PREFIX}{self.m}x{self.n}:r{self.rank}"
+
+    @property
+    def stack_size(self) -> int:
+        return sum(_batch_of(shape) for _, shape in self.members)
+
+
+@dataclasses.dataclass(frozen=True)
+class FlatBucket:
+    """Uncompressed leaves packed into one flat fp32 all-reduce."""
+
+    members: tuple[Member, ...]
+
+    @property
+    def num_elements(self) -> int:
+        return sum(math.prod(shape) for _, shape in self.members)
+
+
+@dataclasses.dataclass(frozen=True)
+class BucketLayout:
+    """Static, hashable sync schedule: stacked groups + flat buckets."""
+
+    groups: tuple[ShapeGroup, ...]
+    buckets: tuple[FlatBucket, ...]
+
+    def num_collectives(self) -> int:
+        """Collectives per step: two factor psums per group, one per bucket."""
+        return 2 * len(self.groups) + len(self.buckets)
+
+
+def make_bucket_layout(
+    leaves: Iterable[Any],
+    plan,
+    bucket_bytes: int = DEFAULT_BUCKET_BYTES,
+) -> BucketLayout:
+    """Derive the bucketed sync schedule from leaf shapes and a plan.
+
+    ``leaves`` is a sequence of ``LeafInfo`` (``.path``/``.shape``) or plain
+    ``(path, shape)`` pairs, in pytree-flatten order — the order fixes both
+    the stack order inside each group and the bucket packing, so host-side
+    and trace-time derivations agree exactly.
+    """
+    pairs: list[Member] = []
+    for leaf in leaves:
+        if isinstance(leaf, tuple):
+            path, shape = leaf
+        else:
+            path, shape = leaf.path, leaf.shape
+        pairs.append((path, tuple(shape)))
+
+    rank_by_path = plan.as_dict()
+    grouped: dict[tuple[int, int, int], list[Member]] = {}
+    buckets: list[FlatBucket] = []
+    pending: list[Member] = []
+    pending_elems = 0
+    cap_elems = max(1, bucket_bytes // 4)   # cap assumes 4 B/elem (widest)
+
+    for path, shape in pairs:
+        if path in rank_by_path:
+            m, n = shape[-2:]
+            grouped.setdefault((m, n, rank_by_path[path]), []).append((path, shape))
+        else:
+            nelem = math.prod(shape) if shape else 1
+            if pending and pending_elems + nelem > cap_elems:
+                buckets.append(FlatBucket(members=tuple(pending)))
+                pending, pending_elems = [], 0
+            pending.append((path, shape))
+            pending_elems += nelem
+    if pending:
+        buckets.append(FlatBucket(members=tuple(pending)))
+
+    groups = tuple(
+        ShapeGroup(m=m, n=n, rank=r, members=tuple(members))
+        for (m, n, r), members in grouped.items()   # first-appearance order
+    )
+    return BucketLayout(groups=groups, buckets=tuple(buckets))
+
+
+def layout_for_tree(tree: Any, plan,
+                    bucket_bytes: int = DEFAULT_BUCKET_BYTES) -> BucketLayout:
+    """Layout from a (gradient/param) pytree — shapes are static at trace."""
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    return make_bucket_layout(
+        [(jax.tree_util.keystr(kp), tuple(leaf.shape)) for kp, leaf in flat],
+        plan, bucket_bytes,
+    )
+
+
+def is_stacked_state(state: dict) -> bool:
+    """True iff ``state`` is keyed by shape groups rather than leaf paths."""
+    return any(k.startswith(GROUP_PREFIX) for k in state)
+
+
+def bucketing_supported(mesh) -> bool:
+    """Whether the bucketed executor is appropriate for this mesh.
+
+    Only TP=1: stacked group state mixes leaves with different TP specs in
+    one array, so its EF residual must be replicated over 'model' — and a
+    replicated EF forces XLA to all-gather the TP-sharded gradient to add
+    it (train/step.py::state_shardings). Trainer and launch/dryrun both
+    consult this so the dry-run lowers exactly what production runs.
+    """
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return sizes.get("model", 1) == 1
+
+
+# ------------------------------------------------------------ state plumbing
+def stack_state(per_leaf: dict[str, LowRankState],
+                layout: BucketLayout) -> dict[str, LowRankState]:
+    """Per-leaf states -> one fp32 (E, ., .) LowRankState per shape group."""
+    stacked: dict[str, LowRankState] = {}
+    for group in layout.groups:
+        qs, errs = [], []
+        for path, shape in group.members:
+            st = per_leaf[path]
+            qs.append(st.q.astype(jnp.float32).reshape(-1, group.n, st.q.shape[-1]))
+            errs.append(st.err.astype(jnp.float32).reshape(-1, group.m, group.n))
+        stacked[group.key] = LowRankState(
+            q=jnp.concatenate(qs, axis=0), err=jnp.concatenate(errs, axis=0)
+        )
+    return stacked
+
+
+def unstack_state(stacked: dict[str, LowRankState],
+                  layout: BucketLayout) -> dict[str, LowRankState]:
+    """Inverse of :func:`stack_state` (per-leaf states come back in fp32)."""
+    per_leaf: dict[str, LowRankState] = {}
+    for group in layout.groups:
+        st = stacked[group.key]
+        rank = st.q.shape[-1]
+        offset = 0
+        for path, shape in group.members:
+            e = _batch_of(shape)
+            q = st.q[offset:offset + e]
+            err = st.err[offset:offset + e].reshape(shape)
+            q = q[0] if len(shape) == 2 else q.reshape(shape[:-2] + (group.n, rank))
+            per_leaf[path] = LowRankState(q=q, err=err)
+            offset += e
+    return per_leaf
+
+
+def resize_stacked_state(
+    stacked: dict[str, LowRankState],
+    old_layout: BucketLayout,
+    new_layout: BucketLayout,
+    key: jax.Array,
+) -> dict[str, LowRankState]:
+    """Migrate stacked state across a DAC re-plan (window boundary).
+
+    Previously-compressed leaves keep their warm-start Q (leading columns on
+    shrink, fresh random tail columns on grow) and their EF residual; leaves
+    entering compression get a fresh ``init_leaf_state``.
+    """
+    per_leaf = unstack_state(stacked, old_layout)
+    new_per_leaf: dict[str, LowRankState] = {}
+    i = 0
+    for group in new_layout.groups:
+        for path, shape in group.members:
+            subkey = jax.random.fold_in(key, i)
+            i += 1
+            if path in per_leaf:
+                new_per_leaf[path] = resize_rank(per_leaf[path], group.rank, subkey)
+            else:
+                new_per_leaf[path] = init_leaf_state(shape, group.rank, subkey,
+                                                     jnp.float32)
+    return stack_state(new_per_leaf, new_layout)
+
+
+# ------------------------------------------------------------- sync executor
+def bucketed_sync_grads(
+    grads: Any,
+    comp_state: dict[str, LowRankState],
+    layout: BucketLayout,
+    psum_mean: PsumFn,
+    use_kernels: bool = False,
+) -> tuple[Any, dict[str, LowRankState]]:
+    """Execute the bucketed schedule: 2 psums per group, 1 per flat bucket.
+
+    Numerically matches the per-leaf loop to fp32 tolerance (same PowerSGD
+    math, batched; flat buckets are an elementwise-identical mean).
+    """
+    flat, treedef = jax.tree_util.tree_flatten_with_path(grads)
+    by_path = {jax.tree_util.keystr(kp): g for kp, g in flat}
+    out: dict[str, jax.Array] = {}
+    new_state = dict(comp_state)
+
+    for group in layout.groups:
+        stack = jnp.concatenate(
+            [by_path[path].astype(jnp.float32).reshape(-1, group.m, group.n)
+             for path, _ in group.members],
+            axis=0,
+        )
+        g_hat, st = compress_leaf(stack, comp_state[group.key], psum_mean,
+                                  use_kernels=use_kernels)
+        new_state[group.key] = st
+        offset = 0
+        for path, shape in group.members:
+            e = _batch_of(shape)
+            out[path] = (g_hat[offset:offset + e]
+                         .reshape(shape).astype(by_path[path].dtype))
+            offset += e
+
+    for bucket in layout.buckets:
+        # widest member dtype: uniform trees keep their native wire dtype
+        # (byte/rounding parity with per-leaf psums); mixed buckets upcast
+        wire_dtype = jnp.result_type(
+            *[by_path[path].dtype for path, _ in bucket.members])
+        packed = jnp.concatenate(
+            [by_path[path].astype(wire_dtype).reshape(-1)
+             for path, _ in bucket.members]
+        )
+        packed = psum_mean(packed)
+        offset = 0
+        for path, shape in bucket.members:
+            nelem = math.prod(shape) if shape else 1
+            out[path] = (packed[offset:offset + nelem]
+                         .reshape(shape).astype(by_path[path].dtype))
+            offset += nelem
+
+    out_leaves = [out[jax.tree_util.keystr(kp)] for kp, _ in flat]
+    return jax.tree_util.tree_unflatten(treedef, out_leaves), new_state

@@ -22,11 +22,14 @@ reallocation cost; here, the recompile).
 from __future__ import annotations
 
 import dataclasses
+import functools
 import re
 from typing import Any, Callable
 
 import jax
 
+from . import bucketing
+from .bucketing import BucketLayout
 from .powersgd import (
     LowRankState,
     compress_leaf,
@@ -118,14 +121,17 @@ class CompressionPlan:
 
     ranks: tuple[tuple[str, int], ...]
 
+    @functools.cached_property
+    def _rank_map(self) -> dict[str, int]:
+        # rank_of is called per leaf per trace; the dict makes it O(1) while
+        # hashing/eq still go through the ``ranks`` tuple field only.
+        return dict(self.ranks)
+
     def rank_of(self, path: str) -> int | None:
-        for p, r in self.ranks:
-            if p == path:
-                return r
-        return None
+        return self._rank_map.get(path)
 
     def as_dict(self) -> dict[str, int]:
-        return dict(self.ranks)
+        return dict(self._rank_map)
 
 
 NO_COMPRESSION = CompressionPlan(ranks=())
@@ -169,9 +175,17 @@ def _leaves_by_path(tree: Any) -> dict[str, jax.Array]:
 
 
 def init_compressor_state(
-    params: Any, plan: CompressionPlan, key: jax.Array
+    params: Any, plan: CompressionPlan, key: jax.Array, *,
+    layout: BucketLayout | None = None,
 ) -> dict[str, LowRankState]:
-    """One LowRankState per compressed leaf, keyed by path string."""
+    """Compressor state for a plan.
+
+    Default: one LowRankState per compressed leaf, keyed by path string (the
+    per-leaf parity oracle). With a ``layout``, the same per-leaf warm starts
+    are stacked into one fp32 state per shape group, keyed by group — the
+    format the bucketed executor consumes. Identical Q values either way, so
+    the two formats start bit-equivalent.
+    """
     by_path = _leaves_by_path(params)
     state: dict[str, LowRankState] = {}
     for i, (path, rank) in enumerate(plan.ranks):
@@ -179,13 +193,26 @@ def init_compressor_state(
         state[path] = init_leaf_state(
             tuple(leaf.shape), rank, jax.random.fold_in(key, i), leaf.dtype
         )
-    return state
+    if layout is None:
+        return state
+    return bucketing.stack_state(state, layout)
 
 
 def resize_compressor_state(
-    state: dict[str, LowRankState], plan: CompressionPlan, key: jax.Array
+    state: dict[str, LowRankState], plan: CompressionPlan, key: jax.Array, *,
+    old_layout: BucketLayout | None = None,
+    new_layout: BucketLayout | None = None,
 ) -> dict[str, LowRankState]:
-    """Migrate warm-start Q / EF buffers when DAC changes ranks or leaves."""
+    """Migrate warm-start Q / EF buffers when DAC changes ranks or leaves.
+
+    Stacked (group-keyed) states pass the layouts they were/will be packed
+    under; per-leaf states keep the legacy path-keyed resize.
+    """
+    if old_layout is not None or bucketing.is_stacked_state(state):
+        if old_layout is None or new_layout is None:
+            raise ValueError("stacked compressor state needs old_layout and "
+                             "new_layout to resize")
+        return bucketing.resize_stacked_state(state, old_layout, new_layout, key)
     new_state: dict[str, LowRankState] = {}
     for i, (path, rank) in enumerate(plan.ranks):
         if path in state:
@@ -201,13 +228,32 @@ def sync_grads(
     plan: CompressionPlan,
     psum_mean: PsumFn,
     use_kernels: bool = False,
+    bucketed: bool | None = None,
+    bucket_bytes: int = bucketing.DEFAULT_BUCKET_BYTES,
 ) -> tuple[Any, dict[str, LowRankState]]:
     """Data-parallel gradient synchronization under a compression plan.
 
     Runs inside the (manual pod+data) shard_map region of the train step.
-    Compressed leaves: PowerSGD factor psums + error feedback. Others: plain
-    psum-mean. Returns (synced grads, new compressor state).
+    Two executors share this entry point:
+
+      * ``bucketed=False`` — the per-leaf loop (parity oracle): PowerSGD
+        factor psums + error feedback per compressed leaf, one plain
+        psum-mean per remaining leaf — O(num_leaves) collectives.
+      * ``bucketed=True``  — the bucketed schedule (core/bucketing.py):
+        shape-grouped stacked compression + flat fp32 buckets —
+        O(num_shape_groups + num_buckets) collectives. Requires stacked
+        (group-keyed) ``comp_state``; the layout is re-derived here from the
+        static leaf shapes + plan, so it always matches the state's packing.
+
+    ``bucketed=None`` infers the executor from the state format. Returns
+    (synced grads, new compressor state).
     """
+    if bucketed is None:
+        bucketed = bucketing.is_stacked_state(comp_state)
+    if bucketed:
+        layout = bucketing.layout_for_tree(grads, plan, bucket_bytes)
+        return bucketing.bucketed_sync_grads(grads, comp_state, layout,
+                                             psum_mean, use_kernels=use_kernels)
     rank_by_path = plan.as_dict()
     flat, treedef = jax.tree_util.tree_flatten_with_path(grads)
     out_leaves = []

@@ -109,11 +109,32 @@ def _leaf_entropy(leaf: jax.Array, cfg: GDSConfig) -> tuple[jax.Array, jax.Array
 
 @partial(jax.jit, static_argnames=("cfg",))
 def grads_entropy(grads, cfg: GDSConfig = GDSConfig()) -> jax.Array:
-    """Size-weighted mean entropy over all leaves of a gradient pytree.
+    """Entropy of the pooled beta-sample over all leaves of a gradient pytree.
 
     This is GDS's per-iteration measurement: beta-sampled, on-device, one
-    scalar out. The alpha gate (whether to call it at all this iteration)
-    lives in the host-side controller.
+    scalar out. Single-pass: the per-leaf strided samples are concatenated
+    and the estimator runs ONCE over the pooled sample — one mean/std
+    reduction instead of 2x num_leaves tiny reductions (the per-leaf
+    variant below remains for the per-stage API). The alpha gate (whether
+    to call it at all this iteration) lives in the host-side controller.
+    """
+    leaves = [l for l in jax.tree_util.tree_leaves(grads) if l.size > 16]
+    pooled = jnp.concatenate(
+        [strided_sample(l, cfg.beta).astype(jnp.float32) for l in leaves]
+    )
+    if cfg.estimator == "histogram":
+        return histogram_entropy(pooled, cfg.num_bins)
+    return gaussian_entropy(pooled)
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def grads_entropy_per_leaf(grads, cfg: GDSConfig = GDSConfig()) -> jax.Array:
+    """Size-weighted mean of per-leaf entropies (the per-stage estimator).
+
+    Weighting per-leaf entropies keeps each stage's layers comparable even
+    when their gradient scales differ, which is what the per-stage DAC
+    readings want; the pooled single-pass ``grads_entropy`` is the cheap
+    whole-model measurement used inside the train step.
     """
     leaves = [l for l in jax.tree_util.tree_leaves(grads) if l.size > 16]
     hs, ws = zip(*(_leaf_entropy(l, cfg) for l in leaves))
@@ -124,13 +145,18 @@ def grads_entropy(grads, cfg: GDSConfig = GDSConfig()) -> jax.Array:
 
 def grads_entropy_per_group(grads_by_group: Iterable, cfg: GDSConfig = GDSConfig()):
     """Entropy per (pipeline-stage) group — list of pytrees -> list of scalars."""
-    return [grads_entropy(g, cfg) for g in grads_by_group]
+    return [grads_entropy_per_leaf(g, cfg) for g in grads_by_group]
 
 
 def grad_std(grads) -> jax.Array:
-    """Global std of a gradient pytree (used by Obs. 2 reproduction)."""
+    """Global std of a gradient pytree (used by Obs. 2 reproduction).
+
+    One sweep per leaf via var = E[x^2] - E[x]^2 (the two-pass version read
+    every leaf twice: once for the mean, once for the deviations).
+    """
     leaves = jax.tree_util.tree_leaves(grads)
     total = sum(l.size for l in leaves)
-    mean = sum(jnp.sum(l.astype(jnp.float32)) for l in leaves) / total
-    var = sum(jnp.sum((l.astype(jnp.float32) - mean) ** 2) for l in leaves) / total
-    return jnp.sqrt(var)
+    s1 = sum(jnp.sum(l.astype(jnp.float32)) for l in leaves)
+    s2 = sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves)
+    mean = s1 / total
+    return jnp.sqrt(jnp.maximum(s2 / total - mean * mean, 0.0))

@@ -162,6 +162,18 @@ def compress_leaf(
     if grad.ndim == 2:
         return _compress_2d(grad, state, psum_mean, use_kernels)
     if grad.ndim == 3:
+        if use_kernels:
+            # Batched Pallas path: grid-over-E kernels with the EF add fused
+            # into each stacked-gradient sweep (kernels/lowrank.py).
+            from repro.kernels import ops as kops
+            p = kops.lowrank_p3(grad, state.err, state.q)     # (E, m, r)
+            p = psum_mean(p)                                  # DP collective #1
+            p_hat = kops.orthonormalize3(p)
+            q_new = kops.lowrank_q3(grad, state.err, p_hat)   # (E, n, r)
+            q_new = psum_mean(q_new)                          # DP collective #2
+            g_hat, err = kops.decompress_residual3(p_hat, q_new, grad, state.err)
+            return g_hat.astype(grad.dtype), LowRankState(
+                q=q_new, err=err.astype(grad.dtype))
         # vmap the matmuls/orthonormalization; do the collective on the stack.
         def _local(m_mat, q):
             p = m_mat @ q

@@ -66,14 +66,19 @@ def make_dp_psum(axes) -> Callable[[Any], Any]:
 
 
 def dp_sync_grads(grads: Any, comp_state: dict, plan: CompressionPlan,
-                  axes, use_kernels: bool = False) -> tuple[Any, dict]:
+                  axes, use_kernels: bool = False,
+                  bucketed: bool | None = None) -> tuple[Any, dict]:
     """Compression-aware DP gradient sync over the manual ``axes``.
 
     Compressed leaves move rank-r factors through the pmean (with error
-    feedback); the rest move in full. Returns (synced grads, new state).
+    feedback); the rest move in full. ``bucketed`` picks the executor
+    (None = infer from the state format): the per-leaf loop, or the
+    shape-grouped stacked + flat-bucket schedule from core/bucketing.py
+    that collapses O(num_leaves) collectives to O(groups + buckets).
+    Returns (synced grads, new state).
     """
     return sync_grads(grads, comp_state, plan, make_dp_pmean(axes),
-                      use_kernels=use_kernels)
+                      use_kernels=use_kernels, bucketed=bucketed)
 
 
 def shard_map_dp(f, mesh, in_specs, out_specs, manual_axes,

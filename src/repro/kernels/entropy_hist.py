@@ -41,10 +41,10 @@ def hist_counts(x, lo, inv_width, *, num_bins: int = 256, bx: int = 2048,
     bx = min(bx, n)
     pad = (-n) % bx
     if pad:
-        # pad with lo - 1/inv_width (clips into bin 0); subtracted after
-        x = jnp.concatenate([x, jnp.full((pad,), jnp.nan, x.dtype)], 0)
-        # NaN would poison; use a sentinel far below lo and fix bin 0 after
-        x = x.at[n:].set(lo - 1e6)
+        # pad with a sentinel far below lo: every padded element clips into
+        # bin 0, and the pad count is subtracted back out of bin 0 below
+        sentinel = jnp.full((pad,), lo - 1e6, x.dtype)
+        x = jnp.concatenate([x, sentinel], 0)
     scal = jnp.stack([lo, inv_width]).reshape(1, 2).astype(F32)
     counts = pl.pallas_call(
         functools.partial(_hist_kernel, num_bins=num_bins),

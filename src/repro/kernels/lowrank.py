@@ -167,3 +167,134 @@ def gram_schmidt_panel(p, *, eps: float = 1e-8, interpret: bool = True):
         out_shape=jax.ShapeDtypeStruct((m, r), F32),
         interpret=interpret,
     )(p)
+
+
+# -------------------------------------------------- batched (E, m, n) stacks
+# Entry points for the bucketed sync executor (core/bucketing.py): a shape
+# group stacks E same-shaped gradients, and the grid grows a leading E axis
+# so one kernel launch sweeps the whole stack. Block shapes keep a leading 1
+# on the stack axis; the VMEM working set per program is identical to the
+# 2-D kernels'.
+
+def _p3_kernel(g_ref, e_ref, q_ref, o_ref):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+    m_blk = g_ref[0].astype(F32) + e_ref[0].astype(F32)   # fused EF add
+    o_ref[0] += jnp.dot(m_blk, q_ref[0].astype(F32),
+                        preferred_element_type=F32)
+
+
+def ef_lowrank_p_batched(grad, err, q, *, bm: int = 256, bn: int = 512,
+                         interpret: bool = True):
+    """P[e] = (grad[e] + err[e]) @ q[e].  (E, m, n) x (E, n, r) -> (E, m, r)."""
+    num_e, m, n = grad.shape
+    r = q.shape[-1]
+    bm, bn = _tile(m, bm), _tile(n, bn)
+    grid = (num_e, m // bm, n // bn)    # accumulate over j (fastest axis)
+    return pl.pallas_call(
+        _p3_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bm, bn), lambda b, i, j: (b, i, j)),
+            pl.BlockSpec((1, bm, bn), lambda b, i, j: (b, i, j)),
+            pl.BlockSpec((1, bn, r), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bm, r), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((num_e, m, r), F32),
+        interpret=interpret,
+    )(grad, err, q)
+
+
+def _q3_kernel(g_ref, e_ref, p_ref, o_ref):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+    m_blk = g_ref[0].astype(F32) + e_ref[0].astype(F32)
+    o_ref[0] += jnp.dot(m_blk.T, p_ref[0].astype(F32),
+                        preferred_element_type=F32)
+
+
+def ef_lowrank_q_batched(grad, err, p_hat, *, bm: int = 512, bn: int = 256,
+                         interpret: bool = True):
+    """Q[e] = (grad[e] + err[e])^T @ p_hat[e].  -> (E, n, r)."""
+    num_e, m, n = grad.shape
+    r = p_hat.shape[-1]
+    bm, bn = _tile(m, bm), _tile(n, bn)
+    grid = (num_e, n // bn, m // bm)    # accumulate over m (fastest axis)
+    return pl.pallas_call(
+        _q3_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bm, bn), lambda b, j, i: (b, i, j)),
+            pl.BlockSpec((1, bm, bn), lambda b, j, i: (b, i, j)),
+            pl.BlockSpec((1, bm, r), lambda b, j, i: (b, i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bn, r), lambda b, j, i: (b, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((num_e, n, r), F32),
+        interpret=interpret,
+    )(grad, err, p_hat)
+
+
+def _dec3_kernel(p_ref, q_ref, g_ref, e_ref, ghat_ref, newerr_ref):
+    g_hat = jnp.dot(p_ref[0].astype(F32), q_ref[0].astype(F32).T,
+                    preferred_element_type=F32)
+    ghat_ref[0] = g_hat.astype(ghat_ref.dtype)
+    m_blk = g_ref[0].astype(F32) + e_ref[0].astype(F32)
+    newerr_ref[0] = (m_blk - g_hat).astype(newerr_ref.dtype)
+
+
+def decompress_residual_batched(p_hat, q, grad, err, *, bm: int = 256,
+                                bn: int = 512, interpret: bool = True):
+    """(g_hat, new_err) both (E, m, n); one pass, no accumulation axis."""
+    num_e, m, n = grad.shape
+    r = q.shape[-1]
+    bm, bn = _tile(m, bm), _tile(n, bn)
+    grid = (num_e, m // bm, n // bn)
+    return pl.pallas_call(
+        _dec3_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bm, r), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bn, r), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bm, bn), lambda b, i, j: (b, i, j)),
+            pl.BlockSpec((1, bm, bn), lambda b, i, j: (b, i, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bm, bn), lambda b, i, j: (b, i, j)),
+            pl.BlockSpec((1, bm, bn), lambda b, i, j: (b, i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((num_e, m, n), grad.dtype),
+            jax.ShapeDtypeStruct((num_e, m, n), grad.dtype),
+        ],
+        interpret=interpret,
+    )(p_hat, q, grad, err)
+
+
+def _gs3_kernel(p_ref, o_ref, *, r: int, eps: float):
+    p = p_ref[0].astype(F32)
+    for i in range(r):
+        v = p[:, i]
+        if i > 0:
+            u = p[:, :i]
+            coef = jnp.einsum("mk,m->k", u, v)
+            v = v - u @ coef
+        v = v / (jnp.sqrt(jnp.sum(v * v)) + eps)
+        p = p.at[:, i].set(v)
+    o_ref[0] = p
+
+
+def gram_schmidt_panel_batched(p, *, eps: float = 1e-8,
+                               interpret: bool = True):
+    """Per-slice Gram-Schmidt over an (E, m, r) stack; grid over E, one
+    VMEM-resident (m, r) panel per program (same budget as the 2-D panel)."""
+    num_e, m, r = p.shape
+    return pl.pallas_call(
+        functools.partial(_gs3_kernel, r=r, eps=eps),
+        grid=(num_e,),
+        in_specs=[pl.BlockSpec((1, m, r), lambda b: (b, 0, 0))],
+        out_specs=pl.BlockSpec((1, m, r), lambda b: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((num_e, m, r), F32),
+        interpret=interpret,
+    )(p)

@@ -60,6 +60,45 @@ def orthonormalize(p):
     return _lr.gram_schmidt_panel(p, interpret=_interpret())
 
 
+# ------------------------------------------------ batched (E, m, n) stacks
+# Wrappers for the bucketed executor's shape groups; same routing rules as
+# the 2-D wrappers (interpret on CPU, ref/jnp fallback for untileable shapes)
+# applied per stack.
+
+@partial(jax.jit, static_argnames=())
+def lowrank_p3(grad, err, q):
+    _, m, n = grad.shape
+    if not _tileable(m, n):
+        return jax.vmap(ref.ef_lowrank_p)(grad, err, q)
+    return _lr.ef_lowrank_p_batched(grad, err, q, interpret=_interpret())
+
+
+@partial(jax.jit, static_argnames=())
+def lowrank_q3(grad, err, p_hat):
+    _, m, n = grad.shape
+    if not _tileable(m, n):
+        return jax.vmap(ref.ef_lowrank_q)(grad, err, p_hat)
+    return _lr.ef_lowrank_q_batched(grad, err, p_hat, interpret=_interpret())
+
+
+@partial(jax.jit, static_argnames=())
+def decompress_residual3(p_hat, q, grad, err):
+    _, m, n = grad.shape
+    if not _tileable(m, n):
+        return jax.vmap(ref.decompress_residual)(p_hat, q, grad, err)
+    return _lr.decompress_residual_batched(p_hat, q, grad, err,
+                                           interpret=_interpret())
+
+
+@partial(jax.jit, static_argnames=())
+def orthonormalize3(p):
+    """Per-slice Gram-Schmidt panels under ~4 MB VMEM each, else jnp QR."""
+    _, m, r = p.shape
+    if m * r * 4 > (4 << 20) or m % 8 != 0:
+        return jax.vmap(lambda x: jnp.linalg.qr(x.astype(F32))[0])(p)
+    return _lr.gram_schmidt_panel_batched(p, interpret=_interpret())
+
+
 # legacy alias used by core.powersgd's use_kernels path
 def lowrank_matmul(m_mat, q):
     """M @ Q with the P-kernel (EF already folded into m_mat by the caller)."""

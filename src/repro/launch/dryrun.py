@@ -188,11 +188,20 @@ def _lower_train(arch, cfg, model, mesh, mode, params_shapes, pshard,
 
     acfg = adam.AdamConfig(opt_dtype=opt_dtype)
 
+    # Same executor-eligibility rule the Trainer applies, so the reported
+    # collective counts model what production actually lowers (not the
+    # per-leaf parity oracle).
+    from repro.core.bucketing import bucketing_supported
+    bucketed = mode == "dp_tp" and bucketing_supported(mesh)
+
     def init_state():
         params = model.init(jax.random.PRNGKey(0))
         ost = adam.init(params, acfg)
+        from repro.core.bucketing import layout_for_tree
         from repro.core.compressor import init_compressor_state
-        comp = init_compressor_state(params, plan, jax.random.PRNGKey(1))
+        layout = layout_for_tree(params, plan) if bucketed else None
+        comp = init_compressor_state(params, plan, jax.random.PRNGKey(1),
+                                     layout=layout)
         comp = replicate_comp_state(comp, world if mode == "dp_tp" else 1)
         return {"params": params, "opt_m": ost.m, "opt_v": ost.v,
                 "opt_step": ost.step, "comp": comp}
@@ -211,6 +220,7 @@ def _lower_train(arch, cfg, model, mesh, mode, params_shapes, pshard,
 
     scfg = TrainStepConfig(mode=mode if mode == "dp_tp" else "auto",
                            policy_plan=plan, measure_entropy=(mode == "dp_tp"),
+                           bucketed=bucketed or None,
                            remat=cfg.remat, adam=acfg)
     step = make_train_step(model, mesh, scfg)
     jstep = jax.jit(step, in_shardings=(sshard, bshard),

@@ -46,6 +46,7 @@ class TrainStepConfig:
     gds: GDSConfig = GDSConfig()
     measure_entropy: bool = True
     use_kernels: bool = False
+    bucketed: bool | None = None   # DP sync executor; None = infer from state
     remat: bool = True             # activation checkpointing over blocks
     adam: adam.AdamConfig = dataclasses.field(default_factory=adam.AdamConfig)
 
@@ -91,7 +92,8 @@ def make_train_step(model: Model, mesh, cfg: TrainStepConfig):
         pmean = make_dp_pmean(axes) if manual else (lambda x: x)
         loss = pmean(loss)
         synced, comp = sync_grads(grads, comp_in, cfg.policy_plan,
-                                  pmean, use_kernels=cfg.use_kernels)
+                                  pmean, use_kernels=cfg.use_kernels,
+                                  bucketed=cfg.bucketed)
         entropy = (grads_entropy(synced, cfg.gds)
                    if cfg.measure_entropy else jnp.zeros((), jnp.float32))
         opt_state = adam.AdamState(state["opt_step"], state["opt_m"], state["opt_v"])
@@ -151,6 +153,9 @@ def state_shardings(state, model: Model, mesh, fsdp: bool = False):
     param-sized per chip AND forces XLA to all-gather the (TP-sharded)
     gradient to add it (observed: +120 GiB/chip of gathers on qwen3-32b,
     EXPERIMENTS §Perf H1). Q factors are rank-thin and stay replicated.
+    Stacked (group-keyed) compressor states mix leaves with different TP
+    specs in one array, so their trailing dims fall back to replicated via
+    the pspec lookup below (group keys are not param paths).
     """
     from repro.dist.sharding import param_pspecs
 

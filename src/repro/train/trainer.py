@@ -28,7 +28,9 @@ from repro.core import (
     classify_leaves,
     init_compressor_state,
     plan_wire_bytes,
+    resize_compressor_state,
 )
+from repro.core.bucketing import bucketing_supported, make_bucket_layout
 from repro.models.model import Model
 from repro.optim import adam
 from repro.train import checkpoint as ckpt_mod
@@ -51,6 +53,12 @@ class TrainerConfig:
     measure_entropy: bool = True
     remat: bool = False
     use_kernels: bool = False
+    # Bucketed DP sync (core/bucketing.py): O(groups + buckets) collectives
+    # instead of O(leaves). Effective only on TP=1 meshes — stacked group
+    # state cannot mirror per-leaf TP specs, and a replicated EF residual
+    # forces gradient all-gathers (see state_shardings) — so the Trainer
+    # drops to the per-leaf executor when the mesh has a model axis > 1.
+    bucketed: bool = True
     adam: adam.AdamConfig = dataclasses.field(default_factory=adam.AdamConfig)
 
 
@@ -73,8 +81,15 @@ class Trainer:
         self.controller = EDGCController(edgc_cfg, self.leaves, world=self.world)
 
         ost = adam.init(params, tcfg.adam)
+        # Stacked (group-keyed) compressor state + the bucketed sync executor:
+        # O(shape groups + flat buckets) DP collectives instead of O(leaves).
+        # TP>1 keeps the per-leaf executor (see TrainerConfig.bucketed).
+        self._bucketed = tcfg.bucketed and bucketing_supported(mesh)
+        self._layout = (make_bucket_layout(self.leaves, self.controller.plan)
+                        if self._bucketed else None)
         comp = init_compressor_state(params, self.controller.plan,
-                                     jax.random.fold_in(key, 99))
+                                     jax.random.fold_in(key, 99),
+                                     layout=self._layout)
         comp = replicate_comp_state(comp, self.world)
         self.state = {"params": params, "opt_m": ost.m, "opt_v": ost.v,
                       "opt_step": ost.step, "comp": comp}
@@ -100,6 +115,7 @@ class Trainer:
                 gds=self.edgc_cfg.gds,
                 measure_entropy=self.tcfg.measure_entropy,
                 use_kernels=self.tcfg.use_kernels,
+                bucketed=self._bucketed,
                 remat=self.tcfg.remat,
             )
             raw = make_train_step(self.model, self.mesh, scfg)
@@ -112,19 +128,30 @@ class Trainer:
         return self._step_cache[key]
 
     def _apply_plan_change(self) -> None:
-        """Resize/extend compressor state to the new plan (host-side)."""
+        """Resize/extend compressor state to the new plan (host-side).
+
+        Stacked states migrate between bucket layouts: existing leaves keep
+        their warm-start Q (resized) and EF residual; newly-compressed
+        leaves get fresh state.
+        """
         plan = self.controller.plan
         comp_host = jax.tree_util.tree_map(lambda a: a[0], self.state["comp"])
-        by_path = dict(comp_host) if isinstance(comp_host, dict) else comp_host
-        # new leaves need fresh state; existing ones are resized
-        params = self.state["params"]
-        from repro.core.compressor import init_compressor_state as init_cs
-        fresh = init_cs(params, plan, self._comp_key)
-        for path in list(fresh.keys()):
-            if path in by_path:
-                from repro.core.powersgd import resize_rank
-                fresh[path] = resize_rank(
-                    by_path[path], dict(plan.ranks)[path], self._comp_key)
+        if self._bucketed:
+            new_layout = make_bucket_layout(self.leaves, plan)
+            fresh = resize_compressor_state(
+                comp_host, plan, self._comp_key,
+                old_layout=self._layout, new_layout=new_layout,
+            )
+            self._layout = new_layout
+        else:
+            # per-leaf path: fresh state for new leaves, resize the rest
+            params = self.state["params"]
+            fresh = init_compressor_state(params, plan, self._comp_key)
+            from repro.core.powersgd import resize_rank
+            for path in list(fresh.keys()):
+                if path in comp_host:
+                    fresh[path] = resize_rank(
+                        comp_host[path], plan.rank_of(path), self._comp_key)
         comp = replicate_comp_state(fresh, self.world)
         self.state = dict(self.state)
         self.state["comp"] = comp

@@ -7,8 +7,8 @@ import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core.entropy import (
-    GDSConfig, gaussian_entropy, grads_entropy, histogram_entropy,
-    strided_sample,
+    GDSConfig, gaussian_entropy, grads_entropy, grads_entropy_per_leaf,
+    histogram_entropy, strided_sample,
 )
 
 GAUSS_H1 = 0.5 * math.log(2 * math.pi * math.e)  # H of N(0,1) in nats
@@ -66,16 +66,36 @@ def test_entropy_monotone_in_scale(scale):
     assert h2 == pytest.approx(h1 + math.log(scale), abs=0.01)
 
 
-def test_grads_entropy_weighted_mean():
+def test_grads_entropy_per_leaf_weighted_mean():
     rng = np.random.default_rng(5)
     grads = {
         "a": jnp.asarray(rng.standard_normal((256, 256)), jnp.float32),
         "b": jnp.asarray(rng.standard_normal((256, 256)) * 0.1, jnp.float32),
     }
-    h = float(grads_entropy(grads, GDSConfig(beta=1.0)))
+    h = float(grads_entropy_per_leaf(grads, GDSConfig(beta=1.0)))
     ha = GAUSS_H1
     hb = math.log(0.1) + GAUSS_H1
     assert h == pytest.approx((ha + hb) / 2, abs=0.05)
+
+
+def test_grads_entropy_single_pass_pools_samples():
+    """grads_entropy == entropy of the concatenated beta-samples."""
+    rng = np.random.default_rng(6)
+    grads = {
+        "a": jnp.asarray(rng.standard_normal((256, 256)), jnp.float32),
+        "b": jnp.asarray(rng.standard_normal((256, 256)) * 0.1, jnp.float32),
+    }
+    for beta in (1.0, 0.25):
+        cfg = GDSConfig(beta=beta)
+        pooled = jnp.concatenate(
+            [strided_sample(grads["a"], beta), strided_sample(grads["b"], beta)]
+        )
+        want = float(gaussian_entropy(pooled))
+        assert float(grads_entropy(grads, cfg)) == pytest.approx(want, abs=1e-5)
+    # pooled sigma is the RMS of the two sigmas, not the per-leaf mean H
+    sigma = math.sqrt((1.0 + 0.01) / 2)
+    assert float(grads_entropy(grads, GDSConfig(beta=1.0))) == pytest.approx(
+        math.log(sigma) + GAUSS_H1, abs=0.05)
 
 
 def test_gds_alpha_gate():

@@ -121,6 +121,81 @@ def test_hist_kernel_padding_correct():
     assert got == pytest.approx(want, abs=1e-4)
 
 
+def test_hist_counts_padded_equals_unpadded():
+    """Regression for the dead NaN-pad write: sentinel-padded counts must
+    match the same call blocked without padding, bin for bin."""
+    from repro.kernels.entropy_hist import hist_counts
+    x = _rand((5000,), jnp.float32, 19)
+    lo = jnp.float32(float(jnp.mean(x)) - 4.0)
+    inv_w = jnp.float32(256 / 8.0)
+    padded = hist_counts(x, lo, inv_w, bx=2048)    # pad = 1144
+    exact = hist_counts(x, lo, inv_w, bx=1000)     # divides evenly, no pad
+    np.testing.assert_array_equal(np.asarray(padded), np.asarray(exact))
+    assert float(jnp.sum(padded)) == 5000.0        # no phantom pad counts
+
+
+# ---------------------------------------------- batched (E, m, n) variants
+@pytest.mark.parametrize("shape", [(3, 256, 512), (2, 128, 128)])
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_batched_p_q_kernels_vs_vmapped_ref(shape, dtype):
+    E, m, n = shape
+    rank = 16
+    g, e = _rand(shape, dtype, 20), _rand(shape, dtype, 21)
+    q = _rand((E, n, rank), jnp.float32, 22)
+    p_hat = _rand((E, m, rank), jnp.float32, 23)
+    tol = 1e-4 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(
+        np.asarray(lr.ef_lowrank_p_batched(g, e, q, interpret=True)),
+        np.asarray(jax.vmap(ref.ef_lowrank_p)(g, e, q)),
+        rtol=tol, atol=tol * 10)
+    np.testing.assert_allclose(
+        np.asarray(lr.ef_lowrank_q_batched(g, e, p_hat, interpret=True)),
+        np.asarray(jax.vmap(ref.ef_lowrank_q)(g, e, p_hat)),
+        rtol=tol, atol=tol * 10)
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_batched_decompress_kernel_vs_vmapped_ref(dtype):
+    E, m, n, rank = 3, 256, 512, 8
+    g, e = _rand((E, m, n), dtype, 24), _rand((E, m, n), dtype, 25)
+    p_hat = _rand((E, m, rank), jnp.float32, 26)
+    q = _rand((E, n, rank), jnp.float32, 27)
+    gh, ne = lr.decompress_residual_batched(p_hat, q, g, e, interpret=True)
+    ghr, ner = jax.vmap(ref.decompress_residual)(p_hat, q, g, e)
+    tol = 1e-4 if dtype == jnp.float32 else 1e-1
+    np.testing.assert_allclose(np.asarray(gh, np.float32),
+                               np.asarray(ghr, np.float32), rtol=tol, atol=tol * 10)
+    np.testing.assert_allclose(np.asarray(ne, np.float32),
+                               np.asarray(ner, np.float32), rtol=tol, atol=tol * 10)
+
+
+def test_batched_gram_schmidt_panel():
+    E, m, r = 4, 256, 16
+    p = _rand((E, m, r), jnp.float32, 28)
+    got = lr.gram_schmidt_panel_batched(p, interpret=True)
+    for i in range(E):
+        eye = np.asarray(got[i].T @ got[i])
+        np.testing.assert_allclose(eye, np.eye(r), atol=2e-4)
+        want = ref.gram_schmidt(p[i])
+        overlap = np.abs(np.asarray(got[i].T @ want))
+        np.testing.assert_allclose(overlap, np.eye(r), atol=2e-3)
+
+
+def test_batched_ops_fallback_untileable():
+    """Non-128-multiple stacks route to the vmapped oracle — same numbers."""
+    E, m, n, rank = 3, 100, 300, 8
+    g, e = _rand((E, m, n), jnp.float32, 29), _rand((E, m, n), jnp.float32, 30)
+    q = _rand((E, n, rank), jnp.float32, 37)
+    np.testing.assert_allclose(np.asarray(ops.lowrank_p3(g, e, q)),
+                               np.asarray(jax.vmap(ref.ef_lowrank_p)(g, e, q)),
+                               rtol=1e-5)
+    p = _rand((E, 252, rank), jnp.float32, 38)     # m % 8 != 0 -> QR fallback
+    q3 = ops.orthonormalize3(p)
+    for i in range(E):
+        np.testing.assert_allclose(np.asarray(q3[i].T @ q3[i]), np.eye(rank),
+                                   atol=2e-4)
+
+
 FLASH_CASES = [
     # (B, Tq, Tk, H, Hkv, Dh, bq, bk)
     (2, 256, 256, 4, 2, 64, 64, 64),
