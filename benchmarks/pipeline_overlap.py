@@ -1,0 +1,239 @@
+"""Pipeline schedules vs flat DP: bubble fraction + per-stage sync bytes.
+
+Two layers, matching how the subsystem splits:
+
+  * **Analytics** (``run()``, registered in ``benchmarks.run``; no devices):
+    tick-table bubble fractions and peak in-flight activations for GPipe vs
+    1F1B, the Algorithm-2 rank vector from the analytic comm model, and the
+    per-stage DP sync bytes it implies vs the flat-DP baseline — including
+    the Eq. 4 overlap check (every stage's sync fits stage 1's sync time
+    plus its backprop head start).
+  * **Execution** (``main()``, standalone — forces 4 fake CPU devices
+    before jax init): runs the pipelined Trainer (1F1B, pipe=4) and the
+    flat single-stage Trainer on the gpt2 fidelity config, asserts loss
+    parity, counts lowered collective ops, and (full mode) times both,
+    writing ``BENCH_pipeline.json``.
+
+  PYTHONPATH=src python benchmarks/pipeline_overlap.py           # full+JSON
+  PYTHONPATH=src python benchmarks/pipeline_overlap.py --smoke   # CI gate
+"""
+import os
+
+_flags = os.environ.get("XLA_FLAGS", "")
+if "host_platform_device_count" not in _flags:
+    os.environ["XLA_FLAGS"] = (_flags +
+                               " --xla_force_host_platform_device_count=4")
+
+import argparse
+import json
+import time
+
+S, M = 4, 16
+
+
+# ----------------------------------------------------------------- analytics
+def _analytics(num_stages: int = S, num_micro: int = M) -> dict:
+    import jax
+
+    from repro.configs.gpt2 import GPT2_FIDELITY
+    from repro.core import CommModel, classify_leaves, make_plan, \
+        plan_wire_bytes, stage_aligned_ranks
+    from repro.models.model import build_model
+    from repro.pipeline.schedule import (
+        bubble_fraction, peak_inflight, ring_slots, slot_table,
+        sync_slack_ticks, tick_count,
+    )
+    from repro.pipeline.sync import stage_wire_bytes
+
+    model = build_model(GPT2_FIDELITY)
+    params_shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    leaves = classify_leaves(params_shapes, GPT2_FIDELITY.num_layers,
+                             num_stages, min_dim=64)
+    shapes = [l.shape[-2:] for l in leaves if l.eligible]
+    comm = CommModel.from_shapes(shapes, world=4)
+
+    r_min, r_max = 8, 64
+    r1 = 24
+    t_micro = comm.t_com(8)
+    ranks = stage_aligned_ranks(r1, num_stages, comm, t_micro, r_min, r_max)
+    plan = make_plan("edgc", leaves, stage_ranks=ranks,
+                     num_stages=num_stages)
+    per_stage = stage_wire_bytes(leaves, plan, num_stages)
+    comp_total, full_total = plan_wire_bytes(leaves, plan)
+
+    sched = {}
+    for name in ("gpipe", "1f1b"):
+        table = slot_table(name, num_stages, num_micro)
+        busy = [sum(len(a) for a in table[s]) for s in range(num_stages)]
+        assert all(b == 2 * num_micro for b in busy), busy
+        sched[name] = {
+            "ticks": tick_count(name, num_stages, num_micro),
+            "peak_inflight": peak_inflight(name, num_stages, num_micro),
+            "ring_slots": ring_slots(name, num_stages, num_micro),
+            "sync_slack_ticks": sync_slack_ticks(name, num_stages, num_micro),
+        }
+
+    # Eq. 4 feasibility: stage s's sync fits inside stage 1's sync time
+    # plus its (s-microbatch-backward) head start.
+    t1 = comm.t_com(ranks[0])
+    overlap_ok = all(
+        comm.t_com(ranks[s]) <= t1 + s * t_micro + 1e-12
+        for s in range(num_stages)
+    )
+    return {
+        "num_stages": num_stages,
+        "num_microbatches": num_micro,
+        "bubble_fraction": bubble_fraction(num_stages, num_micro),
+        "schedules": sched,
+        "dac_ranks": ranks,
+        "stage_bytes": per_stage,
+        "plan_bytes": {"compressed": comp_total, "full": full_total},
+        "overlap_feasible": overlap_ok,
+    }
+
+
+def _check_analytics(a: dict) -> None:
+    ranks = a["dac_ranks"]
+    assert all(r2 >= r1 for r1, r2 in zip(ranks, ranks[1:])), \
+        f"Alg 2 ranks must be non-decreasing over stages: {ranks}"
+    assert a["overlap_feasible"], "Eq. 4 overlap must hold by construction"
+    g, f = a["schedules"]["gpipe"], a["schedules"]["1f1b"]
+    assert max(f["peak_inflight"]) <= max(g["peak_inflight"]), (f, g)
+    assert f["ring_slots"] <= g["ring_slots"]
+    assert f["sync_slack_ticks"] == g["sync_slack_ticks"] == list(
+        range(a["num_stages"]))
+    per_stage = a["stage_bytes"]
+    assert sum(c for c, _ in per_stage) == a["plan_bytes"]["compressed"]
+    assert sum(fu for _, fu in per_stage) == a["plan_bytes"]["full"]
+    assert all(c <= fu for c, fu in per_stage)
+
+
+def _csv_row(name: str, us_per_call: float, derived: str) -> str:
+    # benchmarks.common.csv_row, inlined: this module must also run as a
+    # plain script (it forces the fake device count before jax init, so it
+    # cannot ride `python -m benchmarks.run` for its execution half).
+    return f"{name},{us_per_call:.3f},{derived}"
+
+
+def _rows(a: dict, us: float) -> list[str]:
+    g, f = a["schedules"]["gpipe"], a["schedules"]["1f1b"]
+    return [
+        _csv_row("pipeline_bubble_fraction", us,
+                 f"{a['bubble_fraction']:.4f}"),
+        _csv_row("pipeline_peak_acts_gpipe", 0.0, str(max(g["peak_inflight"]))),
+        _csv_row("pipeline_peak_acts_1f1b", 0.0, str(max(f["peak_inflight"]))),
+        _csv_row("pipeline_dac_ranks", 0.0, ";".join(map(str, a["dac_ranks"]))),
+        _csv_row("pipeline_stage_sync_bytes", 0.0,
+                 ";".join(str(c) for c, _ in a["stage_bytes"])),
+        _csv_row("pipeline_overlap_feasible", 0.0, str(a["overlap_feasible"])),
+    ]
+
+
+def run(steps: int | None = None) -> list[str]:
+    """Device-independent analytics rows (the benchmarks.run entry)."""
+    t0 = time.time()
+    a = _analytics()
+    _check_analytics(a)
+    return _rows(a, (time.time() - t0) * 1e6)
+
+
+# ----------------------------------------------------------------- execution
+def _trainers(steps: int):
+    import jax  # noqa: F401  (device count must already be forced)
+
+    from repro.configs.gpt2 import GPT2_FIDELITY
+    from repro.core import EDGCConfig, GDSConfig
+    from repro.core.dac import DACConfig
+    from repro.data.pipeline import SyntheticLM
+    from repro.launch.mesh import make_host_mesh
+    from repro.models.model import build_model
+    from repro.optim.adam import AdamConfig
+    from repro.train.trainer import Trainer, TrainerConfig
+
+    def mk(mesh, schedule="1f1b"):
+        model = build_model(GPT2_FIDELITY)
+        edgc = EDGCConfig(policy="fixed", fixed_rank=8, num_stages=4,
+                          total_iterations=steps,
+                          gds=GDSConfig(alpha=0.5, beta=0.25),
+                          dac=DACConfig(window=max(2, steps // 2)))
+        tcfg = TrainerConfig(total_steps=steps, log_every=1,
+                             schedule=schedule,
+                             adam=AdamConfig(lr=1e-3, warmup_steps=2,
+                                             total_steps=steps))
+        return Trainer(model, mesh, edgc, tcfg, seed=0)
+
+    data = lambda: SyntheticLM(GPT2_FIDELITY.vocab_size, 32, 8,
+                               seed=3).batches()
+    pipe = mk(make_host_mesh(pipe=4, data=1, model=1))
+    flat = mk(make_host_mesh(data=1, model=1))
+    return pipe, flat, data
+
+
+def execute(smoke: bool) -> dict:
+    import re
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    steps = 3 if smoke else 10
+    pipe, flat, data = _trainers(steps)
+    hp = pipe.run(data())
+    hf = flat.run(data())
+    lp, lf = [h["loss"] for h in hp], [h["loss"] for h in hf]
+    gap = max(abs(a - b) for a, b in zip(lp, lf))
+    print(f"pipeline_loss_gap,0.000,{gap:.2e}")
+    assert gap < 5e-3, f"1F1B loss must match flat DP (gap {gap})"
+    assert all(np.isfinite(lp)), lp
+
+    # lowered-op census of the pipelined step: boundary ppermutes present
+    step = pipe._get_step()
+    batch = {k: jnp.asarray(v) for k, v in next(data()).items()}
+    text = step.lower(jax.device_get(pipe.state), batch).as_text()
+    n_permute = len(re.findall(r"collective.permute|ppermute", text))
+    n_allreduce = len(re.findall(r"all.reduce", text))
+    print(f"pipeline_ppermutes,0.000,{n_permute}")
+    print(f"pipeline_allreduces,0.000,{n_allreduce}")
+    assert n_permute > 0, "pipelined step must move boundaries via ppermute"
+
+    rec = {"loss_gap": float(gap), "ppermutes": n_permute,
+           "allreduces": n_allreduce,
+           "stage_bytes": pipe.stage_bytes()}
+    if not smoke:
+        def time_steps(tr, n=5):
+            it = data()
+            tr.run(it, num_steps=1)          # warm
+            t0 = time.perf_counter()
+            tr.run(it, num_steps=n)
+            return (time.perf_counter() - t0) / n
+
+        p2, f2, data = _trainers(20)
+        rec["s_per_step_pipelined"] = time_steps(p2)
+        rec["s_per_step_flat"] = time_steps(f2)
+        print(f"pipeline_step_s,{rec['s_per_step_pipelined']*1e6:.1f},pipelined")
+        print(f"flat_step_s,{rec['s_per_step_flat']*1e6:.1f},flat")
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast run: analytics asserts + 3-step loss parity")
+    ap.add_argument("--out", default="BENCH_pipeline.json")
+    args = ap.parse_args()
+
+    t0 = time.time()
+    a = _analytics()
+    _check_analytics(a)
+    for row in _rows(a, (time.time() - t0) * 1e6):
+        print(row)
+    rec = execute(args.smoke)
+    if not args.smoke:
+        payload = {"analytics": a, "execution": rec}
+        with open(args.out, "w") as fh:
+            json.dump(payload, fh, indent=2)
+        print(f"# wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

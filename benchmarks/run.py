@@ -22,6 +22,7 @@ SUITES = [
     ("table6", "benchmarks.table6_comm"),           # Table VI
     ("table7", "benchmarks.table7_window"),         # Table VII
     ("fig14", "benchmarks.fig14_stage"),            # Fig. 14 / Alg. 2
+    ("pipeline", "benchmarks.pipeline_overlap"),    # §IV-D schedules / Eq. 4
     ("roofline", "benchmarks.roofline"),            # §Roofline (from dry-run)
 ]
 

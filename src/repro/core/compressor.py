@@ -64,9 +64,38 @@ class LeafInfo:
     eligible: bool      # structurally compressible (>=2-D, big enough)
 
 
-def _layer_stage(path: str, num_layers: int, num_stages: int) -> int:
-    """Map a param path to its (virtual) pipeline stage via its layer index."""
-    m = re.search(r"layers?[/\[.](\d+)", path)
+# Non-block leaves are pinned to the pipeline boundary stages explicitly:
+# embeddings live with the first stage (they feed it), the LM head and the
+# final norm with the last (they consume its output). Letting them fall
+# through the index regexes put them wherever the regex missed — stage 0 —
+# which is wrong for the head on every S > 1 model.
+_STAGE0_PAT = re.compile(r"embed|wte|wpe|patch_proj|pos", re.IGNORECASE)
+_STAGE_LAST_PAT = re.compile(r"lm_head|final_norm|head\b", re.IGNORECASE)
+_STAGE_IDX_PAT = re.compile(r"stages?\W{0,3}(\d+)")
+_LAYER_IDX_PAT = re.compile(r"layers?[/\[.](\d+)")
+
+
+def _layer_stage(path: str, num_layers: int, num_stages: int,
+                 param_stages: int | None = None) -> int:
+    """Map a param path to its pipeline stage.
+
+    Priority: explicit boundary pins (embeddings -> 0, head/final norm ->
+    S-1), then the model's own ``['stages'][i]`` index (rescaled when the
+    param layout has ``param_stages`` != ``num_stages`` groups), then a
+    flat ``layers.<i>`` index mapped through ``num_layers``.
+    """
+    if num_stages <= 1:
+        return 0
+    m = _STAGE_IDX_PAT.search(path)
+    if m is not None:
+        i = int(m.group(1))
+        groups = max(param_stages or num_stages, i + 1)
+        return min(num_stages - 1, i * num_stages // groups)
+    if _STAGE0_PAT.search(path):
+        return 0
+    if _STAGE_LAST_PAT.search(path):
+        return num_stages - 1
+    m = _LAYER_IDX_PAT.search(path)
     if m is None:
         m = re.search(r"\b(\d+)\b", path) if "layer" in path else None
     if m is None or num_layers <= 0:
@@ -91,8 +120,14 @@ def classify_leaves(
     flat = jax.tree_util.tree_flatten_with_path(params)[0]
     infos = []
     pat = re.compile(exclude, re.IGNORECASE)
-    for key_path, leaf in flat:
-        path = jax.tree_util.keystr(key_path)
+    # The model's own stage granularity: number of distinct ['stages'][i]
+    # groups in the layout. _layer_stage rescales when it differs from the
+    # requested num_stages (e.g. a 4-stage param layout classified for 2).
+    paths = [jax.tree_util.keystr(kp) for kp, _ in flat]
+    idxs = [int(m.group(1)) for p in paths
+            for m in [_STAGE_IDX_PAT.search(p)] if m is not None]
+    param_stages = (max(idxs) + 1) if idxs else None
+    for (key_path, leaf), path in zip(flat, paths):
         shape = tuple(leaf.shape)
         mat_dims = shape[-2:] if len(shape) >= 2 else shape
         eligible = (
@@ -105,7 +140,7 @@ def classify_leaves(
             LeafInfo(
                 path=path,
                 shape=shape,
-                stage=_layer_stage(path, num_layers, num_stages),
+                stage=_layer_stage(path, num_layers, num_stages, param_stages),
                 eligible=eligible,
             )
         )
@@ -147,6 +182,18 @@ def make_plan(
     """Build the per-leaf rank plan for a policy (see module docstring)."""
     if policy == "none":
         return NO_COMPRESSION
+    if policy == "edgc":
+        if stage_ranks is None:
+            raise ValueError("edgc plan needs DAC stage ranks")
+        if len(stage_ranks) != num_stages:
+            # A short vector used to clamp silently onto the last entry,
+            # hiding stage/rank misalignment (Algorithm 2 emits exactly one
+            # rank per stage). Fail loudly instead.
+            raise ValueError(
+                f"stage_ranks has {len(stage_ranks)} entries for "
+                f"num_stages={num_stages}; Algorithm 2 must emit one rank "
+                f"per pipeline stage"
+            )
     ranks: list[tuple[str, int]] = []
     for info in leaves:
         if not info.eligible:
@@ -160,8 +207,7 @@ def make_plan(
             boundary = info.stage in (0, num_stages - 1)
             r = min(fixed_rank * 2, max_r) if boundary else fixed_rank
         elif policy == "edgc":
-            assert stage_ranks is not None, "edgc plan needs DAC stage ranks"
-            r = stage_ranks[min(info.stage, len(stage_ranks) - 1)]
+            r = stage_ranks[info.stage]
         else:
             raise ValueError(f"unknown policy {policy!r}")
         r = max(1, min(r, max_r))

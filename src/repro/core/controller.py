@@ -163,6 +163,52 @@ class EDGCController:
         )
         return self._plan != old_plan
 
+    # --------------------------------------------------------- checkpointing
+    def state_dict(self) -> dict[str, Any]:
+        """JSON-serializable control-plane state for checkpoints.
+
+        Everything the window loop mutates: DAC warm-up flag / stage-1 rank
+        / window index, the CQM anchor, the entropy+rank histories, the
+        partial window buffer, and the current plan. Without this, a
+        resumed run silently restarts warm-up (the device tree alone says
+        nothing about where the controller was).
+        """
+        return {
+            "policy": self.cfg.policy,
+            "dac": {
+                "warmed_up": bool(self.dac.warmed_up),
+                "r_stage1": int(self.dac.r_stage1),
+                "window_index": int(self.dac.window_index),
+            },
+            "cqm": {
+                "h_anchor": self.cqm._h_anchor,
+                "g_anchor": self.cqm._g_anchor,
+            },
+            "window_h": [float(h) for h in self._window_h],
+            "entropy_history": [[int(s), float(h)] for s, h in self._history],
+            "rank_history": [[int(s), [int(r) for r in rs]]
+                             for s, rs in self._rank_history],
+            "plan": [[p, int(r)] for p, r in self._plan.ranks],
+        }
+
+    def load_state_dict(self, sd: dict[str, Any]) -> None:
+        if sd.get("policy") != self.cfg.policy:
+            raise ValueError(
+                f"checkpoint controller policy {sd.get('policy')!r} != "
+                f"configured {self.cfg.policy!r}")
+        self.dac.warmed_up = bool(sd["dac"]["warmed_up"])
+        self.dac.r_stage1 = int(sd["dac"]["r_stage1"])
+        self.dac.window_index = int(sd["dac"]["window_index"])
+        h, g = sd["cqm"]["h_anchor"], sd["cqm"]["g_anchor"]
+        self.cqm._h_anchor = None if h is None else float(h)
+        self.cqm._g_anchor = None if g is None else float(g)
+        self._window_h = [float(x) for x in sd["window_h"]]
+        self._history = [(int(s), float(x)) for s, x in sd["entropy_history"]]
+        self._rank_history = [(int(s), [int(r) for r in rs])
+                              for s, rs in sd["rank_history"]]
+        self._plan = CompressionPlan(
+            ranks=tuple((p, int(r)) for p, r in sd["plan"]))
+
     # ------------------------------------------------------------- reporting
     @property
     def entropy_history(self) -> list[tuple[int, float]]:

@@ -107,24 +107,54 @@ def _leaf_entropy(leaf: jax.Array, cfg: GDSConfig) -> tuple[jax.Array, jax.Array
     return h, jnp.asarray(s.shape[0], jnp.float32)
 
 
+def sample_moments(grads, cfg: GDSConfig = GDSConfig()):
+    """(count, sum, sum-of-squares) of the pooled beta-sample of a pytree.
+
+    The three scalars are sufficient statistics for the Gaussian (Lemma 2)
+    estimator, and — unlike the pooled sample itself — they are additive:
+    the pipeline-parallel train step computes them per stage and psums over
+    the ``pipe`` axis, reproducing the single-program pooled entropy exactly
+    (moments are permutation-invariant, so partial-sum grouping only moves
+    fp32 association error).
+    """
+    leaves = [l for l in jax.tree_util.tree_leaves(grads) if l.size > 16]
+    if not leaves:
+        z = jnp.zeros((), jnp.float32)
+        return z, z, z
+    samples = [strided_sample(l, cfg.beta).astype(jnp.float32) for l in leaves]
+    n = jnp.asarray(sum(s.shape[0] for s in samples), jnp.float32)
+    s1 = sum(jnp.sum(s) for s in samples)
+    s2 = sum(jnp.sum(jnp.square(s)) for s in samples)
+    return n, s1, s2
+
+
+def entropy_from_moments(n, s1, s2, eps: float = 1e-12) -> jax.Array:
+    """Lemma 2 from pooled sufficient statistics: H = log sigma + c."""
+    n = jnp.maximum(n, 1.0)
+    mean = s1 / n
+    var = jnp.maximum(s2 / n - mean * mean, 0.0)
+    return jnp.log(jnp.sqrt(var) + eps) + 0.5 * _LOG_2PI_E
+
+
 @partial(jax.jit, static_argnames=("cfg",))
 def grads_entropy(grads, cfg: GDSConfig = GDSConfig()) -> jax.Array:
     """Entropy of the pooled beta-sample over all leaves of a gradient pytree.
 
     This is GDS's per-iteration measurement: beta-sampled, on-device, one
-    scalar out. Single-pass: the per-leaf strided samples are concatenated
-    and the estimator runs ONCE over the pooled sample — one mean/std
-    reduction instead of 2x num_leaves tiny reductions (the per-leaf
-    variant below remains for the per-stage API). The alpha gate (whether
-    to call it at all this iteration) lives in the host-side controller.
+    scalar out. Single-pass: the per-leaf strided samples are reduced to
+    pooled sufficient statistics (``sample_moments``) and the estimator
+    runs ONCE over them — one pass per leaf instead of 2x num_leaves tiny
+    reductions (the per-leaf variant below remains for the per-stage API).
+    The alpha gate (whether to call it at all this iteration) lives in the
+    host-side controller.
     """
-    leaves = [l for l in jax.tree_util.tree_leaves(grads) if l.size > 16]
-    pooled = jnp.concatenate(
-        [strided_sample(l, cfg.beta).astype(jnp.float32) for l in leaves]
-    )
     if cfg.estimator == "histogram":
+        leaves = [l for l in jax.tree_util.tree_leaves(grads) if l.size > 16]
+        pooled = jnp.concatenate(
+            [strided_sample(l, cfg.beta).astype(jnp.float32) for l in leaves]
+        )
         return histogram_entropy(pooled, cfg.num_bins)
-    return gaussian_entropy(pooled)
+    return entropy_from_moments(*sample_moments(grads, cfg))
 
 
 @partial(jax.jit, static_argnames=("cfg",))

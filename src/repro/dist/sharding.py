@@ -40,6 +40,8 @@ __all__ = [
     "cache_pspecs",
     "param_pspecs",
     "param_shardings",
+    "stage_param_pspecs",
+    "stage_param_shardings",
 ]
 
 # Leaves that stay replicated regardless of shape: norms/biases/scales are
@@ -99,6 +101,33 @@ def param_pspecs(params: Any, mesh) -> Any:
         ),
         params,
     )
+
+
+def stage_param_pspecs(stacked: Any, mesh) -> Any:
+    """Partition specs for a STAGE-STACKED param tree (pipeline parallelism).
+
+    Every leaf carries a leading stage dim of size S = |pipe| (produced by
+    ``repro.pipeline.partition.partition_params``): dim 0 shards over the
+    ``pipe`` axis so each pipeline rank holds exactly its stage's subtree,
+    and the remaining dims follow the same Megatron TP rules as the flat
+    layout (the path still names wq/wo/up/down/... — only the leading dim
+    is new).
+    """
+    has_pipe = "pipe" in mesh.axis_names
+
+    def one(kp, leaf) -> P:
+        path = jax.tree_util.keystr(kp)
+        shape = tuple(leaf.shape)
+        inner = _spec_for(path, shape[1:], mesh)
+        entries = list(inner) + [None] * (len(shape) - 1 - len(inner))
+        return P("pipe" if has_pipe else None, *entries)
+
+    return jax.tree_util.tree_map_with_path(one, stacked)
+
+
+def stage_param_shardings(stacked: Any, mesh) -> Any:
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), stage_param_pspecs(stacked, mesh))
 
 
 def apply_fsdp(specs: Any, params: Any, mesh, axes,

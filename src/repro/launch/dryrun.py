@@ -21,6 +21,7 @@ os.environ["XLA_FLAGS"] = (
 )
 
 import argparse
+import dataclasses
 import json
 import re
 import time
@@ -120,13 +121,28 @@ def lower_one(arch: str, shape_name: str, mesh, policy: str = "edgc",
     if cfg is None:
         return {"arch": arch, "shape": shape_name, "skipped": True,
                 "reason": "long_500k inapplicable (see DESIGN §5)"}
+    pipe = "pipe" in mesh.axis_names
+    if pipe and not (kind == "train" and mode == "dp_tp"):
+        return {"arch": arch, "shape": shape_name, "skipped": True,
+                "reason": "pipeline mesh applies to dp_tp train shapes only"}
+    if pipe:
+        from repro.launch.mesh import pipe_size
+        from repro.pipeline.partition import pipeline_supported
+        cfg = dataclasses.replace(cfg, num_stages=pipe_size(mesh))
+        reason = pipeline_supported(cfg, pipe_size(mesh))
+        if reason is not None:
+            return {"arch": arch, "shape": shape_name, "skipped": True,
+                    "reason": f"pipeline: {reason}"}
     model = build_model(cfg)
     t0 = time.time()
 
     params_shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
     pshard = param_shardings(params_shapes, mesh, fsdp=(mode == "auto"))
 
-    if kind == "train":
+    if kind == "train" and pipe:
+        rec = _lower_train_pipelined(arch, cfg, model, mesh, params_shapes,
+                                     shape_name, policy, rank, opt_dtype)
+    elif kind == "train":
         rec = _lower_train(arch, cfg, model, mesh, mode, params_shapes,
                            pshard, shape_name, policy, rank, opt_dtype)
     elif kind == "prefill":
@@ -236,6 +252,68 @@ def _lower_train(arch, cfg, model, mesh, mode, params_shapes, pshard,
     return rec
 
 
+def _lower_train_pipelined(arch, cfg, model, mesh, params_shapes, shape_name,
+                           policy, rank, opt_dtype="float32"):
+    """Lower+compile the pipelined train step (pipe mesh): stage-partitioned
+    state, 1F1B schedule, per-stage DP sync — what a pipelined pod runs."""
+    from repro.launch.mesh import pipe_size
+    from repro.pipeline import partition as ppart
+    from repro.pipeline import sync as psync
+    from repro.pipeline.schedule import pipeline_state_shardings
+
+    spec = INPUT_SHAPES[shape_name]
+    B = spec["global_batch"]
+    S = pipe_size(mesh)
+    axes = dp_axes(mesh)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    world = int(np.prod([sizes.get(a, 1) for a in axes])) or 1
+
+    leaves = classify_leaves(params_shapes, cfg.num_layers, S, min_dim=128)
+    plan = make_plan(policy, leaves, stage_ranks=[rank] * S,
+                     fixed_rank=rank, num_stages=S)
+    stage_shapes = jax.eval_shape(
+        lambda p: ppart.partition_params(p, S)[0], params_shapes)
+    splans = psync.make_stage_plans(
+        plan, S, psync.stage_local_leaves(stage_shapes))
+    acfg = adam.AdamConfig(opt_dtype=opt_dtype)
+
+    def init_state():
+        params = model.init(jax.random.PRNGKey(0))
+        sp, sh = ppart.partition_params(params, S)
+        ost = adam.init({"stage": sp, "shared": sh}, acfg)
+        comp = psync.init_pipeline_comp_state(params, plan,
+                                              jax.random.PRNGKey(1), splans)
+        comp = psync.replicate_pipeline_comp_state(comp, world)
+        return {"stage_params": sp, "shared_params": sh,
+                "opt_m": ost.m, "opt_v": ost.v, "opt_step": ost.step,
+                "comp": comp}
+
+    state_shapes = jax.eval_shape(init_state)
+    sshard = pipeline_state_shardings(state_shapes, model, mesh)
+
+    batch = input_specs(cfg, shape_name)
+    bshard = {k: NamedSharding(mesh, batch_pspec(v.ndim, mesh, B))
+              for k, v in batch.items()}
+
+    scfg = TrainStepConfig(mode="dp_tp", policy_plan=plan,
+                           measure_entropy=True, remat=cfg.remat,
+                           num_stages=S, schedule="1f1b", adam=acfg)
+    step = make_train_step(model, mesh, scfg)
+    jstep = jax.jit(step, in_shardings=(sshard, bshard),
+                    out_shardings=(sshard, NamedSharding(mesh, P())),
+                    donate_argnums=0)
+    with mesh:
+        lowered = jstep.lower(state_shapes, batch)
+        compiled = lowered.compile()
+    pod = 256 if "pod" in mesh.axis_names else 0
+    rec = _record(compiled, compiled.as_text(), pod_size=pod)
+    rec["policy"] = policy if plan.ranks else "none"
+    rec["compressed_leaves"] = len(plan.ranks)
+    rec["pipeline"] = {"num_stages": S, "schedule": "1f1b",
+                       "distinct_plans": len(splans.distinct)}
+    return rec
+
+
 def _lower_prefill(cfg, model, mesh, params_shapes, pshard, shape_name):
     spec = INPUT_SHAPES[shape_name]
     B = spec["global_batch"]
@@ -287,12 +365,15 @@ def main() -> None:
     ap.add_argument("--shape", default=None, help="one input shape (default: all)")
     ap.add_argument("--multi-pod", action="store_true",
                     help="use the 2x16x16 (512-chip) mesh")
+    ap.add_argument("--pipe", type=int, default=0,
+                    help="pipeline stages: adds a 'pipe' mesh axis and "
+                         "lowers the pipelined (1F1B) train step")
     ap.add_argument("--policy", default="edgc")
     ap.add_argument("--rank", type=int, default=64)
     ap.add_argument("--out", default=None, help="write JSON records here")
     args = ap.parse_args()
 
-    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    mesh = make_production_mesh(multi_pod=args.multi_pod, pipe=args.pipe)
     archs = [args.arch] if args.arch else [a for a in ARCHS if a != "gpt2"]
     shapes = [args.shape] if args.shape else list(INPUT_SHAPES)
 

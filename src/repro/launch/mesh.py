@@ -8,22 +8,48 @@ and smoke tests/benches must keep seeing 1 device.
 Mesh shapes (per the brief):
   single-pod : (16, 16)       axes (data, model)        = 256 chips
   multi-pod  : (2, 16, 16)    axes (pod, data, model)   = 512 chips
+
+With pipeline parallelism (``pipe`` stages), the pipe axis splits the data
+axis — total chip count is unchanged, the DP width shrinks by ``pipe``:
+  single-pod : (pipe, 16/?, 16)      axes (pipe, data, model)
+  multi-pod  : (2, pipe, ?, 16)      axes (pod, pipe, data, model)
+Pod stays outermost (cross-pod links are the scarce resource); pipe sits
+between pod and data so each pipeline stage owns a contiguous DP group.
 """
 from __future__ import annotations
 
 import jax
 
-__all__ = ["make_production_mesh", "make_host_mesh", "dp_axes", "tp_axis"]
+__all__ = [
+    "make_production_mesh",
+    "make_host_mesh",
+    "dp_axes",
+    "tp_axis",
+    "pipe_size",
+]
 
 
-def make_production_mesh(*, multi_pod: bool = False):
+def make_production_mesh(*, multi_pod: bool = False, pipe: int = 0):
+    if pipe and pipe > 1:
+        data = (16 * 16) // (pipe * 16)
+        if data < 1 or (pipe * data * 16) != 256:
+            raise ValueError(f"pipe={pipe} does not divide the 256-chip pod")
+        if multi_pod:
+            return jax.make_mesh((2, pipe, data, 16),
+                                 ("pod", "pipe", "data", "model"))
+        return jax.make_mesh((pipe, data, 16), ("pipe", "data", "model"))
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
     return jax.make_mesh(shape, axes)
 
 
-def make_host_mesh(data: int = 1, model: int = 1, pod: int = 0):
+def make_host_mesh(data: int = 1, model: int = 1, pod: int = 0, pipe: int = 0):
     """Small mesh over however many (fake or real) devices exist — tests."""
+    if pipe:
+        if pod:
+            return jax.make_mesh((pod, pipe, data, model),
+                                 ("pod", "pipe", "data", "model"))
+        return jax.make_mesh((pipe, data, model), ("pipe", "data", "model"))
     if pod:
         return jax.make_mesh((pod, data, model), ("pod", "data", "model"))
     return jax.make_mesh((data, model), ("data", "model"))
@@ -36,3 +62,9 @@ def dp_axes(mesh) -> tuple[str, ...]:
 
 def tp_axis(mesh) -> str | None:
     return "model" if "model" in mesh.axis_names else None
+
+
+def pipe_size(mesh) -> int:
+    """Size of the pipeline axis (1 when the mesh has no ``pipe`` axis)."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return sizes.get("pipe", 1)

@@ -90,13 +90,26 @@ def _block_apply(bp, x, cfg: ModelConfig, positions, window: int):
     return x + h
 
 
+def apply_block_stack(blocks, x, cfg: ModelConfig, positions,
+                      window: int | None = None, remat: bool | None = None):
+    """Run one scanned stack of decoder blocks (one pipeline stage's worth).
+
+    ``blocks`` is the stacked-params subtree (every leaf has a leading layer
+    dim); this is the per-stage unit the pipeline subsystem executes on each
+    pipe rank, and the loop body ``forward`` runs once per stage.
+    """
+    def body(h, bp):
+        return _block_apply(bp, h, cfg, positions,
+                            cfg.sliding_window if window is None else window), None
+    if cfg.remat if remat is None else remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, blocks)
+    return x
+
+
 def _run_stages(params, x, cfg: ModelConfig, positions, window: int):
     for stage in params["stages"]:
-        def body(h, bp):
-            return _block_apply(bp, h, cfg, positions, window), None
-        if cfg.remat:
-            body = jax.checkpoint(body)
-        x, _ = jax.lax.scan(body, x, stage["blocks"])
+        x = apply_block_stack(stage["blocks"], x, cfg, positions, window)
     return x
 
 

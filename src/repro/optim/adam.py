@@ -60,11 +60,18 @@ def global_norm(tree) -> jax.Array:
                         for l in jax.tree_util.tree_leaves(tree)))
 
 
-def update(params, grads, state: AdamState, cfg: AdamConfig):
-    """One AdamW step. Returns (new_params, new_state, metrics)."""
+def update(params, grads, state: AdamState, cfg: AdamConfig, gnorm=None):
+    """One AdamW step. Returns (new_params, new_state, metrics).
+
+    ``gnorm`` overrides the grad-clip norm: pipeline-parallel callers pass
+    the cross-stage global norm (each pipe rank holds only its stage's
+    grads, so the local norm would clip each stage differently and break
+    parity with the single-program step).
+    """
     b1, b2 = cfg.betas
     step = state.step + 1
-    gnorm = global_norm(grads)
+    if gnorm is None:
+        gnorm = global_norm(grads)
     scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-12)) if cfg.grad_clip > 0 else 1.0
     lr = lr_at(cfg, step)
     c1 = 1.0 - b1 ** step.astype(jnp.float32)

@@ -1,0 +1,365 @@
+"""GPipe / 1F1B microbatch schedules over the ``pipe`` mesh axis.
+
+Both schedules run as ONE SPMD program inside a shard_map manual over
+(pipe, pod, data): every rank executes the same tick sequence against its
+own stage's params, boundary activations move forward via ``ppermute``
+(+1 ring) and boundary-activation cotangents move backward via the inverse
+``ppermute`` — the compat shim in ``dist/collectives.py`` provides the
+shard_map surface. Off-schedule ticks are masked per rank (clipped
+microbatch indices, zero cotangents) — SPMD uniformity again.
+
+The backward is a hand-rolled VJP (not ``jax.grad`` of the whole chain):
+each backward tick replays its stage's forward from the SAVED boundary
+input (stage-granular rematerialization, Megatron's standard recompute)
+and pulls cotangents through ``jax.vjp``. That makes the *schedule* an
+explicit tick table rather than whatever AD reversal produces:
+
+  tick grids (F = forward of microbatch j at stage s, B = its backward)
+
+    gpipe :  F at  t = j + s            B at  t = 2M + 2S - 3 - j - s
+             all forwards, then all backwards in reverse — M in-flight
+             boundary activations per rank.
+    1f1b  :  F at  t = j + s            B at  t = j + (2S - 1 - s)
+             stage S-1 starts draining one tick after its first forward —
+             in-flight activations bounded by min(M, 2S) per rank, the
+             1F1B memory bound.
+
+Both schedules leave stage s's LAST backward s ticks before stage 0's —
+exactly the per-stage slack Algorithm 2 (Eq. 4) converts into larger
+ranks: stage s's DP sync may take ``T_com(r_stage1) + s * T_microBack``
+and still finish with stage 0 (the paper's 1-indexed stage i has
+``(i-1)`` spare microbatch-backwards; here 0-indexed ``s``).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.dist.collectives import make_dp_pmean, shard_map_dp
+from repro.dist.sharding import param_pspecs, stage_param_pspecs
+from repro.launch.mesh import dp_axes, pipe_size
+from repro.models.model import Model
+from repro.optim import adam
+from repro.pipeline import sync as psync
+from repro.pipeline.partition import make_partition, partition_params
+
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+__all__ = [
+    "SCHEDULES",
+    "slot_table",
+    "tick_count",
+    "ring_slots",
+    "bubble_fraction",
+    "peak_inflight",
+    "sync_slack_ticks",
+    "make_pipeline_train_step",
+    "pipeline_state_shardings",
+]
+
+SCHEDULES = ("gpipe", "1f1b")
+
+
+# ------------------------------------------------------------------ analytics
+def tick_count(name: str, S: int, M: int) -> int:
+    if name == "gpipe":
+        return 2 * (M + S - 1)
+    if name == "1f1b":
+        return M + 2 * S - 1
+    raise ValueError(f"unknown schedule {name!r} (want one of {SCHEDULES})")
+
+
+def ring_slots(name: str, S: int, M: int) -> int:
+    """Boundary-activation ring size: the schedule's in-flight bound."""
+    return M if name == "gpipe" else min(M, 2 * S)
+
+
+def _fwd_mb(t: int, s: int) -> int:
+    return t - s
+
+
+def _bwd_mb(name: str, t: int, s: int, S: int, M: int) -> int:
+    if name == "gpipe":
+        return (2 * M + 2 * S - 3) - t - s
+    return t - (2 * S - 1) + s
+
+
+def first_bwd_tick(name: str, S: int, M: int) -> int:
+    return (M + S - 1) if name == "gpipe" else S
+
+
+def slot_table(name: str, S: int, M: int) -> list[list[tuple]]:
+    """table[s][t] = tuple of ("F"|"B", microbatch) actions at that tick."""
+    n = tick_count(name, S, M)
+    table: list[list[tuple]] = [[() for _ in range(n)] for _ in range(S)]
+    for s in range(S):
+        for t in range(n):
+            acts = []
+            if t < M + S - 1:
+                j = _fwd_mb(t, s)
+                if 0 <= j < M:
+                    acts.append(("F", j))
+            if t >= first_bwd_tick(name, S, M):
+                j = _bwd_mb(name, t, s, S, M)
+                if 0 <= j < M:
+                    acts.append(("B", j))
+            table[s][t] = tuple(acts)
+    return table
+
+
+def bubble_fraction(S: int, M: int) -> float:
+    """Idle fraction of the classic unit-slot model, (S-1)/(M+S-1).
+
+    GPipe and (non-interleaved) 1F1B share it — the schedules differ in
+    peak activation memory and WHEN sync slack opens, not total idle time.
+    """
+    return (S - 1) / (M + S - 1)
+
+
+def peak_inflight(name: str, S: int, M: int) -> list[int]:
+    """Max simultaneously-saved boundary activations per stage (from the
+    tick table: +1 at each F, -1 at each B)."""
+    table = slot_table(name, S, M)
+    peaks = []
+    for s in range(S):
+        live = peak = 0
+        for acts in table[s]:
+            for kind, _ in acts:
+                live += 1 if kind == "F" else -1
+                peak = max(peak, live)
+        peaks.append(peak)
+    return peaks
+
+
+def sync_slack_ticks(name: str, S: int, M: int) -> list[int]:
+    """Ticks between stage s's last backward and stage 0's (Alg 2 slack)."""
+    table = slot_table(name, S, M)
+    last_b = [max(t for t, acts in enumerate(table[s])
+                  if any(k == "B" for k, _ in acts)) for s in range(S)]
+    return [last_b[0] - last_b[s] for s in range(S)]
+
+
+# ------------------------------------------------------------- step builder
+def make_pipeline_train_step(model: Model, mesh, cfg):
+    """Pipelined train step: (state, batch) -> (state, metrics).
+
+    ``cfg`` is a ``repro.train.step.TrainStepConfig`` with
+    ``num_stages > 1``; the mesh must carry a ``pipe`` axis of that size.
+    State layout (see ``partition_params`` / ``init_pipeline_comp_state``):
+
+      stage_params  stage-stacked blocks tree, leaves (S, ...) over 'pipe'
+      shared_params embeddings/head/final norm, replicated over 'pipe'
+      opt_m/opt_v   {"stage": ..., "shared": ...} mirrors of the above
+      opt_step      scalar
+      comp          per-distinct-plan stacked compressor state,
+                    leaves (S, dp_world, ...) over ('pipe', dp axes)
+    """
+    S = cfg.num_stages
+    M = cfg.num_microbatches or S
+    name = cfg.schedule
+    if name not in SCHEDULES:
+        raise ValueError(f"unknown schedule {name!r} (want one of {SCHEDULES})")
+    if cfg.measure_entropy and cfg.gds.estimator != "gaussian":
+        # The pipelined entropy is reassembled from psum'd sufficient
+        # statistics, which only the Gaussian (Lemma 2) estimator admits —
+        # refuse loudly rather than silently diverge from the flat step.
+        raise ValueError(
+            f"pipelined step supports the gaussian entropy estimator only, "
+            f"got {cfg.gds.estimator!r}")
+    if pipe_size(mesh) != S:
+        raise ValueError(f"mesh pipe axis has size {pipe_size(mesh)}, "
+                         f"step wants num_stages={S}")
+    axes_dp = dp_axes(mesh)
+    manual = ("pipe",) + tuple(axes_dp)
+    part = make_partition(model, S, remat=cfg.remat)
+    adam_cfg = cfg.adam
+
+    # Static stage-plan schedule from the flat plan + the local leaf shapes.
+    params_shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    stage_shapes = jax.eval_shape(
+        lambda p: partition_params(p, S)[0], params_shapes)
+    local_template = jax.tree_util.tree_map(
+        lambda a: jax.ShapeDtypeStruct(a.shape[1:], a.dtype), stage_shapes)
+    splans = psync.make_stage_plans(
+        cfg.policy_plan, S, psync.local_leaves_of(local_template))
+
+    R = ring_slots(name, S, M)
+    n_ticks = tick_count(name, S, M)
+    fbt = first_bwd_tick(name, S, M)
+    fwd_perm = [(i, (i + 1) % S) for i in range(S)]
+    bwd_perm = [(i, (i - 1) % S) for i in range(S)]
+    inv_M = 1.0 / M
+
+    def local_step(state, batch):
+        s_idx = lax.axis_index("pipe")
+        is_first = s_idx == 0
+        is_last = s_idx == S - 1
+        squeeze = lambda t: jax.tree_util.tree_map(lambda a: a[0], t)
+        stage_p = squeeze(state["stage_params"])
+        shared_p = state["shared_params"]
+        comp = jax.tree_util.tree_map(lambda a: a[0, 0], state["comp"])
+
+        def to_mb(a):
+            if a.shape[0] % M:
+                raise ValueError(f"local batch {a.shape[0]} not divisible by "
+                                 f"num_microbatches={M}")
+            return a.reshape((M, a.shape[0] // M) + a.shape[1:])
+
+        tokens = to_mb(batch["tokens"])
+        labels = to_mb(batch["labels"])
+        b, T = tokens.shape[1], tokens.shape[2]
+
+        def rank_fwd(sp, sh, tok, lab, x_recv):
+            # Every rank runs embed + blocks + head; the first/last masks
+            # select which parts are live — SPMD uniformity. The masked
+            # paths get zero cotangents in the backward, so their params
+            # see zero gradient without explicit bookkeeping.
+            x0 = part.embed(sh, tok)
+            x_in = jnp.where(is_first, x0, x_recv)
+            y = part.blocks(sp, x_in)
+            loss = part.head_loss(sh, y, lab)
+            return y, loss
+
+        fwd_recv = jnp.zeros((b, T, part.d_model), part.dtype)
+        bwd_recv = jnp.zeros((b, T, part.d_model), part.dtype)
+        ring = jnp.zeros((R, b, T, part.d_model), part.dtype)
+        loss_acc = jnp.zeros((), jnp.float32)
+        f32z = lambda t: jax.tree_util.tree_map(
+            lambda a: jnp.zeros(a.shape, jnp.float32), t)
+        gacc_s = f32z(stage_p)
+        gacc_sh = f32z(shared_p)
+
+        for t in range(n_ticks):
+            if t < M + S - 1:
+                off = t - s_idx
+                valid_f = (off >= 0) & (off < M)
+                jf = jnp.clip(off, 0, M - 1)
+                y, loss_mb = rank_fwd(stage_p, shared_p,
+                                      jnp.take(tokens, jf, axis=0),
+                                      jnp.take(labels, jf, axis=0), fwd_recv)
+                loss_acc = loss_acc + jnp.where(valid_f & is_last, loss_mb, 0.0)
+                upd = lax.dynamic_update_index_in_dim(ring, fwd_recv, jf % R, 0)
+                ring = jnp.where(valid_f, upd, ring)
+                fwd_recv = lax.ppermute(y, "pipe", fwd_perm)
+            if t >= fbt:
+                # same arithmetic the slot_table analytics use (on traced s)
+                offb = _bwd_mb(name, t, s_idx, S, M)
+                valid_b = (offb >= 0) & (offb < M)
+                jb = jnp.clip(offb, 0, M - 1)
+                tok = jnp.take(tokens, jb, axis=0)
+                lab = jnp.take(labels, jb, axis=0)
+                x_saved = jnp.take(ring, jb % R, axis=0)
+
+                def replay(sp, sh, xr, tok=tok, lab=lab):
+                    return rank_fwd(sp, sh, tok, lab, xr)
+
+                _, vjp = jax.vjp(replay, stage_p, shared_p, x_saved)
+                # vjp is linear in the cotangents: masking them masks the
+                # whole backward (param grads AND the outgoing boundary
+                # cotangent) — off-schedule ranks contribute exact zeros.
+                ct_y = (jnp.where(valid_b & ~is_last, 1.0, 0.0)
+                        .astype(part.dtype) * bwd_recv)
+                ct_loss = jnp.where(valid_b & is_last, inv_M, 0.0)
+                gs, gsh, gx = vjp((ct_y, ct_loss))
+                add32 = lambda a, g: a + g.astype(jnp.float32)
+                gacc_s = jax.tree_util.tree_map(add32, gacc_s, gs)
+                gacc_sh = jax.tree_util.tree_map(add32, gacc_sh, gsh)
+                bwd_recv = lax.ppermute(gx, "pipe", bwd_perm)
+
+        pmean_dp = make_dp_pmean(axes_dp)
+        psum_pipe = lambda x: lax.psum(x, "pipe")
+        loss = pmean_dp(psum_pipe(loss_acc) * inv_M)
+
+        cast_like = lambda g, p: g.astype(p.dtype)
+        gacc_s = jax.tree_util.tree_map(cast_like, gacc_s, stage_p)
+        # Shared-param grads: only the owning boundary rank computed a
+        # nonzero contribution; the pipe psum gives every rank the total.
+        gacc_sh = jax.tree_util.tree_map(
+            lambda g, p: psum_pipe(g).astype(p.dtype), gacc_sh, shared_p)
+
+        synced_s, synced_sh, comp2 = psync.stage_sync_grads(
+            gacc_s, gacc_sh, comp, splans, pmean_dp, s_idx,
+            use_kernels=cfg.use_kernels)
+
+        if cfg.measure_entropy:
+            from repro.core.entropy import entropy_from_moments, sample_moments
+            n1, a1, a2 = sample_moments(synced_s, cfg.gds)
+            n2, c1, c2 = sample_moments(synced_sh, cfg.gds)
+            w = jnp.where(is_first, 1.0, 0.0)  # count shared leaves once
+            entropy = entropy_from_moments(
+                psum_pipe(n1 + w * n2), psum_pipe(a1 + w * c1),
+                psum_pipe(a2 + w * c2))
+        else:
+            entropy = jnp.zeros((), jnp.float32)
+
+        sumsq = lambda t: sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                              for l in jax.tree_util.tree_leaves(t))
+        gnorm = jnp.sqrt(psum_pipe(sumsq(synced_s)) + sumsq(synced_sh))
+
+        params_local = {"stage": stage_p, "shared": shared_p}
+        grads_local = {"stage": synced_s, "shared": synced_sh}
+        ost = adam.AdamState(
+            step=state["opt_step"],
+            m={"stage": squeeze(state["opt_m"]["stage"]),
+               "shared": state["opt_m"]["shared"]},
+            v={"stage": squeeze(state["opt_v"]["stage"]),
+               "shared": state["opt_v"]["shared"]},
+        )
+        new_p, ost, opt_mets = adam.update(params_local, grads_local, ost,
+                                           adam_cfg, gnorm=gnorm)
+
+        unsq = lambda t: jax.tree_util.tree_map(lambda a: a[None], t)
+        new_state = {
+            "stage_params": unsq(new_p["stage"]),
+            "shared_params": new_p["shared"],
+            "opt_m": {"stage": unsq(ost.m["stage"]), "shared": ost.m["shared"]},
+            "opt_v": {"stage": unsq(ost.v["stage"]), "shared": ost.v["shared"]},
+            "opt_step": ost.step,
+            "comp": jax.tree_util.tree_map(lambda a: a[None, None], comp2),
+        }
+        metrics = {"loss": loss, "entropy": entropy, **opt_mets}
+        return new_state, metrics
+
+    dp = tuple(axes_dp)
+    sspecs = {
+        "stage_params": P("pipe"),
+        "shared_params": P(),
+        "opt_m": {"stage": P("pipe"), "shared": P()},
+        "opt_v": {"stage": P("pipe"), "shared": P()},
+        "opt_step": P(),
+        "comp": P("pipe", dp),
+    }
+    step = shard_map_dp(
+        local_step, mesh,
+        in_specs=(sspecs, P(dp)),
+        out_specs=({**sspecs}, P()),
+        manual_axes=manual,
+    )
+    return step
+
+
+def pipeline_state_shardings(state, model: Model, mesh):
+    """NamedShardings for the pipelined TrainState.
+
+    Stage-stacked leaves: 'pipe' on the stage dim + Megatron TP on the
+    rest; shared leaves follow the flat TP rules; compressor state leads
+    with ('pipe', dp) and keeps its (rank-thin or group-mixed) trailing
+    dims replicated, mirroring the flat trainer's bucketed layout choice.
+    """
+    stage_specs = stage_param_pspecs(state["stage_params"], mesh)
+    shared_specs = param_pspecs(state["shared_params"], mesh)
+    dp = dp_axes(mesh)
+    ns = lambda spec: NamedSharding(mesh, spec)
+    tmap = jax.tree_util.tree_map
+    comp_shard = tmap(lambda a: ns(P("pipe", tuple(dp))), state["comp"])
+    return {
+        "stage_params": tmap(ns, stage_specs),
+        "shared_params": tmap(ns, shared_specs),
+        "opt_m": {"stage": tmap(ns, stage_specs),
+                  "shared": tmap(ns, shared_specs)},
+        "opt_v": {"stage": tmap(ns, stage_specs),
+                  "shared": tmap(ns, shared_specs)},
+        "opt_step": ns(P()),
+        "comp": comp_shard,
+    }

@@ -1,0 +1,321 @@
+"""Per-stage DP gradient sync — the first end-to-end run of Algorithm 2.
+
+Each pipeline rank holds one stage's gradients and must sync them over the
+(pod, data) axes at the rank the DAC assigned to ITS stage. One SPMD
+program cannot give different ranks different collective shapes, so the
+executor runs one bucketed schedule (``core/bucketing.py``) per DISTINCT
+per-stage plan and each rank keeps the result of the schedule that covers
+its stage:
+
+  * ``none`` / ``fixed`` / warm-up — every stage shares one plan: a single
+    schedule, zero redundancy (the common case).
+  * ``edgc`` / ``optimus`` — D <= S distinct rank assignments (DAC
+    quantization keeps D small): D schedules per step, the off-stage
+    results masked. The redundant compute/wire work is the price of
+    single-program SPMD (Megatron pays with per-stage processes instead);
+    the per-stage accounting that the paper's Tables III/VI need is exact
+    either way (:func:`stage_wire_bytes`).
+
+Compressor state is keyed ``p{d}:{group}`` per distinct plan, with leading
+(stage, dp-replica) dims sharded ``P('pipe', ('pod','data'))``: every rank
+carries a shape-correct slice of every schedule's state, but only the
+slice of its OWN schedule holds live data (the others evolve masked-off
+garbage that is never read back — the host reads the diagonal).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bucketing
+from repro.core.bucketing import BucketLayout
+from repro.core.compressor import CompressionPlan, LeafInfo, NO_COMPRESSION
+from repro.core.powersgd import (
+    LowRankState,
+    compressed_bytes,
+    init_leaf_state,
+    resize_rank,
+)
+from repro.pipeline.partition import global_leaf_path, local_leaf_path
+
+__all__ = [
+    "StagePlans",
+    "make_stage_plans",
+    "stage_sync_grads",
+    "stage_wire_bytes",
+    "init_pipeline_comp_state",
+    "resize_pipeline_comp_state",
+    "replicate_pipeline_comp_state",
+]
+
+PsumFn = Callable[[jax.Array], jax.Array]
+
+
+@dataclasses.dataclass(frozen=True)
+class StagePlans:
+    """Static per-stage sync schedule: distinct local plans + layouts.
+
+    ``stage_plans[s]`` is stage s's plan over STAGE-LOCAL leaf paths;
+    ``distinct`` de-duplicates them (order of first appearance by stage),
+    ``d_of_stage[s]`` indexes a stage's schedule, and ``layouts[d]`` is the
+    bucketed sync layout each schedule executes.
+    """
+
+    num_stages: int
+    stage_plans: tuple[CompressionPlan, ...]
+    distinct: tuple[tuple[CompressionPlan, tuple[int, ...]], ...]
+    d_of_stage: tuple[int, ...]
+    layouts: tuple[BucketLayout, ...]
+
+    def state_key(self, d: int, group_key: str) -> str:
+        return f"p{d}:{group_key}"
+
+
+def local_leaves_of(tree: Any) -> list[tuple[str, tuple[int, ...]]]:
+    """(path, shape) pairs of a stage-local tree, in flatten order."""
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    return [(jax.tree_util.keystr(kp), tuple(leaf.shape)) for kp, leaf in flat]
+
+
+def stage_local_leaves(stacked_tree: Any) -> list[tuple[str, tuple[int, ...]]]:
+    """Local (path, shape) pairs of a STAGE-STACKED tree (leading S dim
+    stripped) — what one pipe rank's gradient tree looks like."""
+    flat = jax.tree_util.tree_flatten_with_path(stacked_tree)[0]
+    return [(jax.tree_util.keystr(kp), tuple(leaf.shape)[1:])
+            for kp, leaf in flat]
+
+
+def make_stage_plans(
+    plan: CompressionPlan,
+    num_stages: int,
+    local_leaves: list[tuple[str, tuple[int, ...]]],
+    bucket_bytes: int = bucketing.DEFAULT_BUCKET_BYTES,
+) -> StagePlans:
+    """Split a flat-layout plan into per-stage local plans + layouts.
+
+    Pure function of (plan, leaf shapes): trace-time, host init, and window
+    re-plans all derive the identical object, like ``BucketLayout`` itself.
+    """
+    per_stage: list[list[tuple[str, int]]] = [[] for _ in range(num_stages)]
+    for path, rank in plan.ranks:
+        loc = local_leaf_path(path)
+        if loc is None:
+            raise ValueError(f"plan compresses non-stage leaf {path!r}; "
+                             "shared leaves are excluded from compression")
+        s, lp = loc
+        if s >= num_stages:
+            raise ValueError(f"leaf {path!r} names stage {s} >= {num_stages}")
+        per_stage[s].append((lp, rank))
+    stage_plans = tuple(CompressionPlan(ranks=tuple(r)) for r in per_stage)
+
+    distinct: list[tuple[CompressionPlan, tuple[int, ...]]] = []
+    d_of_stage: list[int] = []
+    for s, sp in enumerate(stage_plans):
+        for d, (p, stages) in enumerate(distinct):
+            if p == sp:
+                distinct[d] = (p, stages + (s,))
+                d_of_stage.append(d)
+                break
+        else:
+            d_of_stage.append(len(distinct))
+            distinct.append((sp, (s,)))
+
+    layouts = tuple(
+        bucketing.make_bucket_layout(local_leaves, p, bucket_bytes)
+        for p, _ in distinct
+    )
+    return StagePlans(
+        num_stages=num_stages,
+        stage_plans=stage_plans,
+        distinct=tuple(distinct),
+        d_of_stage=tuple(d_of_stage),
+        layouts=layouts,
+    )
+
+
+# ------------------------------------------------------------------ executor
+def _sub_state(comp: dict, prefix: str) -> dict:
+    return {k[len(prefix):]: v for k, v in comp.items() if k.startswith(prefix)}
+
+
+def stage_sync_grads(
+    stage_grads: Any,
+    shared_grads: Any,
+    comp_state: dict[str, LowRankState],
+    splans: StagePlans,
+    psum_mean: PsumFn,
+    my_stage: jax.Array,
+    use_kernels: bool = False,
+) -> tuple[Any, Any, dict[str, LowRankState]]:
+    """Sync one rank's stage grads (+ the pipe-summed shared grads) over DP.
+
+    ``my_stage`` is the rank's pipe index (traced inside shard_map, or a
+    concrete int in unit tests). Runs every distinct schedule; keeps the one
+    covering ``my_stage``. Returns (synced_stage, synced_shared, new_state).
+    """
+    new_state = dict(comp_state)
+
+    out_stage = None
+    d_of_stage = jnp.asarray(splans.d_of_stage, jnp.int32)
+    my_d = d_of_stage[my_stage]
+    for d, (plan_d, _) in enumerate(splans.distinct):
+        prefix = f"p{d}:"
+        synced_d, st_d = bucketing.bucketed_sync_grads(
+            stage_grads, _sub_state(comp_state, prefix), splans.layouts[d],
+            psum_mean, use_kernels=use_kernels,
+        )
+        for k, v in st_d.items():
+            new_state[prefix + k] = v
+        if out_stage is None:
+            out_stage = synced_d
+        else:
+            mine = my_d == d
+            out_stage = jax.tree_util.tree_map(
+                lambda a, b: jnp.where(mine, a, b), synced_d, out_stage)
+
+    # Shared leaves are never compressed (DEFAULT_EXCLUDE covers embeddings,
+    # head, norms), so they move as one flat-bucket schedule, once.
+    shared_layout = bucketing.layout_for_tree(shared_grads, NO_COMPRESSION)
+    synced_shared, _ = bucketing.bucketed_sync_grads(
+        shared_grads, {}, shared_layout, psum_mean)
+    return out_stage, synced_shared, new_state
+
+
+# ----------------------------------------------------------------- accounting
+def stage_wire_bytes(
+    leaves: list[LeafInfo],
+    plan: CompressionPlan,
+    num_stages: int,
+    bytes_per_elem: int = 2,
+) -> list[tuple[int, int]]:
+    """Per-stage (compressed, full) DP-sync bytes — Algorithm 2's ledger.
+
+    Stage s's DP ring moves exactly its own leaves' bytes (stage params are
+    disjoint across ranks; shared leaves are charged to their owning
+    boundary stage, consistent with ``_layer_stage`` pinning).
+    """
+    rank_by_path = plan.as_dict()
+    out = [[0, 0] for _ in range(num_stages)]
+    for info in leaves:
+        s = min(info.stage, num_stages - 1)
+        nelem = 1
+        for d in info.shape:
+            nelem *= d
+        out[s][1] += nelem * bytes_per_elem
+        if info.path in rank_by_path:
+            out[s][0] += compressed_bytes(
+                info.shape, rank_by_path[info.path], bytes_per_elem)
+        else:
+            out[s][0] += nelem * bytes_per_elem
+    return [tuple(x) for x in out]
+
+
+# ------------------------------------------------------------ state plumbing
+def init_pipeline_comp_state(
+    params: Any,
+    plan: CompressionPlan,
+    key: jax.Array,
+    splans: StagePlans,
+) -> dict[str, LowRankState]:
+    """Host-side compressor state for the pipelined executor.
+
+    Per-leaf warm starts use the SAME key folding as the flat
+    ``init_compressor_state`` (fold_in by global plan index), so the
+    pipelined and single-program trainers start from bit-identical Q.
+    Leaves: (S, ...) stacked — uncovered (masked-off) stage slices are
+    filled with the first covered stage's values, which keeps every slice
+    finite and every rank's program shape-uniform.
+    """
+    by_path = {
+        jax.tree_util.keystr(kp): leaf
+        for kp, leaf in jax.tree_util.tree_flatten_with_path(params)[0]
+    }
+    per_leaf: dict[str, LowRankState] = {}
+    for i, (path, rank) in enumerate(plan.ranks):
+        leaf = by_path[path]
+        per_leaf[path] = init_leaf_state(
+            tuple(leaf.shape), rank, jax.random.fold_in(key, i), leaf.dtype)
+
+    state: dict[str, LowRankState] = {}
+    for d, (plan_d, stages_d) in enumerate(splans.distinct):
+        if not plan_d.ranks:
+            continue
+        layout = splans.layouts[d]
+        stacks = []
+        for s in range(splans.num_stages):
+            src = s if s in stages_d else stages_d[0]
+            local = {lp: per_leaf[global_leaf_path(src, lp)]
+                     for lp, _ in plan_d.ranks}
+            stacks.append(bucketing.stack_state(local, layout))
+        for gk in stacks[0]:
+            state[splans.state_key(d, gk)] = LowRankState(
+                q=jnp.stack([st[gk].q for st in stacks]),
+                err=jnp.stack([st[gk].err for st in stacks]),
+            )
+    return state
+
+
+def replicate_pipeline_comp_state(state: dict, world: int) -> dict:
+    """Insert the per-DP-worker replica dim AFTER the stage dim: (S, W, ...)."""
+    return jax.tree_util.tree_map(
+        lambda a: jnp.broadcast_to(a[:, None], a.shape[:1] + (world,)
+                                   + a.shape[1:]), state)
+
+
+def resize_pipeline_comp_state(
+    state: dict[str, LowRankState],
+    old_splans: StagePlans,
+    new_splans: StagePlans,
+    key: jax.Array,
+) -> dict[str, LowRankState]:
+    """Migrate warm-start Q / EF across a DAC window re-plan (host-side).
+
+    ``state`` leaves are (S, W, ...); worker 0's diagonal slice (the live
+    data for each stage) is resized per the new stage plan — matching the
+    flat trainer's plan-change semantics — and restacked WITHOUT the W dim
+    (caller re-replicates).
+    """
+    S = new_splans.num_stages
+    per_stage_local: list[dict[str, LowRankState]] = []
+    for s in range(S):
+        d_old = old_splans.d_of_stage[s] if s < old_splans.num_stages else 0
+        prefix = f"p{d_old}:"
+        old_sub = {
+            k[len(prefix):]: LowRankState(q=v.q[s, 0], err=v.err[s, 0])
+            for k, v in state.items() if k.startswith(prefix)
+        }
+        per_leaf = (bucketing.unstack_state(old_sub,
+                                            old_splans.layouts[d_old])
+                    if old_sub else {})
+        new_plan = new_splans.stage_plans[s]
+        shapes = {p: shp
+                  for g in new_splans.layouts[new_splans.d_of_stage[s]].groups
+                  for p, shp in g.members}
+        fresh: dict[str, LowRankState] = {}
+        for i, (lp, rank) in enumerate(new_plan.ranks):
+            sub = jax.random.fold_in(key, s * 100_003 + i)
+            if lp in per_leaf:
+                fresh[lp] = resize_rank(per_leaf[lp], rank, sub)
+            else:
+                fresh[lp] = init_leaf_state(shapes[lp], rank, sub, jnp.float32)
+        per_stage_local.append(fresh)
+
+    out: dict[str, LowRankState] = {}
+    for d, (plan_d, stages_d) in enumerate(new_splans.distinct):
+        if not plan_d.ranks:
+            continue
+        layout = new_splans.layouts[d]
+        stacks = []
+        for s in range(S):
+            src = s if s in stages_d else stages_d[0]
+            local = {lp: per_stage_local[src][lp] for lp, _ in plan_d.ranks}
+            stacks.append(bucketing.stack_state(local, layout))
+        for gk in stacks[0]:
+            out[new_splans.state_key(d, gk)] = LowRankState(
+                q=jnp.stack([st[gk].q for st in stacks]),
+                err=jnp.stack([st[gk].err for st in stacks]),
+            )
+    return out

@@ -30,6 +30,18 @@ def save(path: str, state: Any, extra: dict | None = None) -> None:
         json.dump(manifest, f)
 
 
+def read_extra(path: str) -> dict:
+    """Manifest ``extra`` dict only — no array loading.
+
+    The trainer reads this FIRST on resume: the controller state inside it
+    determines the compression plan, and the plan determines the shapes of
+    the compressor-state arrays that ``restore`` will then be checked
+    against.
+    """
+    with open(path + ".json") as f:
+        return json.load(f)["extra"]
+
+
 def restore(path: str, like: Any) -> tuple[Any, dict]:
     """Restore into the structure of ``like`` (shape/dtype checked)."""
     with open(path + ".json") as f:

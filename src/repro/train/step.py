@@ -48,6 +48,11 @@ class TrainStepConfig:
     use_kernels: bool = False
     bucketed: bool | None = None   # DP sync executor; None = infer from state
     remat: bool = True             # activation checkpointing over blocks
+    # Pipeline parallelism (repro.pipeline): > 1 routes make_train_step to
+    # the pipelined builder; the mesh must carry a matching 'pipe' axis.
+    num_stages: int = 1
+    schedule: str = "1f1b"         # gpipe | 1f1b
+    num_microbatches: int = 0      # 0 -> num_stages
     adam: adam.AdamConfig = dataclasses.field(default_factory=adam.AdamConfig)
 
 
@@ -67,7 +72,14 @@ def make_train_step(model: Model, mesh, cfg: TrainStepConfig):
     step signature: (state, batch) -> (state, metrics)
       state = {params, opt_m, opt_v, opt_step, comp}
       metrics = {loss, grad_norm, lr, entropy}
+
+    ``cfg.num_stages > 1`` routes to the pipeline-parallel builder
+    (``repro.pipeline.schedule``): same signature, but the state carries
+    the stage-partitioned layout documented there.
     """
+    if cfg.num_stages > 1 or "pipe" in mesh.axis_names:
+        from repro.pipeline.schedule import make_pipeline_train_step
+        return make_pipeline_train_step(model, mesh, cfg)
     axes = dp_axes(mesh)
     adam_cfg = cfg.adam
 

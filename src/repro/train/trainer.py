@@ -40,7 +40,7 @@ from repro.train.step import (
     replicate_comp_state,
     state_shardings,
 )
-from repro.launch.mesh import dp_axes
+from repro.launch.mesh import dp_axes, pipe_size
 
 
 @dataclasses.dataclass
@@ -59,6 +59,10 @@ class TrainerConfig:
     # forces gradient all-gathers (see state_shardings) — so the Trainer
     # drops to the per-leaf executor when the mesh has a model axis > 1.
     bucketed: bool = True
+    # Pipeline parallelism (used when the mesh has a 'pipe' axis and the
+    # EDGC config asks for num_stages > 1).
+    schedule: str = "1f1b"         # gpipe | 1f1b
+    num_microbatches: int = 0      # 0 -> num_stages
     adam: adam.AdamConfig = dataclasses.field(default_factory=adam.AdamConfig)
 
 
@@ -80,30 +84,73 @@ class Trainer:
         self.world = int(np.prod([sizes.get(a, 1) for a in dp_axes(mesh)])) or 1
         self.controller = EDGCController(edgc_cfg, self.leaves, world=self.world)
 
-        ost = adam.init(params, tcfg.adam)
-        # Stacked (group-keyed) compressor state + the bucketed sync executor:
-        # O(shape groups + flat buckets) DP collectives instead of O(leaves).
-        # TP>1 keeps the per-leaf executor (see TrainerConfig.bucketed).
-        self._bucketed = tcfg.bucketed and bucketing_supported(mesh)
-        self._layout = (make_bucket_layout(self.leaves, self.controller.plan)
-                        if self._bucketed else None)
-        comp = init_compressor_state(params, self.controller.plan,
-                                     jax.random.fold_in(key, 99),
-                                     layout=self._layout)
-        comp = replicate_comp_state(comp, self.world)
-        self.state = {"params": params, "opt_m": ost.m, "opt_v": ost.v,
-                      "opt_step": ost.step, "comp": comp}
+        # Pipeline-parallel execution: a 'pipe' mesh axis + num_stages > 1
+        # routes everything through repro.pipeline (stage-partitioned state,
+        # microbatch schedule, per-stage DP sync). Without a pipe axis,
+        # num_stages > 1 keeps the legacy "virtual stages" semantics (DAC
+        # emits per-stage ranks, the sync runs on the flat DP mesh).
+        self.pipelined = "pipe" in mesh.axis_names
+        if self.pipelined and pipe_size(mesh) != edgc_cfg.num_stages:
+            raise ValueError(
+                f"mesh pipe axis size {pipe_size(mesh)} != "
+                f"num_stages={edgc_cfg.num_stages}")
+
+        self._comp_key = jax.random.fold_in(key, 123)
+        if self.pipelined:
+            self._init_pipelined_state(params, jax.random.fold_in(key, 99),
+                                       tcfg.adam)
+        else:
+            ost = adam.init(params, tcfg.adam)
+            # Stacked (group-keyed) compressor state + the bucketed sync
+            # executor: O(shape groups + flat buckets) DP collectives
+            # instead of O(leaves). TP>1 keeps the per-leaf executor (see
+            # TrainerConfig.bucketed).
+            self._bucketed = tcfg.bucketed and bucketing_supported(mesh)
+            self._layout = (make_bucket_layout(self.leaves,
+                                               self.controller.plan)
+                            if self._bucketed else None)
+            comp = init_compressor_state(params, self.controller.plan,
+                                         jax.random.fold_in(key, 99),
+                                         layout=self._layout)
+            comp = replicate_comp_state(comp, self.world)
+            self.state = {"params": params, "opt_m": ost.m, "opt_v": ost.v,
+                          "opt_step": ost.step, "comp": comp}
         self._shard_state()
 
         self._step_cache: dict[Any, Any] = {}
-        self._comp_key = jax.random.fold_in(key, 123)
         self.history: list[dict] = []
         self.bytes_synced = 0           # exact DP wire bytes so far
         self.bytes_full = 0             # what no-compression would have moved
 
+    def _init_pipelined_state(self, params, comp_key, acfg) -> None:
+        from repro.pipeline import partition as ppart
+        from repro.pipeline import sync as psync
+
+        S = self.edgc_cfg.num_stages
+        reason = ppart.pipeline_supported(self.model.config, S)
+        if reason is not None:
+            raise ValueError(f"pipeline trainer unsupported: {reason}")
+        stage_p, shared_p = ppart.partition_params(params, S)
+        ost = adam.init({"stage": stage_p, "shared": shared_p}, acfg)
+        self._splans = psync.make_stage_plans(
+            self.controller.plan, S, psync.stage_local_leaves(stage_p))
+        comp = psync.init_pipeline_comp_state(
+            params, self.controller.plan, comp_key, self._splans)
+        comp = psync.replicate_pipeline_comp_state(comp, self.world)
+        self.state = {
+            "stage_params": stage_p, "shared_params": shared_p,
+            "opt_m": ost.m, "opt_v": ost.v, "opt_step": ost.step,
+            "comp": comp,
+        }
+
     # ------------------------------------------------------------------ setup
     def _shard_state(self) -> None:
-        self._sshard = state_shardings(self.state, self.model, self.mesh)
+        if self.pipelined:
+            from repro.pipeline.schedule import pipeline_state_shardings
+            self._sshard = pipeline_state_shardings(self.state, self.model,
+                                                    self.mesh)
+        else:
+            self._sshard = state_shardings(self.state, self.model, self.mesh)
         self.state = jax.device_put(self.state, self._sshard)
 
     def _get_step(self):
@@ -115,8 +162,12 @@ class Trainer:
                 gds=self.edgc_cfg.gds,
                 measure_entropy=self.tcfg.measure_entropy,
                 use_kernels=self.tcfg.use_kernels,
-                bucketed=self._bucketed,
+                bucketed=None if self.pipelined else self._bucketed,
                 remat=self.tcfg.remat,
+                num_stages=self.edgc_cfg.num_stages if self.pipelined else 1,
+                schedule=self.tcfg.schedule,
+                num_microbatches=self.tcfg.num_microbatches,
+                adam=self.tcfg.adam,
             )
             raw = make_train_step(self.model, self.mesh, scfg)
             self._step_cache[key] = jax.jit(
@@ -135,6 +186,21 @@ class Trainer:
         leaves get fresh state.
         """
         plan = self.controller.plan
+        if self.pipelined:
+            from repro.pipeline import sync as psync
+            S = self.edgc_cfg.num_stages
+            new_splans = psync.make_stage_plans(
+                plan, S,
+                psync.stage_local_leaves(self.state["stage_params"]))
+            comp_host = jax.device_get(self.state["comp"])
+            fresh = psync.resize_pipeline_comp_state(
+                comp_host, self._splans, new_splans, self._comp_key)
+            self._splans = new_splans
+            comp = psync.replicate_pipeline_comp_state(fresh, self.world)
+            self.state = dict(self.state)
+            self.state["comp"] = comp
+            self._shard_state()
+            return
         comp_host = jax.tree_util.tree_map(lambda a: a[0], self.state["comp"])
         if self._bucketed:
             new_layout = make_bucket_layout(self.leaves, plan)
@@ -167,6 +233,7 @@ class Trainer:
         """
         tcfg, ctrl = self.tcfg, self.controller
         comp_bytes, full_bytes = plan_wire_bytes(self.leaves, ctrl.plan)
+        stage_b = self.stage_bytes()    # refreshed only at plan changes
         window = self.edgc_cfg.dac.window
         t0 = time.time()
         start = getattr(self, "_global_step", 0)
@@ -188,6 +255,7 @@ class Trainer:
                 if ctrl.on_window_end(step_idx):
                     self._apply_plan_change()
                     comp_bytes, full_bytes = plan_wire_bytes(self.leaves, ctrl.plan)
+                    stage_b = self.stage_bytes()
 
             if step_idx % tcfg.log_every == 0 or step_idx == tcfg.total_steps - 1:
                 rec = {
@@ -198,18 +266,62 @@ class Trainer:
                     "lr": float(mets["lr"]),
                     "bytes_synced": self.bytes_synced,
                     "bytes_full": self.bytes_full,
+                    "stage_bytes": stage_b,
                     "ranks": ctrl.dac.current_ranks() if not ctrl.in_warmup else [],
                     "wall_s": time.time() - t0,
                 }
                 self.history.append(rec)
 
             if tcfg.ckpt_every and (step_idx + 1) % tcfg.ckpt_every == 0:
-                ckpt_mod.save(f"{tcfg.ckpt_path}_{step_idx+1}", self.state,
-                              extra={"step": step_idx + 1})
+                self.save_checkpoint(f"{tcfg.ckpt_path}_{step_idx+1}",
+                                     step=step_idx + 1)
         self._global_step = end
         return self.history
 
+    # --------------------------------------------------------- checkpointing
+    def save_checkpoint(self, path: str, step: int | None = None) -> None:
+        """Device tree + the host control plane (controller/DAC/CQM state).
+
+        The ``extra`` dict carries everything the window loop mutates, so a
+        resumed run continues mid-window instead of silently restarting
+        warm-up (paper §IV-D2: warm-up is a once-per-run phase).
+        """
+        extra = {
+            "step": int(step if step is not None
+                        else getattr(self, "_global_step", 0)),
+            "bytes_synced": int(self.bytes_synced),
+            "bytes_full": int(self.bytes_full),
+            "controller": self.controller.state_dict(),
+        }
+        ckpt_mod.save(path, self.state, extra=extra)
+
+    def restore_checkpoint(self, path: str) -> int:
+        """Restore device tree + control plane; returns the global step.
+
+        Order matters: the controller state (and with it the compression
+        plan) is restored FIRST, the state template is re-shaped to that
+        plan, and only then are the arrays loaded into it.
+        """
+        extra = ckpt_mod.read_extra(path)
+        if "controller" in extra:
+            self.controller.load_state_dict(extra["controller"])
+            self._apply_plan_change()     # reshape comp state to the plan
+        self.bytes_synced = int(extra.get("bytes_synced", 0))
+        self.bytes_full = int(extra.get("bytes_full", 0))
+        self._global_step = int(extra.get("step", 0))
+        restored, _ = ckpt_mod.restore(path, jax.device_get(self.state))
+        self.state = restored
+        self._shard_state()
+        return self._global_step
+
     # --------------------------------------------------------------- summary
+    def stage_bytes(self) -> list[tuple[int, int]]:
+        """Per-stage (compressed, full) DP-sync bytes under the current plan
+        — the Algorithm-2 ledger (sums to ``plan_wire_bytes``)."""
+        from repro.pipeline.sync import stage_wire_bytes
+        return stage_wire_bytes(self.leaves, self.controller.plan,
+                                max(1, self.edgc_cfg.num_stages))
+
     def comm_savings(self) -> float:
         """Fraction of DP-sync bytes saved vs no compression (Table III)."""
         if self.bytes_full == 0:

@@ -95,6 +95,50 @@ def test_train_step(arch, built):
 
 
 @pytest.mark.parametrize("arch", ARCH_IDS)
+def test_stage_pinning_non_block_params(arch, built):
+    """Boundary pins in ``_layer_stage``: embeddings live on stage 0,
+    lm_head / final-norm on stage S-1 — explicitly, for every family,
+    rather than whatever a layer-index regex falls through to."""
+    from repro.core import classify_leaves
+
+    cfg, model, params = built(arch)
+    S = 3
+    leaves = classify_leaves(params, cfg.num_layers, S)
+    assert leaves, arch
+    saw_embed = saw_head = False
+    for leaf in leaves:
+        in_stage = "stages" in leaf.path
+        if not in_stage and "embed" in leaf.path:
+            assert leaf.stage == 0, f"{arch}: {leaf.path} -> {leaf.stage}"
+            saw_embed = True
+        if not in_stage and ("lm_head" in leaf.path
+                             or "final_norm" in leaf.path):
+            assert leaf.stage == S - 1, \
+                f"{arch}: {leaf.path} -> {leaf.stage}"
+            saw_head = True
+        assert 0 <= leaf.stage < S, f"{arch}: {leaf.path} -> {leaf.stage}"
+    assert saw_embed and saw_head, f"{arch}: pins not exercised"
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_block_params_follow_stage_index(arch, built):
+    """Block leaves land on their own ``['stages'][i]`` group (rescaled when
+    the layout granularity differs from the requested S)."""
+    from repro.core import classify_leaves
+
+    cfg, model, params = built(arch)
+    n_groups = max(1, min(cfg.num_stages, cfg.num_layers))
+    leaves = classify_leaves(params, cfg.num_layers, n_groups)
+    import re
+    for leaf in leaves:
+        m = re.search(r"\['stages'\]\[(\d+)\]", leaf.path)
+        if m is not None:
+            i = int(m.group(1))
+            assert leaf.stage == min(i, n_groups - 1), \
+                f"{arch}: {leaf.path} -> {leaf.stage}"
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
 def test_decode_step(arch, built):
     cfg, model, params = built(arch)
     if cfg.family == "whisper":
