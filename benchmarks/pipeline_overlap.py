@@ -7,15 +7,25 @@ Two layers, matching how the subsystem splits:
     1F1B, the Algorithm-2 rank vector from the analytic comm model, and the
     per-stage DP sync bytes it implies vs the flat-DP baseline — including
     the Eq. 4 overlap check (every stage's sync fits stage 1's sync time
-    plus its backprop head start).
+    plus its backprop head start). The unit-tick numbers are then
+    CALIBRATED: per-microbatch forward and forward+backward wall times are
+    measured on the fidelity config, per-call costs recovered with
+    ``CommModel.fit`` (least squares through the origin over microbatch
+    counts — the same fit that reproduces Fig. 9's T = eta*r), and the
+    weighted schedule simulation (``simulate_schedule``) reports the
+    bubble fraction and Eq. 4 slack in SECONDS with B-cost != F-cost.
   * **Execution** (``main()``, standalone — forces 4 fake CPU devices
     before jax init): runs the pipelined Trainer (1F1B, pipe=4) and the
-    flat single-stage Trainer on the gpt2 fidelity config, asserts loss
-    parity, counts lowered collective ops, and (full mode) times both,
-    writing ``BENCH_pipeline.json``.
+    flat single-stage Trainer on the chosen family (``--family gpt2`` =
+    the dense fidelity config, ``--family moe`` = a 4-stage MoE smoke
+    config exercising the MoE stage adapter), asserts loss parity
+    (an envelope for MoE: per-microbatch router-aux means flip discrete
+    top-1 assignments), counts lowered collective ops, and (full mode)
+    times both, writing ``BENCH_pipeline.json``.
 
   PYTHONPATH=src python benchmarks/pipeline_overlap.py           # full+JSON
   PYTHONPATH=src python benchmarks/pipeline_overlap.py --smoke   # CI gate
+  PYTHONPATH=src python benchmarks/pipeline_overlap.py --smoke --family moe
 """
 import os
 
@@ -31,8 +41,85 @@ import time
 S, M = 4, 16
 
 
+def _moe_smoke_cfg(num_stages: int = S):
+    from repro.models.model import ModelConfig
+    return ModelConfig(
+        name="moe-pipe-smoke", family="moe", num_layers=4, d_model=128,
+        num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=512,
+        num_experts=4, experts_per_token=2, capacity_factor=4.0,
+        num_stages=num_stages)
+
+
+def _exec_cfg(family: str, num_stages: int = S):
+    if family == "moe":
+        return _moe_smoke_cfg(num_stages)
+    import dataclasses
+
+    from repro.configs.gpt2 import GPT2_FIDELITY
+    return dataclasses.replace(GPT2_FIDELITY, num_stages=num_stages)
+
+
 # ----------------------------------------------------------------- analytics
-def _analytics(num_stages: int = S, num_micro: int = M) -> dict:
+def _measure_tick_costs(num_stages: int = S, reps: int = 2) -> dict:
+    """Measured per-microbatch F and B costs via CommModel.fit.
+
+    Times k in {1, 2, 4} consecutive jitted calls of (a) the forward loss
+    and (b) value_and_grad on one microbatch of the fidelity config. A
+    through-origin fit of the RAW series would fold the fixed dispatch
+    overhead into the slope (t = c + eta*k fitted as eta'*k biases eta'
+    by c*sum(k)/sum(k^2)), so the k=1 measurement is subtracted first:
+    t(k) - t(1) = eta * (k - 1) passes exactly through the origin, and
+    ``CommModel.fit`` over (k-1, t(k)-t(1)) recovers an overhead-free
+    per-microbatch cost (MAPE reports the residual nonlinearity). The
+    backward-only cost is the difference of the two fits; both are
+    divided by S for the per-stage tick (the schedule's unit of work).
+    """
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.configs.gpt2 import GPT2_FIDELITY
+    from repro.core import CommModel
+    from repro.models.model import build_model
+
+    model = build_model(GPT2_FIDELITY)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    toks = jnp.asarray(rng.integers(0, GPT2_FIDELITY.vocab_size, (2, 64)),
+                       jnp.int32)
+    batch = {"tokens": toks, "labels": toks}
+
+    fwd = jax.jit(lambda p, b: model.loss_fn(p, b)[0])
+    fb = jax.jit(jax.grad(lambda p, b: model.loss_fn(p, b)[0]))
+
+    def time_calls(fn, k: int) -> float:
+        fn(params, batch)        # warm (compile)
+        best = float("inf")
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            for _ in range(k):
+                jax.block_until_ready(fn(params, batch))
+            best = min(best, time.perf_counter() - t0)
+        return best
+
+    ks = np.asarray([1, 2, 4], np.float64)
+    fwd_s = np.asarray([time_calls(fwd, int(k)) for k in ks])
+    fb_s = np.asarray([time_calls(fb, int(k)) for k in ks])
+    m_f, mape_f = CommModel.fit(ks[1:] - ks[0], fwd_s[1:] - fwd_s[0])
+    m_fb, mape_fb = CommModel.fit(ks[1:] - ks[0], fb_s[1:] - fb_s[0])
+    t_f = m_f.eta / num_stages
+    t_b = max(m_fb.eta - m_f.eta, 1e-9) / num_stages
+    return {
+        "t_f_stage_s": t_f,
+        "t_b_stage_s": t_b,
+        "b_over_f": t_b / max(t_f, 1e-12),
+        "fit_mape_f": mape_f,
+        "fit_mape_fb": mape_fb,
+    }
+
+
+def _analytics(num_stages: int = S, num_micro: int = M,
+               measure: bool = True) -> dict:
     import jax
 
     from repro.configs.gpt2 import GPT2_FIDELITY
@@ -40,8 +127,8 @@ def _analytics(num_stages: int = S, num_micro: int = M) -> dict:
         plan_wire_bytes, stage_aligned_ranks
     from repro.models.model import build_model
     from repro.pipeline.schedule import (
-        bubble_fraction, peak_inflight, ring_slots, slot_table,
-        sync_slack_ticks, tick_count,
+        bubble_fraction, peak_inflight, ring_slots, simulate_schedule,
+        slot_table, sync_slack_ticks, tick_count,
     )
     from repro.pipeline.sync import stage_wire_bytes
 
@@ -80,7 +167,7 @@ def _analytics(num_stages: int = S, num_micro: int = M) -> dict:
         comm.t_com(ranks[s]) <= t1 + s * t_micro + 1e-12
         for s in range(num_stages)
     )
-    return {
+    rec = {
         "num_stages": num_stages,
         "num_microbatches": num_micro,
         "bubble_fraction": bubble_fraction(num_stages, num_micro),
@@ -90,6 +177,30 @@ def _analytics(num_stages: int = S, num_micro: int = M) -> dict:
         "plan_bytes": {"compressed": comp_total, "full": full_total},
         "overlap_feasible": overlap_ok,
     }
+
+    if measure:
+        # Calibrated tick costs (satellite): measured F/B per-microbatch
+        # times instead of B-cost == F-cost, simulated through the real
+        # dependency structure. The DAC slack the paper's Eq. 4 consumes
+        # is the BACKWARD tick length, so the calibrated rank vector uses
+        # the measured t_b (the analytic one above uses a comm-model
+        # stand-in).
+        costs = _measure_tick_costs(num_stages)
+        cal = {}
+        for name in ("gpipe", "1f1b"):
+            sim = simulate_schedule(name, num_stages, num_micro,
+                                    costs["t_f_stage_s"],
+                                    costs["t_b_stage_s"])
+            cal[name] = {
+                "bubble_fraction": sim["bubble_fraction"],
+                "slack_seconds": sim["slack_seconds"],
+                "makespan_s": sim["makespan"],
+            }
+        ranks_cal = stage_aligned_ranks(r1, num_stages, comm,
+                                        costs["t_b_stage_s"], r_min, r_max)
+        rec["calibrated"] = {**costs, "schedules": cal,
+                             "dac_ranks": ranks_cal}
+    return rec
 
 
 def _check_analytics(a: dict) -> None:
@@ -106,6 +217,18 @@ def _check_analytics(a: dict) -> None:
     assert sum(c for c, _ in per_stage) == a["plan_bytes"]["compressed"]
     assert sum(fu for _, fu in per_stage) == a["plan_bytes"]["full"]
     assert all(c <= fu for c, fu in per_stage)
+    if "calibrated" in a:
+        cal = a["calibrated"]
+        assert cal["t_f_stage_s"] > 0 and cal["t_b_stage_s"] > 0
+        for name in ("gpipe", "1f1b"):
+            slack = cal["schedules"][name]["slack_seconds"]
+            # Eq. 4 slack opens monotonically with the stage index and is
+            # (to scheduling jitter) s backward ticks
+            assert slack[0] == 0.0
+            assert all(b >= a2 - 1e-12 for a2, b in zip(slack, slack[1:])), \
+                slack
+        ranks_cal = cal["dac_ranks"]
+        assert all(r2 >= r1 for r1, r2 in zip(ranks_cal, ranks_cal[1:]))
 
 
 def _csv_row(name: str, us_per_call: float, derived: str) -> str:
@@ -117,7 +240,7 @@ def _csv_row(name: str, us_per_call: float, derived: str) -> str:
 
 def _rows(a: dict, us: float) -> list[str]:
     g, f = a["schedules"]["gpipe"], a["schedules"]["1f1b"]
-    return [
+    rows = [
         _csv_row("pipeline_bubble_fraction", us,
                  f"{a['bubble_fraction']:.4f}"),
         _csv_row("pipeline_peak_acts_gpipe", 0.0, str(max(g["peak_inflight"]))),
@@ -127,21 +250,39 @@ def _rows(a: dict, us: float) -> list[str]:
                  ";".join(str(c) for c, _ in a["stage_bytes"])),
         _csv_row("pipeline_overlap_feasible", 0.0, str(a["overlap_feasible"])),
     ]
+    if "calibrated" in a:
+        cal = a["calibrated"]
+        rows += [
+            _csv_row("pipeline_tick_b_over_f",
+                     cal["t_b_stage_s"] * 1e6, f"{cal['b_over_f']:.2f}"),
+            _csv_row("pipeline_bubble_calibrated_1f1b", 0.0,
+                     f"{cal['schedules']['1f1b']['bubble_fraction']:.4f}"),
+            _csv_row("pipeline_slack_s_calibrated_1f1b", 0.0,
+                     ";".join(f"{s:.2e}"
+                              for s in cal["schedules"]["1f1b"]
+                              ["slack_seconds"])),
+            _csv_row("pipeline_dac_ranks_calibrated", 0.0,
+                     ";".join(map(str, cal["dac_ranks"]))),
+        ]
+    return rows
 
 
 def run(steps: int | None = None) -> list[str]:
-    """Device-independent analytics rows (the benchmarks.run entry)."""
+    """Device-independent analytics rows (the benchmarks.run entry).
+
+    Skips the wall-clock calibration (registered benchmarks must stay
+    deterministic/cheap); the standalone main() measures it.
+    """
     t0 = time.time()
-    a = _analytics()
+    a = _analytics(measure=False)
     _check_analytics(a)
     return _rows(a, (time.time() - t0) * 1e6)
 
 
 # ----------------------------------------------------------------- execution
-def _trainers(steps: int):
+def _trainers(steps: int, family: str = "gpt2"):
     import jax  # noqa: F401  (device count must already be forced)
 
-    from repro.configs.gpt2 import GPT2_FIDELITY
     from repro.core import EDGCConfig, GDSConfig
     from repro.core.dac import DACConfig
     from repro.data.pipeline import SyntheticLM
@@ -151,8 +292,13 @@ def _trainers(steps: int):
     from repro.train.trainer import Trainer, TrainerConfig
 
     def mk(mesh, schedule="1f1b"):
-        model = build_model(GPT2_FIDELITY)
-        edgc = EDGCConfig(policy="fixed", fixed_rank=8, num_stages=4,
+        # Both trainers share one config (num_stages=4): the flat baseline
+        # keeps the "virtual stages" semantics, so param layouts — and with
+        # them the PowerSGD warm-start keys — are identical and the loss
+        # trajectories are comparable down to fp tolerance.
+        cfg = _exec_cfg(family, S)
+        model = build_model(cfg)
+        edgc = EDGCConfig(policy="fixed", fixed_rank=8, num_stages=S,
                           total_iterations=steps,
                           gds=GDSConfig(alpha=0.5, beta=0.25),
                           dac=DACConfig(window=max(2, steps // 2)))
@@ -162,14 +308,14 @@ def _trainers(steps: int):
                                              total_steps=steps))
         return Trainer(model, mesh, edgc, tcfg, seed=0)
 
-    data = lambda: SyntheticLM(GPT2_FIDELITY.vocab_size, 32, 8,
-                               seed=3).batches()
+    vocab = _exec_cfg(family).vocab_size
+    data = lambda: SyntheticLM(vocab, 32, 8, seed=3).batches()
     pipe = mk(make_host_mesh(pipe=4, data=1, model=1))
     flat = mk(make_host_mesh(data=1, model=1))
     return pipe, flat, data
 
 
-def execute(smoke: bool) -> dict:
+def execute(smoke: bool, family: str = "gpt2") -> dict:
     import re
 
     import jax
@@ -177,13 +323,17 @@ def execute(smoke: bool) -> dict:
     import numpy as np
 
     steps = 3 if smoke else 10
-    pipe, flat, data = _trainers(steps)
+    pipe, flat, data = _trainers(steps, family)
     hp = pipe.run(data())
     hf = flat.run(data())
     lp, lf = [h["loss"] for h in hp], [h["loss"] for h in hf]
     gap = max(abs(a - b) for a, b in zip(lp, lf))
     print(f"pipeline_loss_gap,0.000,{gap:.2e}")
-    assert gap < 5e-3, f"1F1B loss must match flat DP (gap {gap})"
+    # MoE: the pipelined run microbatches (M=S) while the flat baseline
+    # cannot, and per-microbatch router-aux means flip discrete top-k
+    # assignments — an envelope, not strict parity, is the correct check.
+    tol = 0.25 if family == "moe" else 5e-3
+    assert gap < tol, f"1F1B must track flat DP for {family} (gap {gap})"
     assert all(np.isfinite(lp)), lp
 
     # lowered-op census of the pipelined step: boundary ppermutes present
@@ -196,7 +346,7 @@ def execute(smoke: bool) -> dict:
     print(f"pipeline_allreduces,0.000,{n_allreduce}")
     assert n_permute > 0, "pipelined step must move boundaries via ppermute"
 
-    rec = {"loss_gap": float(gap), "ppermutes": n_permute,
+    rec = {"family": family, "loss_gap": float(gap), "ppermutes": n_permute,
            "allreduces": n_allreduce,
            "stage_bytes": pipe.stage_bytes()}
     if not smoke:
@@ -207,7 +357,7 @@ def execute(smoke: bool) -> dict:
             tr.run(it, num_steps=n)
             return (time.perf_counter() - t0) / n
 
-        p2, f2, data = _trainers(20)
+        p2, f2, data = _trainers(20, family)
         rec["s_per_step_pipelined"] = time_steps(p2)
         rec["s_per_step_flat"] = time_steps(f2)
         print(f"pipeline_step_s,{rec['s_per_step_pipelined']*1e6:.1f},pipelined")
@@ -219,17 +369,30 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="fast run: analytics asserts + 3-step loss parity")
-    ap.add_argument("--out", default="BENCH_pipeline.json")
+    ap.add_argument("--family", default="gpt2", choices=["gpt2", "moe"],
+                    help="execution config: dense fidelity or the MoE "
+                         "stage-adapter smoke config")
+    ap.add_argument("--out", default=None,
+                    help="JSON path (default: BENCH_pipeline.json for gpt2, "
+                         "BENCH_pipeline_<family>.json otherwise — the "
+                         "dense baseline is never silently clobbered)")
     args = ap.parse_args()
+    if args.out is None:
+        args.out = ("BENCH_pipeline.json" if args.family == "gpt2"
+                    else f"BENCH_pipeline_{args.family}.json")
 
     t0 = time.time()
-    a = _analytics()
+    # The analytics (and their wall-clock calibration) are defined on the
+    # dense fidelity config; only the gpt2 artifact records them so a
+    # family baseline never carries mislabeled dense numbers.
+    a = _analytics(measure=not args.smoke and args.family == "gpt2")
     _check_analytics(a)
     for row in _rows(a, (time.time() - t0) * 1e6):
         print(row)
-    rec = execute(args.smoke)
+    rec = execute(args.smoke, args.family)
     if not args.smoke:
-        payload = {"analytics": a, "execution": rec}
+        payload = ({"analytics": a, "execution": rec}
+                   if args.family == "gpt2" else {"execution": rec})
         with open(args.out, "w") as fh:
             json.dump(payload, fh, indent=2)
         print(f"# wrote {args.out}")

@@ -53,7 +53,14 @@ PsumFn = Callable[[jax.Array], jax.Array]
 
 # Leaves whose path matches are never compressed (Optimus-CC's own carve-out:
 # embedding/vocab projections; norms and biases are 1-D and excluded anyway).
-DEFAULT_EXCLUDE = r"(embed|lm_head|norm|bias|scale|router|conv|a_log|dt|state)"
+# ``shared`` (Zamba's parameter-shared attention block, applied on every
+# stage) and ``dec_pos`` (whisper's learned positional table) join the
+# embedding carve-out: they replicate over the pipe axis, and pipeline-shared
+# leaves must stay uncompressed (per-stage plans cover stage leaves only).
+DEFAULT_EXCLUDE = (
+    r"(embed|lm_head|norm|bias|scale|router|conv|a_log|dt|state"
+    r"|shared|dec_pos|projector)"
+)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -68,8 +75,12 @@ class LeafInfo:
 # embeddings live with the first stage (they feed it), the LM head and the
 # final norm with the last (they consume its output). Letting them fall
 # through the index regexes put them wherever the regex missed — stage 0 —
-# which is wrong for the head on every S > 1 model.
-_STAGE0_PAT = re.compile(r"embed|wte|wpe|patch_proj|pos", re.IGNORECASE)
+# which is wrong for the head on every S > 1 model. Pipeline-REPLICATED
+# leaves (Zamba's ``shared`` attention block, vision projectors) charge to
+# stage 0 like embeddings — one owner in the wire ledger, psum'd over pipe
+# in execution.
+_STAGE0_PAT = re.compile(r"embed|wte|wpe|patch_proj|pos|projector|shared",
+                         re.IGNORECASE)
 _STAGE_LAST_PAT = re.compile(r"lm_head|final_norm|head\b", re.IGNORECASE)
 _STAGE_IDX_PAT = re.compile(r"stages?\W{0,3}(\d+)")
 _LAYER_IDX_PAT = re.compile(r"layers?[/\[.](\d+)")

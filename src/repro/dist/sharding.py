@@ -107,11 +107,17 @@ def stage_param_pspecs(stacked: Any, mesh) -> Any:
     """Partition specs for a STAGE-STACKED param tree (pipeline parallelism).
 
     Every leaf carries a leading stage dim of size S = |pipe| (produced by
-    ``repro.pipeline.partition.partition_params``): dim 0 shards over the
+    the family's ``StageAdapter.partition_params``): dim 0 shards over the
     ``pipe`` axis so each pipeline rank holds exactly its stage's subtree,
     and the remaining dims follow the same Megatron TP rules as the flat
-    layout (the path still names wq/wo/up/down/... — only the leading dim
-    is new).
+    layout. This is per-family by construction because the rules key on
+    the leaf PATH, which the adapters preserve: a MoE expert stack
+    ``(S, L, E, d, f)`` still names ``experts`` so the E axis shards over
+    'model' (expert parallelism under TP), Mamba2 ``in_proj``/``out_proj``
+    keep their column/row rules, conv/dt/a_log leaves stay replicated,
+    and whisper's enc/dec attention projections shard like decoder ones.
+    Zero-padded slices of ragged (hybrid) stage plans shard with their
+    stack — padding never changes a leaf's path or trailing dims.
     """
     has_pipe = "pipe" in mesh.axis_names
 

@@ -122,10 +122,15 @@ def lower_one(arch: str, shape_name: str, mesh, policy: str = "edgc",
         return {"arch": arch, "shape": shape_name, "skipped": True,
                 "reason": "long_500k inapplicable (see DESIGN §5)"}
     pipe = "pipe" in mesh.axis_names
-    if pipe and not (kind == "train" and mode == "dp_tp"):
+    if pipe and kind != "train":
         return {"arch": arch, "shape": shape_name, "skipped": True,
-                "reason": "pipeline mesh applies to dp_tp train shapes only"}
+                "reason": "pipeline mesh applies to train shapes only"}
     if pipe:
+        # The stage adapter's own reason string is surfaced verbatim (a
+        # family without an adapter, a layer/stage mismatch, ...) instead
+        # of a bare traceback. Memory-bound 'auto' archs lower dp_tp-style
+        # here: the pipe axis splits the params S ways, standing in for
+        # the FSDP sharding the flat auto path would use.
         from repro.launch.mesh import pipe_size
         from repro.pipeline.partition import pipeline_supported
         cfg = dataclasses.replace(cfg, num_stages=pipe_size(mesh))
@@ -271,15 +276,17 @@ def _lower_train_pipelined(arch, cfg, model, mesh, params_shapes, shape_name,
     leaves = classify_leaves(params_shapes, cfg.num_layers, S, min_dim=128)
     plan = make_plan(policy, leaves, stage_ranks=[rank] * S,
                      fixed_rank=rank, num_stages=S)
+    part = ppart.make_partition(model, S)
     stage_shapes = jax.eval_shape(
-        lambda p: ppart.partition_params(p, S)[0], params_shapes)
+        lambda p: part.partition_params(p)[0], params_shapes)
     splans = psync.make_stage_plans(
-        plan, S, psync.stage_local_leaves(stage_shapes))
+        plan, S, psync.stage_local_leaves(stage_shapes),
+        local_path=part.local_leaf_path)
     acfg = adam.AdamConfig(opt_dtype=opt_dtype)
 
     def init_state():
         params = model.init(jax.random.PRNGKey(0))
-        sp, sh = ppart.partition_params(params, S)
+        sp, sh = part.partition_params(params)
         ost = adam.init({"stage": sp, "shared": sh}, acfg)
         comp = psync.init_pipeline_comp_state(params, plan,
                                               jax.random.PRNGKey(1), splans)
@@ -309,8 +316,12 @@ def _lower_train_pipelined(arch, cfg, model, mesh, params_shapes, shape_name,
     rec = _record(compiled, compiled.as_text(), pod_size=pod)
     rec["policy"] = policy if plan.ranks else "none"
     rec["compressed_leaves"] = len(plan.ranks)
+    # Per-stage (compressed, full) DP-sync bytes — the Algorithm-2 wire
+    # ledger, reported per family so `--pipe` runs show where the bytes go.
     rec["pipeline"] = {"num_stages": S, "schedule": "1f1b",
-                       "distinct_plans": len(splans.distinct)}
+                       "family": cfg.family,
+                       "distinct_plans": len(splans.distinct),
+                       "stage_bytes": psync.stage_wire_bytes(leaves, plan, S)}
     return rec
 
 
@@ -389,11 +400,17 @@ def main() -> None:
                 else:
                     mem = rec["memory"]
                     per_chip_gb = (mem["argument_bytes"] + mem["temp_bytes"]) / 2**30
+                    extra = ""
+                    if "pipeline" in rec:
+                        sb = ";".join(str(c) for c, _ in
+                                      rec["pipeline"]["stage_bytes"])
+                        extra = (f", {rec['pipeline']['family']} "
+                                 f"stage-sync [{sb}] B")
                     print(f"OK   {tag}: {rec['flops_per_chip']:.3e} FLOP/chip, "
                           f"{rec['bytes_per_chip']:.3e} B/chip, "
                           f"coll {rec['collective_total']/2**20:.1f} MiB/chip, "
                           f"mem {per_chip_gb:.2f} GiB/chip, "
-                          f"{rec['compile_s']}s", flush=True)
+                          f"{rec['compile_s']}s{extra}", flush=True)
             except Exception as e:
                 rec = {"arch": arch, "shape": shape_name, "error": str(e),
                        "traceback": traceback.format_exc()}

@@ -7,10 +7,20 @@ production mesh on real hardware.
       --policy edgc --steps 300 --window 50
   PYTHONPATH=src python -m repro.launch.train --arch gpt2 --variant reduced \
       --policy fixed --rank 32 --steps 200
+
+Pipeline parallelism: ``--pipe S`` adds a ``pipe`` axis of size S to the
+mesh (total devices = pipe * data * model), rebuilds the model config with
+``num_stages=S``, and routes the Trainer through the pipelined executor
+(family permitting — the stage adapter's reason is surfaced otherwise).
+``--pipe 1`` exercises the full pipelined path on a single device:
+
+  PYTHONPATH=src python -m repro.launch.train --arch gpt2 --pipe 1 \
+      --micro 2 --policy edgc --steps 100
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 
 
@@ -19,7 +29,7 @@ from repro.core import EDGCConfig, GDSConfig
 from repro.core.dac import DACConfig
 from repro.data.pipeline import SyntheticLM, add_modality_stubs
 from repro.launch.mesh import make_host_mesh
-from repro.models.model import build_model, param_count
+from repro.models.model import build_model
 from repro.optim.adam import AdamConfig
 from repro.train.trainer import Trainer, TrainerConfig
 
@@ -37,6 +47,12 @@ def main() -> None:
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--stages", type=int, default=0, help="0 = config default")
+    ap.add_argument("--pipe", type=int, default=0,
+                    help="pipeline stages: adds a 'pipe' mesh axis and runs "
+                         "the pipelined (GPipe/1F1B) executor")
+    ap.add_argument("--schedule", default="1f1b", choices=["gpipe", "1f1b"])
+    ap.add_argument("--micro", type=int, default=0,
+                    help="microbatches per step (0 -> num_stages)")
     ap.add_argument("--data-mesh", type=int, default=1)
     ap.add_argument("--model-mesh", type=int, default=1)
     ap.add_argument("--use-kernels", action="store_true")
@@ -45,9 +61,24 @@ def main() -> None:
     args = ap.parse_args()
 
     cfg = get_config(args.arch, args.variant)
-    num_stages = args.stages or cfg.num_stages
+    if args.pipe:
+        from repro.pipeline.partition import pipeline_supported
+        if args.stages and args.stages != args.pipe:
+            raise SystemExit(f"--pipe {args.pipe} conflicts with --stages "
+                             f"{args.stages}: the pipe axis size IS the "
+                             "stage count")
+        num_stages = args.pipe
+        cfg = dataclasses.replace(cfg, num_stages=num_stages)
+        reason = pipeline_supported(cfg, num_stages)
+        if reason is not None:
+            raise SystemExit(f"--pipe {args.pipe} unsupported for "
+                             f"{cfg.name}: {reason}")
+        mesh = make_host_mesh(pipe=args.pipe, data=args.data_mesh,
+                              model=args.model_mesh)
+    else:
+        num_stages = args.stages or cfg.num_stages
+        mesh = make_host_mesh(data=args.data_mesh, model=args.model_mesh)
     model = build_model(cfg)
-    mesh = make_host_mesh(data=args.data_mesh, model=args.model_mesh)
 
     edgc = EDGCConfig(
         policy=args.policy, fixed_rank=args.rank, num_stages=num_stages,
@@ -59,13 +90,14 @@ def main() -> None:
     tcfg = TrainerConfig(
         total_steps=args.steps, log_every=max(1, args.steps // 20),
         use_kernels=args.use_kernels,
+        schedule=args.schedule, num_microbatches=args.micro,
         adam=AdamConfig(lr=args.lr, warmup_steps=max(10, args.steps // 10),
                         total_steps=args.steps),
     )
     trainer = Trainer(model, mesh, edgc, tcfg, seed=args.seed)
-    nparams = param_count(trainer.state["params"])
-    print(f"{cfg.name}: {nparams/1e6:.1f}M params, policy={args.policy}, "
-          f"{trainer.controller.describe()}")
+    pipe_tag = f", pipe={args.pipe} ({args.schedule})" if args.pipe else ""
+    print(f"{cfg.name}: {trainer.n_params/1e6:.1f}M params, "
+          f"policy={args.policy}{pipe_tag}, {trainer.controller.describe()}")
 
     data = SyntheticLM(vocab_size=cfg.vocab_size, seq_len=args.seq,
                        batch_size=args.batch, seed=args.seed)

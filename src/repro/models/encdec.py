@@ -9,6 +9,13 @@ cross-attention (learned positions), trained with teacher forcing.
 
 Decode: self-attn KV cache + *precomputed* cross-attention K/V (computed
 once from the encoder output at cache init — the standard serving layout).
+
+Param layout: enc/dec blocks live under ``params['stages'][s]`` —
+encoder stages first, decoder stages after (``stage_layout``), matching
+the pipeline-stage convention every family shares so the compressor's
+stage mapping and the enc-dec ``StageAdapter`` see the same granularity.
+``num_stages == 1`` keeps both halves in one stage; the forward
+concatenates the per-stage stacks back, so compute is unchanged.
 """
 from __future__ import annotations
 
@@ -46,23 +53,65 @@ def _dec_block_init(key, cfg: ModelConfig):
     return p
 
 
+def stage_layout(cfg: ModelConfig, num_stages: int | None = None
+                 ) -> list[dict[str, int]]:
+    """Per-stage {'enc': n, 'dec': n} layer counts.
+
+    Encoder stages come first, decoder stages after (pipeline order: the
+    cross-attention memory flows forward from the last encoder stage). The
+    enc/dec split of the stage budget is proportional to layer counts;
+    ``num_stages == 1`` keeps both halves in the single stage (the flat
+    layout every non-pipelined whisper run uses).
+    """
+    Le = cfg.encoder_layers or cfg.num_layers
+    Ld = cfg.num_layers
+    S = max(1, num_stages or cfg.num_stages)
+    if S == 1:
+        return [{"enc": Le, "dec": Ld}]
+    S = min(S, Le + Ld)
+    s_e = int(round(S * Le / max(1, Le + Ld)))
+    s_e = max(1, min(s_e, S - 1, Le))
+    s_d = S - s_e
+    if s_d > Ld:                      # more dec stages than dec layers
+        s_d = Ld
+        s_e = min(S - s_d, Le)
+    from .model import near_even_split
+    return ([{"enc": n, "dec": 0} for n in near_even_split(Le, s_e)]
+            + [{"enc": 0, "dec": n} for n in near_even_split(Ld, s_d)])
+
+
 def init(key, cfg: ModelConfig):
-    enc_layers = cfg.encoder_layers or cfg.num_layers
-    ks = jax.random.split(key, 6)
+    layout = stage_layout(cfg)
+    ks = jax.random.split(key, len(layout) + 4)
     dt = cfg.jdtype
+    stages = []
+    for si, counts in enumerate(layout):
+        ke, kd = jax.random.split(ks[si])
+        st = {}
+        if counts["enc"]:
+            st["enc_blocks"] = jax.vmap(lambda k: _enc_block_init(k, cfg))(
+                jax.random.split(ke, counts["enc"]))
+        if counts["dec"]:
+            st["dec_blocks"] = jax.vmap(lambda k: _dec_block_init(k, cfg))(
+                jax.random.split(kd, counts["dec"]))
+        stages.append(st)
     return {
-        "enc_blocks": jax.vmap(lambda k: _enc_block_init(k, cfg))(
-            jax.random.split(ks[0], enc_layers)),
+        "stages": stages,
         "enc_norm_scale": jnp.ones((cfg.d_model,), dt),
         "enc_norm_bias": jnp.zeros((cfg.d_model,), dt),
-        "embed": {"tok": L.embed_init(ks[1], cfg.vocab_size, cfg.d_model, dt)},
-        "dec_pos": (jax.random.normal(ks[2], (cfg.max_position, cfg.d_model), F32)
+        "embed": {"tok": L.embed_init(ks[-3], cfg.vocab_size, cfg.d_model, dt)},
+        "dec_pos": (jax.random.normal(ks[-2], (cfg.max_position, cfg.d_model), F32)
                     * 0.01).astype(dt),
-        "dec_blocks": jax.vmap(lambda k: _dec_block_init(k, cfg))(
-            jax.random.split(ks[3], cfg.num_layers)),
         "final_norm_scale": jnp.ones((cfg.d_model,), dt),
         "final_norm_bias": jnp.zeros((cfg.d_model,), dt),
     }
+
+
+def _cat_blocks(params, key: str):
+    """Concatenate per-stage block stacks back to one (L, ...) tree."""
+    from .model import concat_stage_stacks
+    return concat_stage_stacks(
+        [st[key] for st in params["stages"] if key in st])
 
 
 def _ln(x, p, prefix, cfg):
@@ -87,7 +136,7 @@ def encode(params, frames, cfg: ModelConfig):
 
     if cfg.remat:
         body = jax.checkpoint(body)
-    x, _ = jax.lax.scan(body, x, params["enc_blocks"])
+    x, _ = jax.lax.scan(body, x, _cat_blocks(params, "enc_blocks"))
     return _ln(x, params, "enc_norm", cfg)
 
 
@@ -115,7 +164,7 @@ def decode_train(params, tokens, enc_out, cfg: ModelConfig):
 
     if cfg.remat:
         body = jax.checkpoint(body)
-    x, _ = jax.lax.scan(body, x, params["dec_blocks"])
+    x, _ = jax.lax.scan(body, x, _cat_blocks(params, "dec_blocks"))
     x = _ln(x, params, "final_norm", cfg)
     return L.lm_logits(x, params["embed"]["tok"], tie=True)  # whisper ties
 
@@ -150,7 +199,7 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int, enc_out=None,
         cks, cvs = jax.vmap(
             lambda bp: L.cross_kv(bp["cross"], enc_out,
                                   num_kv_heads=cfg.num_kv_heads, head_dim=cfg.hd)
-        )(params["dec_blocks"])
+        )(_cat_blocks(params, "dec_blocks"))
         cache["cross_k"], cache["cross_v"] = cks, cvs
     return cache
 
@@ -179,7 +228,7 @@ def decode_step(params, cache, tokens, cfg: ModelConfig):
 
     x, (ks, vs) = jax.lax.scan(
         body, x,
-        (params["dec_blocks"], cache["k"], cache["v"],
+        (_cat_blocks(params, "dec_blocks"), cache["k"], cache["v"],
          cache["cross_k"], cache["cross_v"]))
     x = _ln(x, params, "final_norm", cfg)
     logits = L.lm_logits(x, params["embed"]["tok"], tie=True)[:, 0]

@@ -7,6 +7,16 @@ runs of ``attn_every``; after each full run the shared attention+MLP block
 (one parameter set, reused) is applied. Parameters are shared; KV caches are
 NOT (one per application site).
 
+Param layout: the Mamba2 layers live under ``params['stages'][s]['mamba']``
+(one stacked leaf tree per virtual pipeline stage) so the compressor's
+``_layer_stage`` mapping and the pipeline stage adapter see the same
+granularity as the dense/MoE families. Stage boundaries always fall on
+GROUP boundaries (a run plus its shared-attention site stays whole — the
+hybrid pipelining constraint), so per-stage layer counts are generally
+RAGGED; ``stage_group_sizes`` is the single source of truth for the
+group->stage assignment. The shared attention block is top-level
+(``params['shared']``) — replicated across stages, like embeddings.
+
 Decode carries: per-mamba-layer (SSM state + conv tail) and per-site KV
 caches — all O(1) or O(window) per token, so long_500k runs natively.
 """
@@ -27,22 +37,40 @@ def _num_groups(cfg: ModelConfig) -> int:
 
 
 def _group_sizes(cfg: ModelConfig) -> list[int]:
-    g = _num_groups(cfg)
-    base, extra = divmod(cfg.num_layers, g)
-    return [base + (1 if i < extra else 0) for i in range(g)]
+    from .model import near_even_split
+    return near_even_split(cfg.num_layers, _num_groups(cfg))
+
+
+def stage_group_sizes(cfg: ModelConfig, num_stages: int | None = None
+                      ) -> list[list[int]]:
+    """Per-stage list of mamba-run lengths (whole groups per stage).
+
+    Groups are assigned to stages contiguously, near-even by group count;
+    each group is one mamba run followed by a shared-attention site.
+    """
+    from .model import near_even_split
+    sizes = _group_sizes(cfg)
+    S = min(num_stages or cfg.num_stages, len(sizes))
+    out, i = [], 0
+    for n in near_even_split(len(sizes), S):
+        out.append(sizes[i: i + n])
+        i += n
+    return out
 
 
 def init(key, cfg: ModelConfig):
-    ks = jax.random.split(key, _num_groups(cfg) + 4)
+    plan = stage_group_sizes(cfg)
+    ks = jax.random.split(key, len(plan) + 4)
     dt = cfg.jdtype
-    groups = []
-    for gi, sz in enumerate(_group_sizes(cfg)):
-        gkeys = jax.random.split(ks[gi], sz)
-        groups.append({"mamba": jax.vmap(lambda k: ssm.mamba2_init(k, cfg))(gkeys)})
+    stages = []
+    for si, sizes in enumerate(plan):
+        skeys = jax.random.split(ks[si], sum(sizes))
+        stages.append(
+            {"mamba": jax.vmap(lambda k: ssm.mamba2_init(k, cfg))(skeys)})
     shared_key1, shared_key2 = jax.random.split(ks[-4])
     return {
         "embed": {"tok": L.embed_init(ks[-3], cfg.vocab_size, cfg.d_model, dt)},
-        "groups": groups,
+        "stages": stages,
         "shared": {
             "attn_norm_scale": jnp.ones((cfg.d_model,), dt),
             "attn": L.attn_init(shared_key1, cfg.d_model, cfg.num_heads,
@@ -73,13 +101,19 @@ def forward(params, batch, cfg: ModelConfig):
     B, T = tokens.shape
     positions = jnp.broadcast_to(jnp.arange(T), (B, T))
     x = jnp.take(params["embed"]["tok"], tokens, axis=0)
-    for group in params["groups"]:
-        def body(h, mp):
-            return ssm.mamba2_apply(mp, h, cfg), None
-        if cfg.remat:
-            body = jax.checkpoint(body)
-        x, _ = jax.lax.scan(body, x, group["mamba"])
-        x = _shared_apply(params["shared"], x, cfg, positions)
+    for stage, sizes in zip(params["stages"], stage_group_sizes(cfg)):
+        off = 0
+        for sz in sizes:
+            mp = jax.tree_util.tree_map(lambda a: a[off: off + sz],
+                                        stage["mamba"])
+            off += sz
+
+            def body(h, m):
+                return ssm.mamba2_apply(m, h, cfg), None
+            if cfg.remat:
+                body = jax.checkpoint(body)
+            x, _ = jax.lax.scan(body, x, mp)
+            x = _shared_apply(params["shared"], x, cfg, positions)
     x = L.rms_norm(x, params["final_norm_scale"], cfg.norm_eps)
     return L.lm_logits(x, params["lm_head"], tie=False)
 
@@ -110,24 +144,33 @@ def decode_step(params, cache, tokens, cfg: ModelConfig):
     x = jnp.take(params["embed"]["tok"], tokens, axis=0)     # (B, d)
     new_groups = []
     sp = params["shared"]
-    for group, gc in zip(params["groups"], cache["groups"]):
-        def body(h, inp):
-            mp, st = inp
-            h, st = ssm.mamba2_decode(mp, h, st, cfg)
-            return h, st
-        x, new_mamba = jax.lax.scan(body, x, (group["mamba"], gc["mamba"]))
-        # shared attention on the single token
-        h = L.rms_norm(x[:, None], sp["attn_norm_scale"], cfg.norm_eps)
-        a, ck, cv = L.attn_decode(
-            sp["attn"], h, gc["attn_k"], gc["attn_v"], cache_len,
-            num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
-            head_dim=cfg.hd, rope_theta=cfg.rope_theta, use_rope=True,
-            window=cfg.sliding_window, norm_eps=cfg.norm_eps,
-        )
-        x1 = x[:, None] + a
-        h = L.rms_norm(x1, sp["mlp_norm_scale"], cfg.norm_eps)
-        x = (x1 + L.mlp_apply(sp["mlp"], h, act="silu"))[:, 0]
-        new_groups.append({"mamba": new_mamba, "attn_k": ck, "attn_v": cv})
+    gi = 0
+    for stage, sizes in zip(params["stages"], stage_group_sizes(cfg)):
+        off = 0
+        for sz in sizes:
+            gc = cache["groups"][gi]
+            gi += 1
+            mp = jax.tree_util.tree_map(lambda a: a[off: off + sz],
+                                        stage["mamba"])
+            off += sz
+
+            def body(h, inp):
+                m, st = inp
+                h, st = ssm.mamba2_decode(m, h, st, cfg)
+                return h, st
+            x, new_mamba = jax.lax.scan(body, x, (mp, gc["mamba"]))
+            # shared attention on the single token
+            h = L.rms_norm(x[:, None], sp["attn_norm_scale"], cfg.norm_eps)
+            a, ck, cv = L.attn_decode(
+                sp["attn"], h, gc["attn_k"], gc["attn_v"], cache_len,
+                num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
+                head_dim=cfg.hd, rope_theta=cfg.rope_theta, use_rope=True,
+                window=cfg.sliding_window, norm_eps=cfg.norm_eps,
+            )
+            x1 = x[:, None] + a
+            h = L.rms_norm(x1, sp["mlp_norm_scale"], cfg.norm_eps)
+            x = (x1 + L.mlp_apply(sp["mlp"], h, act="silu"))[:, 0]
+            new_groups.append({"mamba": new_mamba, "attn_k": ck, "attn_v": cv})
     x = L.rms_norm(x, params["final_norm_scale"], cfg.norm_eps)
     logits = jnp.einsum("bd,dv->bv", x, params["lm_head"], preferred_element_type=F32)
     return logits, {"groups": new_groups, "len": cache_len + 1}

@@ -21,6 +21,22 @@ import jax
 import jax.numpy as jnp
 
 
+def near_even_split(total: int, parts: int) -> list[int]:
+    """Split ``total`` units into ``parts`` near-even contiguous groups —
+    the one stage-assignment arithmetic every family layout shares."""
+    base, extra = divmod(total, max(1, parts))
+    return [base + (1 if i < extra else 0) for i in range(max(1, parts))]
+
+
+def concat_stage_stacks(stacks: list[Any]) -> Any:
+    """Concatenate per-stage stacked subtrees back to one (L, ...) tree
+    (the flat forwards' inverse of the ``['stages'][s]`` relayout)."""
+    if len(stacks) == 1:
+        return stacks[0]
+    return jax.tree_util.tree_map(
+        lambda *xs: jnp.concatenate(xs, axis=0), *stacks)
+
+
 @dataclasses.dataclass(frozen=True)
 class ModelConfig:
     name: str = "model"
@@ -76,9 +92,7 @@ class ModelConfig:
 
     def stage_sizes(self) -> list[int]:
         """Split num_layers into num_stages near-even contiguous groups."""
-        L, S = self.num_layers, max(1, self.num_stages)
-        base, extra = divmod(L, S)
-        return [base + (1 if i < extra else 0) for i in range(S)]
+        return near_even_split(self.num_layers, self.num_stages)
 
 
 class Model(NamedTuple):

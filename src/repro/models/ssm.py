@@ -311,18 +311,38 @@ def _pair_init(key, cfg: ModelConfig):
     return {"mlstm": mlstm_init(k1, cfg), "slstm": slstm_init(k2, cfg)}
 
 
+def xlstm_stage_sizes(cfg: ModelConfig) -> list[int]:
+    """(mLSTM, sLSTM) pairs per virtual pipeline stage, near-even split.
+
+    The pair — not the layer — is the stage-assignable unit: splitting one
+    would separate an mLSTM from its sLSTM partner.
+    """
+    from .model import near_even_split
+    n_pairs = cfg.num_layers // 2
+    return near_even_split(n_pairs, min(cfg.num_stages, n_pairs))
+
+
 def xlstm_init(key, cfg: ModelConfig):
     assert cfg.num_layers % 2 == 0, "xlstm stacks (mLSTM, sLSTM) pairs"
-    n_pairs = cfg.num_layers // 2
-    ks = jax.random.split(key, 3)
+    sizes = xlstm_stage_sizes(cfg)
+    ks = jax.random.split(key, len(sizes) + 2)
     dt = cfg.jdtype
-    pair_keys = jax.random.split(ks[0], n_pairs)
     return {
-        "embed": {"tok": L.embed_init(ks[1], cfg.vocab_size, cfg.d_model, dt)},
-        "pairs": jax.vmap(lambda k: _pair_init(k, cfg))(pair_keys),
+        "embed": {"tok": L.embed_init(ks[0], cfg.vocab_size, cfg.d_model, dt)},
+        "stages": [
+            {"pairs": jax.vmap(lambda k: _pair_init(k, cfg))(
+                jax.random.split(ks[1 + s], sz))}
+            for s, sz in enumerate(sizes)
+        ],
         "final_norm_scale": jnp.ones((cfg.d_model,), dt),
-        "lm_head": L.dense_init(ks[2], cfg.d_model, cfg.vocab_size, dt),
+        "lm_head": L.dense_init(ks[-1], cfg.d_model, cfg.vocab_size, dt),
     }
+
+
+def xlstm_all_pairs(params):
+    """Concatenate the per-stage pair stacks back to one (n_pairs, ...) tree."""
+    from .model import concat_stage_stacks
+    return concat_stage_stacks([st["pairs"] for st in params["stages"]])
 
 
 def xlstm_forward(params, batch, cfg: ModelConfig):
@@ -335,7 +355,7 @@ def xlstm_forward(params, batch, cfg: ModelConfig):
 
     if cfg.remat:
         body = jax.checkpoint(body)
-    x, _ = jax.lax.scan(body, x, params["pairs"])
+    x, _ = jax.lax.scan(body, x, xlstm_all_pairs(params))
     x = L.rms_norm(x, params["final_norm_scale"], cfg.norm_eps)
     return L.lm_logits(x, params["lm_head"], tie=False)
 
@@ -367,7 +387,8 @@ def xlstm_decode(params, cache, tokens, cfg: ModelConfig):
         h3, ss = slstm_decode(pair["slstm"], h2, ss, cfg)
         return h3, (ms, ss)
 
-    x, (ms, ss) = jax.lax.scan(body, x, (params["pairs"], cache["mlstm"], cache["slstm"]))
+    x, (ms, ss) = jax.lax.scan(
+        body, x, (xlstm_all_pairs(params), cache["mlstm"], cache["slstm"]))
     x = L.rms_norm(x, params["final_norm_scale"], cfg.norm_eps)
     logits = jnp.einsum("bd,dv->bv", x, params["lm_head"], preferred_element_type=F32)
     return logits, {"mlstm": ms, "slstm": ss, "len": cache["len"] + 1}

@@ -1,12 +1,14 @@
 """Pipeline-parallel execution subsystem (paper §IV-D, Algorithm 2).
 
 The control plane (``core/dac.py``) has always emitted stage-aligned rank
-vectors; this package is the execution layer that makes them real: stage
-partitioning of a model's parameters (``partition``), GPipe / 1F1B
-microbatch schedules over a ``pipe`` mesh axis (``schedule``), and the
-per-stage data-parallel gradient sync that applies one DAC rank per stage
+vectors; this package is the execution layer that makes them real: the
+per-family ``StageAdapter`` registry and stage partitioning of a model's
+parameters (``adapters`` / ``partition``), GPipe / 1F1B microbatch
+schedules over a ``pipe`` mesh axis (``schedule``), and the per-stage
+data-parallel gradient sync that applies one DAC rank per stage
 (``sync``).
 """
+from .adapters import StageAdapter, adapter_families, register_adapter
 from .partition import (
     PipelinePartition,
     make_partition,
@@ -19,6 +21,7 @@ from .schedule import (
     bubble_fraction,
     make_pipeline_train_step,
     peak_inflight,
+    simulate_schedule,
     slot_table,
 )
 from .sync import (
@@ -31,10 +34,11 @@ from .sync import (
 )
 
 __all__ = [
+    "StageAdapter", "adapter_families", "register_adapter",
     "PipelinePartition", "make_partition", "merge_params",
     "partition_params", "pipeline_supported",
     "SCHEDULES", "bubble_fraction", "make_pipeline_train_step",
-    "peak_inflight", "slot_table",
+    "peak_inflight", "simulate_schedule", "slot_table",
     "StagePlans", "init_pipeline_comp_state", "make_stage_plans",
     "resize_pipeline_comp_state", "stage_sync_grads", "stage_wire_bytes",
 ]

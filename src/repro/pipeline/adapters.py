@@ -1,0 +1,629 @@
+"""Per-family stage adapters — the pipeline-partition contract.
+
+Mirrors ``models/model.py``'s ``register_family``: every model family that
+can run the pipeline executor registers a :class:`StageAdapter` subclass
+here. The adapter owns everything the executor used to assume was "dense
+GPT-2 shaped":
+
+  * the **support check** (``check``) — a family-specific reason string
+    when a config cannot be pipelined (surfaced verbatim by
+    ``pipeline_supported`` and ``dryrun --pipe``);
+  * the **layer->stage assignment** (``unit_counts``) — how many stacked
+    units (dense/MoE blocks, xLSTM pairs, Mamba2 layers, enc/dec blocks)
+    each stage owns. Counts may be RAGGED (hybrid stages must take whole
+    attention groups; 1F1B still needs one SPMD program), so the generic
+    ``partition_params`` zero-pads every stage's stacks to the max count
+    and the compute closures mask the dead slices per rank;
+  * the **stage-stacked / shared split** (``partition_params`` /
+    ``merge_params``) — stacked leaves lead with (S, Lmax, ...) and shard
+    over the ``pipe`` mesh axis; everything else (embeddings, heads,
+    norms, Zamba's shared attention block) replicates;
+  * the **compute closures** (``embed`` / ``blocks`` / ``head_loss``) the
+    schedule executes every tick, SPMD-uniform across ranks — ``blocks``
+    returns ``(boundary_out, aux_loss)`` so per-stage auxiliary losses
+    (the MoE router balance term) reach the total without a second
+    collective;
+  * the **boundary-activation spec** (``boundary_spec``) — an arbitrary
+    pytree; the enc-dec adapter ships two channels (the frozen encoder
+    memory rides along the decoder stages for cross-attention).
+
+All families lay their stage-assignable parameters under
+``params['stages'][i]``, so the local<->global leaf-path mapping
+(``local_leaf_path`` / ``global_leaf_path``) is one shared regex — which
+is also what keeps ``core/compressor.py``'s ``_layer_stage`` and the DAC's
+per-stage rank vectors agreeing with the physical layout for every family.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.models.model import Model, ModelConfig
+
+__all__ = [
+    "StageAdapter",
+    "register_adapter",
+    "adapter_families",
+    "supported_reason",
+    "make_adapter",
+    "global_leaf_path",
+    "local_leaf_path",
+]
+
+_STAGE_PREFIX = re.compile(r"^\['stages'\]\[(\d+)\]")
+
+F32 = jnp.float32
+
+
+def global_leaf_path(stage: int, local_path: str) -> str:
+    """Stage-local keystr -> the flat-layout keystr the plans use."""
+    return f"['stages'][{stage}]{local_path}"
+
+
+def local_leaf_path(path: str) -> tuple[int, str] | None:
+    """Flat-layout keystr -> (stage, stage-local keystr); None if shared."""
+    m = _STAGE_PREFIX.match(path)
+    if m is None:
+        return None
+    return int(m.group(1)), path[m.end():]
+
+
+# -------------------------------------------------------------------- registry
+_REGISTRY: dict[str, type["StageAdapter"]] = {}
+
+
+def register_adapter(*families: str):
+    def deco(cls):
+        for f in families:
+            _REGISTRY[f] = cls
+        cls.family = families[0]
+        return cls
+    return deco
+
+
+def adapter_families() -> list[str]:
+    return sorted(_REGISTRY)
+
+
+def supported_reason(cfg: ModelConfig, num_stages: int) -> str | None:
+    """None if (family, config) can run the pipeline executor, else why not.
+
+    The reason comes from the family's own adapter — not a generic
+    "dense only" message — so ``dryrun --pipe`` can say exactly what is
+    missing for a given config.
+    """
+    if num_stages <= 0:
+        return f"num_stages={num_stages} must be >= 1"
+    cls = _REGISTRY.get(cfg.family)
+    if cls is None:
+        return (f"family {cfg.family!r} has no stage adapter "
+                f"(registered: {adapter_families()})")
+    return cls.check(cfg, num_stages)
+
+
+def make_adapter(model: Model, num_stages: int,
+                 remat: bool | None = None) -> "StageAdapter":
+    reason = supported_reason(model.config, num_stages)
+    if reason is not None:
+        raise ValueError(f"pipeline partition unsupported: {reason}")
+    return _REGISTRY[model.config.family](model, num_stages, remat)
+
+
+# ------------------------------------------------------------------ base class
+class StageAdapter:
+    """Family-agnostic machinery; subclasses fill in the family contract.
+
+    Instances are built per (model, num_stages) by :func:`make_adapter`
+    and are what ``pipeline/partition.py``'s ``make_partition`` returns.
+    """
+
+    family = ""
+
+    def __init__(self, model: Model, num_stages: int,
+                 remat: bool | None = None) -> None:
+        self.model = model
+        self.cfg = model.config
+        self.num_stages = num_stages
+        self.remat = self.cfg.remat if remat is None else remat
+        self._counts = {k: tuple(v) for k, v in self.unit_counts().items()}
+        # (S, Lmax) live-unit masks, None for uniform (non-ragged) stacks
+        self._masks: dict[str, np.ndarray | None] = {}
+        for key, per in self._counts.items():
+            lmax = max(per)
+            if all(c == lmax for c in per):
+                self._masks[key] = None
+            else:
+                self._masks[key] = (np.arange(lmax)[None, :]
+                                    < np.asarray(per)[:, None])
+
+    # ---- family contract (override) ------------------------------------
+    @classmethod
+    def check(cls, cfg: ModelConfig, num_stages: int) -> str | None:
+        raise NotImplementedError
+
+    def unit_counts(self) -> dict[str, list[int]]:
+        """stack-key -> stacked units per stage (pure function of cfg)."""
+        raise NotImplementedError
+
+    def embed(self, shared: Any, mb: dict) -> Any:
+        """Stage-0 boundary input from one microbatch."""
+        raise NotImplementedError
+
+    def blocks(self, stage_tree: Any, shared: Any, boundary: Any,
+               s_idx) -> tuple[Any, jax.Array]:
+        """One stage's compute: boundary -> (boundary, aux loss scalar)."""
+        raise NotImplementedError
+
+    def head_loss(self, shared: Any, boundary: Any, mb: dict) -> jax.Array:
+        """Last-stage loss from the final boundary."""
+        raise NotImplementedError
+
+    def boundary_spec(self, mb: dict) -> Any:
+        """ShapeDtype pytree of one boundary activation (what ppermute
+        moves). Default: one (b, T, d_model) hidden-state array."""
+        b, t = mb["tokens"].shape
+        return jax.ShapeDtypeStruct((b, t, self.cfg.d_model), self.cfg.jdtype)
+
+    # ---- path mapping (shared ['stages'][i] convention) -----------------
+    local_leaf_path = staticmethod(local_leaf_path)
+    global_leaf_path = staticmethod(global_leaf_path)
+
+    # ---- generic stage-stacked layout -----------------------------------
+    def stage_flags(self, key: str, s_idx) -> jax.Array | None:
+        """Per-rank (Lmax,) live mask for a stack, None when uniform."""
+        m = self._masks[key]
+        if m is None:
+            return None
+        return jnp.take(jnp.asarray(m), s_idx, axis=0)
+
+    def partition_params(self, params: Any) -> tuple[Any, Any]:
+        """Split a flat param tree into (stage_stacked, shared).
+
+        ``stage_stacked`` holds every ``['stages'][i]`` stack with a new
+        leading stage dim (S, Lmax, ...), zero-padded where a stage owns
+        fewer units than the widest stage; ``shared`` is the remainder
+        with its original keys.
+        """
+        stages = params["stages"]
+        if len(stages) != self.num_stages:
+            raise ValueError(f"param layout has {len(stages)} stages, "
+                             f"expected {self.num_stages}")
+        stacked = {}
+        for key, per in self._counts.items():
+            lmax = max(per)
+            ref = next(st[key] for st, c in zip(stages, per) if c)
+
+            def one(st, c):
+                if c == 0:
+                    return jax.tree_util.tree_map(
+                        lambda a: jnp.zeros((lmax,) + a.shape[1:], a.dtype),
+                        ref)
+                tree = st[key]
+                lead = jax.tree_util.tree_leaves(tree)[0].shape[0]
+                if lead != c:
+                    raise ValueError(
+                        f"stack {key!r}: param leading dim {lead} != "
+                        f"adapter count {c} (layout/config mismatch)")
+                if c == lmax:
+                    return tree
+                return jax.tree_util.tree_map(
+                    lambda a: jnp.pad(
+                        a, [(0, lmax - c)] + [(0, 0)] * (a.ndim - 1)), tree)
+
+            stacked[key] = jax.tree_util.tree_map(
+                lambda *xs: jnp.stack(xs),
+                *[one(st, c) for st, c in zip(stages, per)])
+        shared = {k: v for k, v in params.items() if k != "stages"}
+        return stacked, shared
+
+    def merge_params(self, stage_stacked: Any, shared: Any) -> Any:
+        """Inverse of :func:`partition_params` — back to the flat layout."""
+        stages = []
+        for s in range(self.num_stages):
+            st = {}
+            for key, per in self._counts.items():
+                c = per[s]
+                if c == 0:
+                    continue
+                st[key] = jax.tree_util.tree_map(
+                    lambda a: a[s, :c], stage_stacked[key])
+            stages.append(st)
+        params = dict(shared)
+        params["stages"] = stages
+        return params
+
+    # ---- scan helper -----------------------------------------------------
+    def _masked_scan(self, body, carry, xs, flags):
+        """Scan ``body`` over stacked units; dead (padded) units pass the
+        carry through unchanged. ``flags=None`` is the uniform fast path
+        (no selects in the loop body)."""
+        if flags is None:
+            def step(c, x):
+                return body(c, x), None
+            xs_all = xs
+        else:
+            def step(c, xf):
+                x, ok = xf
+                new = body(c, x)
+                merged = jax.tree_util.tree_map(
+                    lambda a, b: jnp.where(ok, a, b), new, c)
+                return merged, None
+            xs_all = (xs, flags)
+        if self.remat:
+            step = jax.checkpoint(step)
+        out, _ = lax.scan(step, carry, xs_all)
+        return out
+
+
+def _positions(x: jax.Array) -> jax.Array:
+    b, t = x.shape[0], x.shape[1]
+    return jnp.broadcast_to(jnp.arange(t), (b, t))
+
+
+# --------------------------------------------------------------------- dense
+@register_adapter("dense")
+class DenseAdapter(StageAdapter):
+    """Decoder-only transformer: scanned block stacks, token embed + head."""
+
+    @classmethod
+    def check(cls, cfg: ModelConfig, num_stages: int) -> str | None:
+        if cfg.num_stages != num_stages:
+            return (f"model was built with num_stages={cfg.num_stages}, "
+                    f"pipeline wants {num_stages}; rebuild the model config")
+        if cfg.num_layers < num_stages:
+            return (f"num_layers={cfg.num_layers} < num_stages={num_stages}:"
+                    " at least one block per stage is required")
+        return None
+
+    def unit_counts(self):
+        return {"blocks": self.cfg.stage_sizes()}
+
+    def embed(self, shared, mb):
+        from repro.models import transformer as T
+        return T.embed_tokens(shared, mb["tokens"], self.cfg)
+
+    def blocks(self, stage_tree, shared, x, s_idx):
+        from repro.models import transformer as T
+        cfg = self.cfg
+        pos = _positions(x)
+
+        def body(h, bp):
+            return T._block_apply(bp, h, cfg, pos, cfg.sliding_window)
+        y = self._masked_scan(body, x, stage_tree["blocks"],
+                              self.stage_flags("blocks", s_idx))
+        return y, jnp.zeros((), F32)
+
+    def head_loss(self, shared, y, mb):
+        from repro.models import layers as L
+        from repro.models import transformer as T
+        logits = T.final_logits(shared, y, self.cfg)
+        return L.cross_entropy(logits, mb["labels"], mb.get("mask"))
+
+
+# ----------------------------------------------------------------------- vlm
+@register_adapter("vlm")
+class VLMAdapter(DenseAdapter):
+    """Dense decoder over a [patches ; tokens] prefix; loss on text only."""
+
+    def boundary_spec(self, mb):
+        b, t = mb["tokens"].shape
+        p = mb["patches"].shape[1]
+        return jax.ShapeDtypeStruct((b, p + t, self.cfg.d_model),
+                                    self.cfg.jdtype)
+
+    def embed(self, shared, mb):
+        from repro.models import vlm as V
+        return V._embed_multimodal(shared, mb["patches"], mb["tokens"],
+                                   self.cfg)
+
+    def head_loss(self, shared, y, mb):
+        from repro.models import layers as L
+        from repro.models import transformer as T
+        p = y.shape[1] - mb["tokens"].shape[1]
+        logits = T.final_logits(shared, y, self.cfg)[:, p:]
+        return L.cross_entropy(logits, mb["labels"], mb.get("mask"))
+
+
+# ----------------------------------------------------------------------- moe
+@register_adapter("moe")
+class MoEAdapter(StageAdapter):
+    """MoE decoder: experts + router live with their block's stage; the
+    Switch load-balance aux loss is a per-stage contribution summed over
+    the pipe axis (the schedule adds ``aux`` into every rank's local
+    loss, so no extra collective is needed)."""
+
+    @classmethod
+    def check(cls, cfg: ModelConfig, num_stages: int) -> str | None:
+        if cfg.num_stages != num_stages:
+            return (f"model was built with num_stages={cfg.num_stages}, "
+                    f"pipeline wants {num_stages}; rebuild the model config")
+        if cfg.num_layers < num_stages:
+            return (f"num_layers={cfg.num_layers} < num_stages={num_stages}:"
+                    " at least one MoE block per stage is required")
+        return None
+
+    def unit_counts(self):
+        return {"blocks": self.cfg.stage_sizes()}
+
+    def embed(self, shared, mb):
+        return jnp.take(shared["embed"]["tok"], mb["tokens"], axis=0)
+
+    def blocks(self, stage_tree, shared, x, s_idx):
+        from repro.models import moe as M
+        cfg = self.cfg
+        pos = _positions(x)
+
+        def body(carry, bp):
+            h, aux = carry
+            h, a = M._block_apply(bp, h, cfg, pos, cfg.sliding_window)
+            return h, aux + a
+        y, aux = self._masked_scan(body, (x, jnp.zeros((), F32)),
+                                   stage_tree["blocks"],
+                                   self.stage_flags("blocks", s_idx))
+        # same normalization as the flat forward: weight * mean-over-layers
+        aux = aux * cfg.router_aux_weight / max(1, cfg.num_layers)
+        return y, aux
+
+    def head_loss(self, shared, y, mb):
+        from repro.models import layers as L
+        cfg = self.cfg
+        x = L.rms_norm(y, shared["final_norm_scale"], cfg.norm_eps)
+        logits = L.lm_logits(x, shared["lm_head"], tie=False)
+        return L.cross_entropy(logits, mb["labels"], mb.get("mask"))
+
+
+# --------------------------------------------------------------------- xlstm
+@register_adapter("xlstm")
+class XLSTMAdapter(StageAdapter):
+    """xLSTM: the stage unit is one (mLSTM, sLSTM) pair — splitting a pair
+    would separate the matrix-memory block from its recurrent partner."""
+
+    @classmethod
+    def check(cls, cfg: ModelConfig, num_stages: int) -> str | None:
+        if cfg.num_layers % 2:
+            return f"num_layers={cfg.num_layers} must be even (pair stacks)"
+        if cfg.num_stages != num_stages:
+            return (f"model was built with num_stages={cfg.num_stages}, "
+                    f"pipeline wants {num_stages}; rebuild the model config")
+        n_pairs = cfg.num_layers // 2
+        if n_pairs < num_stages:
+            return (f"{n_pairs} (mLSTM, sLSTM) pairs < num_stages="
+                    f"{num_stages}: at least one pair per stage is required")
+        return None
+
+    def unit_counts(self):
+        from repro.models.ssm import xlstm_stage_sizes
+        return {"pairs": xlstm_stage_sizes(self.cfg)}
+
+    def embed(self, shared, mb):
+        return jnp.take(shared["embed"]["tok"], mb["tokens"], axis=0)
+
+    def blocks(self, stage_tree, shared, x, s_idx):
+        from repro.models import ssm
+        cfg = self.cfg
+
+        def body(h, pair):
+            h = ssm.mlstm_apply(pair["mlstm"], h, cfg)
+            return ssm.slstm_apply(pair["slstm"], h, cfg)
+        y = self._masked_scan(body, x, stage_tree["pairs"],
+                              self.stage_flags("pairs", s_idx))
+        return y, jnp.zeros((), F32)
+
+    def head_loss(self, shared, y, mb):
+        from repro.models import layers as L
+        x = L.rms_norm(y, shared["final_norm_scale"], self.cfg.norm_eps)
+        logits = L.lm_logits(x, shared["lm_head"], tie=False)
+        return L.cross_entropy(logits, mb["labels"], mb.get("mask"))
+
+
+# --------------------------------------------------------------------- zamba
+@register_adapter("zamba")
+class ZambaAdapter(StageAdapter):
+    """Hybrid Mamba2 + shared attention: stages take WHOLE attention groups
+    (a mamba run plus its shared-attn site), so per-stage layer counts are
+    ragged whenever ``num_layers`` doesn't tile evenly over groups/stages.
+    The shared attention block rides in ``shared`` (replicated over pipe,
+    grads pipe-psum'd like embeddings).
+
+    The compute scans GROUP SLOTS, not layers: an outer scan over Gmax
+    group slots (inner: the run's mamba layers gathered from the stacked
+    stage leaves by a static per-stage index map, padded slots masked)
+    applies the shared attention block once per slot — Gmax O(T^2)
+    attention applications instead of one per mamba layer with the
+    non-site results discarded. Runs shorter than the longest run and
+    stages with fewer groups than the widest stage pay only masked mamba
+    passes — the cheap side of the SPMD-uniformity trade."""
+
+    def __init__(self, model, num_stages, remat=None):
+        super().__init__(model, num_stages, remat)
+        from repro.models.hybrid import stage_group_sizes
+        plan = stage_group_sizes(self.cfg, num_stages)
+        gmax = max(len(sizes) for sizes in plan)
+        rmax = max(sz for sizes in plan for sz in sizes)
+        # (S, Gmax, Rmax) stage-local layer index per group slot + masks
+        idx = np.zeros((num_stages, gmax, rmax), np.int32)
+        layer_ok = np.zeros((num_stages, gmax, rmax), bool)
+        group_ok = np.zeros((num_stages, gmax), bool)
+        for s, sizes in enumerate(plan):
+            off = 0
+            for g, sz in enumerate(sizes):
+                idx[s, g, :sz] = np.arange(off, off + sz)
+                layer_ok[s, g, :sz] = True
+                group_ok[s, g] = True
+                off += sz
+        self._group_idx = idx
+        self._layer_ok = layer_ok
+        self._group_ok = group_ok
+
+    @classmethod
+    def check(cls, cfg: ModelConfig, num_stages: int) -> str | None:
+        from repro.models.hybrid import _num_groups
+        if cfg.num_stages != num_stages:
+            return (f"model was built with num_stages={cfg.num_stages}, "
+                    f"pipeline wants {num_stages}; rebuild the model config")
+        g = _num_groups(cfg)
+        if g < num_stages:
+            return (f"{g} attention groups (attn_every={cfg.attn_every}) < "
+                    f"num_stages={num_stages}: whole groups per stage is "
+                    "the hybrid pipelining constraint")
+        return None
+
+    def unit_counts(self):
+        from repro.models.hybrid import stage_group_sizes
+        plan = stage_group_sizes(self.cfg, self.num_stages)
+        return {"mamba": [sum(sizes) for sizes in plan]}
+
+    def embed(self, shared, mb):
+        return jnp.take(shared["embed"]["tok"], mb["tokens"], axis=0)
+
+    def blocks(self, stage_tree, shared, x, s_idx):
+        from repro.models import ssm
+        from repro.models.hybrid import _shared_apply
+        cfg = self.cfg
+        pos = _positions(x)
+        idx = jnp.take(jnp.asarray(self._group_idx), s_idx, axis=0)
+        layer_ok = jnp.take(jnp.asarray(self._layer_ok), s_idx, axis=0)
+        group_ok = jnp.take(jnp.asarray(self._group_ok), s_idx, axis=0)
+        mamba = stage_tree["mamba"]
+        sp = shared["shared"]
+
+        def group_step(h, inp):
+            g_idx, g_layer_ok, g_ok = inp          # (Rmax,), (Rmax,), ()
+
+            def layer_step(h2, inp2):
+                i, ok = inp2
+                mp = jax.tree_util.tree_map(
+                    lambda a: jnp.take(a, i, axis=0), mamba)
+                h3 = ssm.mamba2_apply(mp, h2, cfg)
+                return jnp.where(ok, h3, h2), None
+            h, _ = lax.scan(layer_step, h, (g_idx, g_layer_ok))
+            h2 = _shared_apply(sp, h, cfg, pos)
+            return jnp.where(g_ok, h2, h), None
+        if self.remat:
+            group_step = jax.checkpoint(group_step)
+        y, _ = lax.scan(group_step, x, (idx, layer_ok, group_ok))
+        return y, jnp.zeros((), F32)
+
+    def head_loss(self, shared, y, mb):
+        from repro.models import layers as L
+        x = L.rms_norm(y, shared["final_norm_scale"], self.cfg.norm_eps)
+        logits = L.lm_logits(x, shared["lm_head"], tie=False)
+        return L.cross_entropy(logits, mb["labels"], mb.get("mask"))
+
+
+# ------------------------------------------------------------------- whisper
+@register_adapter("whisper")
+class EncDecAdapter(StageAdapter):
+    """Encoder-decoder: encoder stages before decoder stages; the boundary
+    carries TWO channels — ``mem`` (the running encoder hidden, frozen to
+    the encoder output once it crosses into the decoder half, feeding
+    every decoder stage's cross-attention) and ``x`` (the decoder hidden,
+    carrying the token embeddings through the encoder half untouched).
+    Cotangents for ``mem`` accumulate through the pass-through on the way
+    back, so encoder stages receive every decoder stage's cross-attention
+    gradient without extra collectives."""
+
+    def __init__(self, model, num_stages, remat=None):
+        super().__init__(model, num_stages, remat)
+        self._num_enc_stages = sum(
+            1 for c in self._counts["enc_blocks"] if c > 0)
+
+    @classmethod
+    def check(cls, cfg: ModelConfig, num_stages: int) -> str | None:
+        from repro.models.encdec import stage_layout
+        if cfg.num_stages != num_stages:
+            return (f"model was built with num_stages={cfg.num_stages}, "
+                    f"pipeline wants {num_stages}; rebuild the model config")
+        le = cfg.encoder_layers or cfg.num_layers
+        if num_stages > le + cfg.num_layers:
+            return (f"num_stages={num_stages} > {le}+{cfg.num_layers} "
+                    "enc+dec layers")
+        layout = stage_layout(cfg, num_stages)
+        if len(layout) != num_stages:
+            return (f"enc/dec split yields {len(layout)} stages for "
+                    f"num_stages={num_stages}")
+        return None
+
+    def unit_counts(self):
+        from repro.models.encdec import stage_layout
+        layout = stage_layout(self.cfg, self.num_stages)
+        return {"enc_blocks": [c["enc"] for c in layout],
+                "dec_blocks": [c["dec"] for c in layout]}
+
+    def boundary_spec(self, mb):
+        b, t = mb["tokens"].shape
+        a = mb["frames"].shape[1]
+        d, dt = self.cfg.d_model, self.cfg.jdtype
+        return {"mem": jax.ShapeDtypeStruct((b, a, d), dt),
+                "x": jax.ShapeDtypeStruct((b, t, d), dt)}
+
+    def embed(self, shared, mb):
+        from repro.models import layers as L
+        frames, tokens = mb["frames"], mb["tokens"]
+        t = tokens.shape[1]
+        mem = frames + L.sinusoidal_pos(frames.shape[1], frames.shape[2],
+                                        frames.dtype)
+        x = jnp.take(shared["embed"]["tok"], tokens, axis=0)
+        x = x + lax.dynamic_slice_in_dim(shared["dec_pos"], 0, t, 0)
+        return {"mem": mem, "x": x}
+
+    def blocks(self, stage_tree, shared, bnd, s_idx):
+        from repro.models import encdec as E
+        from repro.models import layers as L
+        cfg = self.cfg
+        mem, x = bnd["mem"], bnd["x"]
+        enc_pos = _positions(mem)
+        dec_pos = _positions(x)
+
+        def enc_body(h, bp):
+            a = E._ln(h, bp, "attn_norm", cfg)
+            a = L.attn_apply(bp["attn"], a, num_heads=cfg.num_heads,
+                             num_kv_heads=cfg.num_kv_heads, head_dim=cfg.hd,
+                             causal=False, positions=enc_pos, use_rope=False,
+                             norm_eps=cfg.norm_eps, block_q=cfg.block_q)
+            h = h + a
+            m = E._ln(h, bp, "mlp_norm", cfg)
+            return h + L.mlp_apply(bp["mlp"], m, act="gelu")
+
+        # stage_flags is None only at S == 1 (every unit live on the one
+        # stage — the unmasked fast path is correct); for S >= 2 the
+        # enc/dec counts always contain a 0, so masks always exist.
+        mem = self._masked_scan(enc_body, mem, stage_tree["enc_blocks"],
+                                self.stage_flags("enc_blocks", s_idx))
+        # encoder output norm applies exactly once, on the last enc stage
+        last_enc = s_idx == self._num_enc_stages - 1
+        mem = jnp.where(last_enc, E._ln(mem, shared, "enc_norm", cfg), mem)
+
+        def dec_body(h, bp):
+            a = E._ln(h, bp, "attn_norm", cfg)
+            a = L.attn_apply(bp["attn"], a, num_heads=cfg.num_heads,
+                             num_kv_heads=cfg.num_kv_heads, head_dim=cfg.hd,
+                             causal=True, positions=dec_pos, use_rope=False,
+                             norm_eps=cfg.norm_eps, block_q=cfg.block_q)
+            h = h + a
+            c = E._ln(h, bp, "cross_norm", cfg)
+            ek, ev = L.cross_kv(bp["cross"], mem,
+                                num_kv_heads=cfg.num_kv_heads, head_dim=cfg.hd)
+            c = L.cross_attn_apply(bp["cross"], c, ek, ev,
+                                   num_heads=cfg.num_heads,
+                                   num_kv_heads=cfg.num_kv_heads,
+                                   head_dim=cfg.hd)
+            h = h + c
+            m = E._ln(h, bp, "mlp_norm", cfg)
+            return h + L.mlp_apply(bp["mlp"], m, act="gelu")
+
+        x = self._masked_scan(dec_body, x, stage_tree["dec_blocks"],
+                              self.stage_flags("dec_blocks", s_idx))
+        return {"mem": mem, "x": x}, jnp.zeros((), F32)
+
+    def head_loss(self, shared, bnd, mb):
+        from repro.models import encdec as E
+        from repro.models import layers as L
+        x = E._ln(bnd["x"], shared, "final_norm", self.cfg)
+        logits = L.lm_logits(x, shared["embed"]["tok"], tie=True)
+        return L.cross_entropy(logits, mb["labels"], mb.get("mask"))

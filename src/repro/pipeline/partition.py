@@ -1,32 +1,44 @@
 """Stage partitioning: split a Model's params into S pipeline stages.
 
-The dense families already lay their transformer blocks out per virtual
-stage (``params["stages"][s]["blocks"]`` with every leaf stacked over the
-stage's layers), so partitioning is a relayout, not a re-trace:
+Every family lays its stage-assignable parameters under
+``params['stages'][s]`` (dense/MoE blocks, xLSTM pairs, Zamba mamba runs,
+whisper enc/dec blocks), so partitioning is a relayout, not a re-trace:
 
-  * **stage params** — the S per-stage block subtrees stacked into one tree
-    whose leaves carry a leading stage dim ``(S, L/S, ...)``. Sharded over
-    the ``pipe`` mesh axis, each pipeline rank holds exactly its stage.
-  * **shared params** — everything else (embeddings, positional table,
-    final norm, LM head). Replicated over ``pipe``; the schedule uses the
-    embedding only on stage 0 and the head only on stage S-1, and their
-    gradients are psum'd over ``pipe`` (all other ranks contribute zeros).
+  * **stage params** — the S per-stage stacks stacked into one tree whose
+    leaves carry a leading stage dim ``(S, Lmax, ...)``, zero-padded where
+    a stage owns fewer units than the widest stage (ragged/hybrid plans).
+    Sharded over the ``pipe`` mesh axis, each pipeline rank holds exactly
+    its stage.
+  * **shared params** — everything else (embeddings, positional tables,
+    final norms, heads, Zamba's shared attention block). Replicated over
+    ``pipe``; the schedule uses each piece only on the stages that own it
+    and their gradients are psum'd over ``pipe`` (other ranks contribute
+    zeros).
 
-Ownership follows the same ``_layer_stage`` mapping the compressor uses
-(``core/compressor.py``): block leaves go to their ``['stages'][s]`` index,
-embeddings pin to stage 0, head/final-norm to stage S-1 — so the DAC's
-per-stage rank vector and the physical layout agree leaf-for-leaf.
+WHICH units land on which stage, what the boundary activation looks like,
+and how a stage computes are family decisions owned by the
+:class:`~repro.pipeline.adapters.StageAdapter` registry —
+``make_partition`` returns the family's adapter instance. Ownership
+follows the same ``_layer_stage`` mapping the compressor uses
+(``core/compressor.py``): ``['stages'][s]`` leaves go to their stage
+index, embeddings pin to stage 0, head/final-norm to stage S-1 — so the
+DAC's per-stage rank vector and the physical layout agree leaf-for-leaf.
 """
 from __future__ import annotations
 
-import dataclasses
-import re
-from typing import Any, Callable
+from typing import Any
 
 import jax
 import jax.numpy as jnp
 
 from repro.models.model import Model, ModelConfig
+from repro.pipeline.adapters import (
+    StageAdapter,
+    global_leaf_path,
+    local_leaf_path,
+    make_adapter,
+    supported_reason,
+)
 
 __all__ = [
     "PipelinePartition",
@@ -38,122 +50,50 @@ __all__ = [
     "global_leaf_path",
 ]
 
-_STAGE_PREFIX = re.compile(r"^\['stages'\]\[(\d+)\]")
+# The partition object IS the family's stage adapter (embed/blocks/head
+# closures, boundary spec, partition/merge, path mapping).
+PipelinePartition = StageAdapter
 
 
 def pipeline_supported(cfg: ModelConfig, num_stages: int) -> str | None:
-    """None if the config can run the pipeline executor, else the reason."""
-    if num_stages <= 0:
-        return f"num_stages={num_stages} must be >= 1"
-    if cfg.family != "dense":
-        return (f"family {cfg.family!r} has no stage-partition adapter yet "
-                "(dense only)")
-    if cfg.num_stages != num_stages:
-        return (f"model was built with num_stages={cfg.num_stages}, "
-                f"pipeline wants {num_stages}; rebuild the model config")
-    if cfg.num_layers % num_stages != 0:
-        return (f"num_layers={cfg.num_layers} not divisible by "
-                f"num_stages={num_stages}: stages would be ragged and could "
-                "not stack over the pipe axis")
-    return None
+    """None if the config can run the pipeline executor, else the reason.
+
+    The reason string comes from the family's own stage adapter (or names
+    the missing adapter), so callers — ``dryrun --pipe`` in particular —
+    can surface exactly what is unsupported instead of a generic message.
+    """
+    return supported_reason(cfg, num_stages)
 
 
-def global_leaf_path(stage: int, local_path: str) -> str:
-    """Stage-local keystr -> the flat-layout keystr the plans use."""
-    return f"['stages'][{stage}]{local_path}"
-
-
-def local_leaf_path(path: str) -> tuple[int, str] | None:
-    """Flat-layout keystr -> (stage, stage-local keystr); None if shared."""
-    m = _STAGE_PREFIX.match(path)
-    if m is None:
-        return None
-    return int(m.group(1)), path[m.end():]
+def make_partition(model: Model, num_stages: int,
+                   remat: bool | None = None) -> PipelinePartition:
+    """Build the stage adapter for a model's family (see adapters.py)."""
+    return make_adapter(model, num_stages, remat)
 
 
 def partition_params(params: Any, num_stages: int) -> tuple[Any, Any]:
-    """Split a flat param tree into (stage_stacked, shared).
+    """Uniform-layout split of ``params['stages']`` into (stacked, shared).
 
-    ``stage_stacked`` is the blocks tree with every leaf stacked over a new
-    leading stage dim; ``shared`` is the remainder with its original keys
-    (so the model family's embed/head functions apply to it unchanged).
+    Family-agnostic helper for trees whose stages share one treedef and
+    equal stack sizes (the dense/MoE common case, and every test oracle).
+    Production code paths go through the adapter's ``partition_params``,
+    which also handles ragged stages and per-family stack keys.
     """
     stages = params["stages"]
     if len(stages) != num_stages:
         raise ValueError(
             f"param layout has {len(stages)} stages, expected {num_stages}")
     stacked = jax.tree_util.tree_map(
-        lambda *xs: jnp.stack(xs), *[st["blocks"] for st in stages])
+        lambda *xs: jnp.stack(xs), *list(stages))
     shared = {k: v for k, v in params.items() if k != "stages"}
-    return {"blocks": stacked}, shared
+    return stacked, shared
 
 
 def merge_params(stage_stacked: Any, shared: Any, num_stages: int) -> Any:
     """Inverse of :func:`partition_params` — back to the flat layout."""
     params = dict(shared)
     params["stages"] = [
-        {"blocks": jax.tree_util.tree_map(lambda a: a[s],
-                                          stage_stacked["blocks"])}
+        jax.tree_util.tree_map(lambda a: a[s], stage_stacked)
         for s in range(num_stages)
     ]
     return params
-
-
-@dataclasses.dataclass(frozen=True)
-class PipelinePartition:
-    """Static stage-partition description + the per-stage model functions.
-
-    The three callables are the units the schedule executes on every pipe
-    rank (SPMD: each rank applies them to ITS stage's params / the shared
-    tree; embed and head_loss results are masked off non-boundary ranks):
-
-      * ``embed(shared, tokens) -> x``           (b, T) -> (b, T, D)
-      * ``blocks(stage_blocks, x) -> y``         one stage's scanned blocks
-      * ``head_loss(shared, y, labels) -> loss`` final norm + logits + CE
-    """
-
-    num_stages: int
-    d_model: int
-    dtype: Any
-    embed: Callable[[Any, jax.Array], jax.Array]
-    blocks: Callable[[Any, jax.Array], jax.Array]
-    head_loss: Callable[[Any, jax.Array, jax.Array], jax.Array]
-
-    def boundary_spec(self, micro_batch: int, seq_len: int):
-        """ShapeDtype of one boundary activation (what ppermute moves)."""
-        return jax.ShapeDtypeStruct(
-            (micro_batch, seq_len, self.d_model), self.dtype)
-
-
-def make_partition(model: Model, num_stages: int,
-                   remat: bool | None = None) -> PipelinePartition:
-    """Build the stage adapter for a model (dense family only for now)."""
-    cfg = model.config
-    reason = pipeline_supported(cfg, num_stages)
-    if reason is not None:
-        raise ValueError(f"pipeline partition unsupported: {reason}")
-
-    from repro.models import layers as L
-    from repro.models import transformer as T
-
-    def embed(shared, tokens):
-        return T.embed_tokens(shared, tokens, cfg)
-
-    def blocks(stage_blocks, x):
-        B, T_len = x.shape[0], x.shape[1]
-        positions = jnp.broadcast_to(jnp.arange(T_len), (B, T_len))
-        return T.apply_block_stack(stage_blocks["blocks"], x, cfg, positions,
-                                   window=cfg.sliding_window, remat=remat)
-
-    def head_loss(shared, y, labels):
-        logits = T.final_logits(shared, y, cfg)
-        return L.cross_entropy(logits, labels)
-
-    return PipelinePartition(
-        num_stages=num_stages,
-        d_model=cfg.d_model,
-        dtype=cfg.jdtype,
-        embed=embed,
-        blocks=blocks,
-        head_loss=head_loss,
-    )

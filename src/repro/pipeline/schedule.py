@@ -8,6 +8,12 @@ own stage's params, boundary activations move forward via ``ppermute``
 shard_map surface. Off-schedule ticks are masked per rank (clipped
 microbatch indices, zero cotangents) — SPMD uniformity again.
 
+What a stage computes, what the boundary activation looks like (a pytree:
+the enc-dec family ships two channels), and whether a stage contributes an
+auxiliary loss (the MoE router balance term) all come from the family's
+:class:`~repro.pipeline.adapters.StageAdapter` — this module only owns the
+tick tables and the collective choreography.
+
 The backward is a hand-rolled VJP (not ``jax.grad`` of the whole chain):
 each backward tick replays its stage's forward from the SAVED boundary
 input (stage-granular rematerialization, Megatron's standard recompute)
@@ -29,6 +35,10 @@ exactly the per-stage slack Algorithm 2 (Eq. 4) converts into larger
 ranks: stage s's DP sync may take ``T_com(r_stage1) + s * T_microBack``
 and still finish with stage 0 (the paper's 1-indexed stage i has
 ``(i-1)`` spare microbatch-backwards; here 0-indexed ``s``).
+``simulate_schedule`` generalizes the unit-tick analytics to measured
+(t_F, t_B) tick costs — B-cost != F-cost shifts both the bubble fraction
+and the Eq. 4 slack the DAC consumes (see benchmarks/pipeline_overlap.py
+for the CommModel.fit calibration).
 """
 from __future__ import annotations
 
@@ -40,9 +50,8 @@ from repro.dist.collectives import make_dp_pmean, shard_map_dp
 from repro.dist.sharding import param_pspecs, stage_param_pspecs
 from repro.launch.mesh import dp_axes, pipe_size
 from repro.models.model import Model
-from repro.optim import adam
 from repro.pipeline import sync as psync
-from repro.pipeline.partition import make_partition, partition_params
+from repro.pipeline.partition import make_partition
 
 from jax.sharding import NamedSharding, PartitionSpec as P
 
@@ -54,11 +63,14 @@ __all__ = [
     "bubble_fraction",
     "peak_inflight",
     "sync_slack_ticks",
+    "simulate_schedule",
     "make_pipeline_train_step",
     "pipeline_state_shardings",
 ]
 
 SCHEDULES = ("gpipe", "1f1b")
+
+tmap = jax.tree_util.tree_map
 
 
 # ------------------------------------------------------------------ analytics
@@ -140,16 +152,63 @@ def sync_slack_ticks(name: str, S: int, M: int) -> list[int]:
     return [last_b[0] - last_b[s] for s in range(S)]
 
 
+def simulate_schedule(name: str, S: int, M: int,
+                      t_f: float = 1.0, t_b: float = 1.0) -> dict:
+    """Dependency-driven timing of a schedule with measured tick costs.
+
+    The unit-tick analytics above assume B-cost == F-cost; real backwards
+    run ~2x the forward (plus the stage-replay recompute here), which
+    changes both the bubble fraction and the per-stage Eq. 4 slack. This
+    replays the slot table as an event simulation: each F(s, j) waits for
+    F(s-1, j) and the rank's previous op; each B(s, j) waits for B(s+1, j)
+    (or its own F on the last stage). Returns::
+
+        {"makespan": seconds, "bubble_fraction": scalar,
+         "slack_seconds": [per stage]}       # Eq. 4 slack in seconds
+
+    The bubble is one number: every stage is busy for exactly
+    M * (t_f + t_b) seconds of the same makespan. With t_f == t_b == 1
+    it matches ``bubble_fraction`` and the slack equals
+    ``sync_slack_ticks`` (the calibration degenerates to the unit model).
+    """
+    table = slot_table(name, S, M)
+    end_f: dict[tuple[int, int], float] = {}
+    end_b: dict[tuple[int, int], float] = {}
+    free = [0.0] * S
+    for t in range(tick_count(name, S, M)):
+        for s in range(S):
+            for kind, j in table[s][t]:
+                if kind == "F":
+                    dep = end_f.get((s - 1, j), 0.0) if s > 0 else 0.0
+                    start = max(free[s], dep)
+                    end_f[(s, j)] = free[s] = start + t_f
+                else:
+                    dep = (end_b.get((s + 1, j), 0.0) if s < S - 1
+                           else end_f[(s, j)])
+                    dep = max(dep, end_f[(s, j)])
+                    start = max(free[s], dep)
+                    end_b[(s, j)] = free[s] = start + t_b
+    makespan = max(free)
+    busy = M * (t_f + t_b)
+    last_b = [max(end_b[(s, j)] for j in range(M)) for s in range(S)]
+    return {
+        "makespan": makespan,
+        "bubble_fraction": 1.0 - busy / makespan,
+        "slack_seconds": [last_b[0] - last_b[s] for s in range(S)],
+    }
+
+
 # ------------------------------------------------------------- step builder
 def make_pipeline_train_step(model: Model, mesh, cfg):
     """Pipelined train step: (state, batch) -> (state, metrics).
 
     ``cfg`` is a ``repro.train.step.TrainStepConfig`` with
     ``num_stages > 1``; the mesh must carry a ``pipe`` axis of that size.
-    State layout (see ``partition_params`` / ``init_pipeline_comp_state``):
+    State layout (see the family's ``StageAdapter`` /
+    ``init_pipeline_comp_state``):
 
-      stage_params  stage-stacked blocks tree, leaves (S, ...) over 'pipe'
-      shared_params embeddings/head/final norm, replicated over 'pipe'
+      stage_params  stage-stacked stacks, leaves (S, Lmax, ...) over 'pipe'
+      shared_params embeddings/head/norms/shared blocks, replicated
       opt_m/opt_v   {"stage": ..., "shared": ...} mirrors of the above
       opt_step      scalar
       comp          per-distinct-plan stacked compressor state,
@@ -178,11 +237,10 @@ def make_pipeline_train_step(model: Model, mesh, cfg):
     # Static stage-plan schedule from the flat plan + the local leaf shapes.
     params_shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
     stage_shapes = jax.eval_shape(
-        lambda p: partition_params(p, S)[0], params_shapes)
-    local_template = jax.tree_util.tree_map(
-        lambda a: jax.ShapeDtypeStruct(a.shape[1:], a.dtype), stage_shapes)
+        lambda p: part.partition_params(p)[0], params_shapes)
     splans = psync.make_stage_plans(
-        cfg.policy_plan, S, psync.local_leaves_of(local_template))
+        cfg.policy_plan, S, psync.stage_local_leaves(stage_shapes),
+        local_path=part.local_leaf_path)
 
     R = ring_slots(name, S, M)
     n_ticks = tick_count(name, S, M)
@@ -192,13 +250,15 @@ def make_pipeline_train_step(model: Model, mesh, cfg):
     inv_M = 1.0 / M
 
     def local_step(state, batch):
+        from repro.optim import adam
+
         s_idx = lax.axis_index("pipe")
         is_first = s_idx == 0
         is_last = s_idx == S - 1
-        squeeze = lambda t: jax.tree_util.tree_map(lambda a: a[0], t)
+        squeeze = lambda t: tmap(lambda a: a[0], t)
         stage_p = squeeze(state["stage_params"])
         shared_p = state["shared_params"]
-        comp = jax.tree_util.tree_map(lambda a: a[0, 0], state["comp"])
+        comp = tmap(lambda a: a[0, 0], state["comp"])
 
         def to_mb(a):
             if a.shape[0] % M:
@@ -206,27 +266,33 @@ def make_pipeline_train_step(model: Model, mesh, cfg):
                                  f"num_microbatches={M}")
             return a.reshape((M, a.shape[0] // M) + a.shape[1:])
 
-        tokens = to_mb(batch["tokens"])
-        labels = to_mb(batch["labels"])
-        b, T = tokens.shape[1], tokens.shape[2]
+        mb = {k: to_mb(v) for k, v in batch.items()}
+        take_mb = lambda j: {k: jnp.take(v, j, axis=0) for k, v in mb.items()}
+        bspec = part.boundary_spec(
+            {k: jax.ShapeDtypeStruct(v.shape[1:], v.dtype)
+             for k, v in mb.items()})
+        zeros_bnd = lambda: tmap(lambda s: jnp.zeros(s.shape, s.dtype), bspec)
 
-        def rank_fwd(sp, sh, tok, lab, x_recv):
+        def rank_fwd(sp, sh, mbj, x_recv):
             # Every rank runs embed + blocks + head; the first/last masks
             # select which parts are live — SPMD uniformity. The masked
             # paths get zero cotangents in the backward, so their params
-            # see zero gradient without explicit bookkeeping.
-            x0 = part.embed(sh, tok)
-            x_in = jnp.where(is_first, x0, x_recv)
-            y = part.blocks(sp, x_in)
-            loss = part.head_loss(sh, y, lab)
-            return y, loss
+            # see zero gradient without explicit bookkeeping. ``blocks``
+            # may add a per-stage auxiliary loss (MoE router balance) —
+            # it lands in local_loss on EVERY rank, the head CE only on
+            # the last, and the pipe psum of loss_acc totals both.
+            x0 = part.embed(sh, mbj)
+            x_in = tmap(lambda a, b: jnp.where(is_first, a, b), x0, x_recv)
+            y, aux = part.blocks(sp, sh, x_in, s_idx)
+            head = part.head_loss(sh, y, mbj)
+            local_loss = jnp.where(is_last, head, 0.0) + aux
+            return y, local_loss
 
-        fwd_recv = jnp.zeros((b, T, part.d_model), part.dtype)
-        bwd_recv = jnp.zeros((b, T, part.d_model), part.dtype)
-        ring = jnp.zeros((R, b, T, part.d_model), part.dtype)
+        fwd_recv = zeros_bnd()
+        bwd_recv = zeros_bnd()
+        ring = tmap(lambda s: jnp.zeros((R,) + s.shape, s.dtype), bspec)
         loss_acc = jnp.zeros((), jnp.float32)
-        f32z = lambda t: jax.tree_util.tree_map(
-            lambda a: jnp.zeros(a.shape, jnp.float32), t)
+        f32z = lambda t: tmap(lambda a: jnp.zeros(a.shape, jnp.float32), t)
         gacc_s = f32z(stage_p)
         gacc_sh = f32z(shared_p)
 
@@ -235,48 +301,53 @@ def make_pipeline_train_step(model: Model, mesh, cfg):
                 off = t - s_idx
                 valid_f = (off >= 0) & (off < M)
                 jf = jnp.clip(off, 0, M - 1)
-                y, loss_mb = rank_fwd(stage_p, shared_p,
-                                      jnp.take(tokens, jf, axis=0),
-                                      jnp.take(labels, jf, axis=0), fwd_recv)
-                loss_acc = loss_acc + jnp.where(valid_f & is_last, loss_mb, 0.0)
-                upd = lax.dynamic_update_index_in_dim(ring, fwd_recv, jf % R, 0)
-                ring = jnp.where(valid_f, upd, ring)
-                fwd_recv = lax.ppermute(y, "pipe", fwd_perm)
+                y, loss_mb = rank_fwd(stage_p, shared_p, take_mb(jf), fwd_recv)
+                loss_acc = loss_acc + jnp.where(valid_f, loss_mb, 0.0)
+                ring = tmap(
+                    lambda r, v: jnp.where(
+                        valid_f,
+                        lax.dynamic_update_index_in_dim(r, v, jf % R, 0), r),
+                    ring, fwd_recv)
+                fwd_recv = tmap(lambda a: lax.ppermute(a, "pipe", fwd_perm), y)
             if t >= fbt:
                 # same arithmetic the slot_table analytics use (on traced s)
                 offb = _bwd_mb(name, t, s_idx, S, M)
                 valid_b = (offb >= 0) & (offb < M)
                 jb = jnp.clip(offb, 0, M - 1)
-                tok = jnp.take(tokens, jb, axis=0)
-                lab = jnp.take(labels, jb, axis=0)
-                x_saved = jnp.take(ring, jb % R, axis=0)
+                mbj = take_mb(jb)
+                x_saved = tmap(lambda r: jnp.take(r, jb % R, axis=0), ring)
 
-                def replay(sp, sh, xr, tok=tok, lab=lab):
-                    return rank_fwd(sp, sh, tok, lab, xr)
+                def replay(sp, sh, xr, mbj=mbj):
+                    return rank_fwd(sp, sh, mbj, xr)
 
                 _, vjp = jax.vjp(replay, stage_p, shared_p, x_saved)
                 # vjp is linear in the cotangents: masking them masks the
                 # whole backward (param grads AND the outgoing boundary
                 # cotangent) — off-schedule ranks contribute exact zeros.
-                ct_y = (jnp.where(valid_b & ~is_last, 1.0, 0.0)
-                        .astype(part.dtype) * bwd_recv)
-                ct_loss = jnp.where(valid_b & is_last, inv_M, 0.0)
+                # local_loss internally masks the head by is_last, so the
+                # uniform inv_M loss cotangent is correct on every rank
+                # (it also pulls the per-stage aux-loss gradients).
+                ct_y = tmap(
+                    lambda a: jnp.where(valid_b & ~is_last, a,
+                                        jnp.zeros_like(a)), bwd_recv)
+                ct_loss = jnp.where(valid_b, inv_M, 0.0)
                 gs, gsh, gx = vjp((ct_y, ct_loss))
                 add32 = lambda a, g: a + g.astype(jnp.float32)
-                gacc_s = jax.tree_util.tree_map(add32, gacc_s, gs)
-                gacc_sh = jax.tree_util.tree_map(add32, gacc_sh, gsh)
-                bwd_recv = lax.ppermute(gx, "pipe", bwd_perm)
+                gacc_s = tmap(add32, gacc_s, gs)
+                gacc_sh = tmap(add32, gacc_sh, gsh)
+                bwd_recv = tmap(lambda a: lax.ppermute(a, "pipe", bwd_perm), gx)
 
         pmean_dp = make_dp_pmean(axes_dp)
         psum_pipe = lambda x: lax.psum(x, "pipe")
         loss = pmean_dp(psum_pipe(loss_acc) * inv_M)
 
         cast_like = lambda g, p: g.astype(p.dtype)
-        gacc_s = jax.tree_util.tree_map(cast_like, gacc_s, stage_p)
-        # Shared-param grads: only the owning boundary rank computed a
-        # nonzero contribution; the pipe psum gives every rank the total.
-        gacc_sh = jax.tree_util.tree_map(
-            lambda g, p: psum_pipe(g).astype(p.dtype), gacc_sh, shared_p)
+        gacc_s = tmap(cast_like, gacc_s, stage_p)
+        # Shared-param grads: boundary ranks (and, for Zamba's shared attn
+        # block, every rank) computed partial contributions; the pipe psum
+        # gives every rank the total.
+        gacc_sh = tmap(lambda g, p: psum_pipe(g).astype(p.dtype),
+                       gacc_sh, shared_p)
 
         synced_s, synced_sh, comp2 = psync.stage_sync_grads(
             gacc_s, gacc_sh, comp, splans, pmean_dp, s_idx,
@@ -309,14 +380,14 @@ def make_pipeline_train_step(model: Model, mesh, cfg):
         new_p, ost, opt_mets = adam.update(params_local, grads_local, ost,
                                            adam_cfg, gnorm=gnorm)
 
-        unsq = lambda t: jax.tree_util.tree_map(lambda a: a[None], t)
+        unsq = lambda t: tmap(lambda a: a[None], t)
         new_state = {
             "stage_params": unsq(new_p["stage"]),
             "shared_params": new_p["shared"],
             "opt_m": {"stage": unsq(ost.m["stage"]), "shared": ost.m["shared"]},
             "opt_v": {"stage": unsq(ost.v["stage"]), "shared": ost.v["shared"]},
             "opt_step": ost.step,
-            "comp": jax.tree_util.tree_map(lambda a: a[None, None], comp2),
+            "comp": tmap(lambda a: a[None, None], comp2),
         }
         metrics = {"loss": loss, "entropy": entropy, **opt_mets}
         return new_state, metrics
@@ -351,7 +422,6 @@ def pipeline_state_shardings(state, model: Model, mesh):
     shared_specs = param_pspecs(state["shared_params"], mesh)
     dp = dp_axes(mesh)
     ns = lambda spec: NamedSharding(mesh, spec)
-    tmap = jax.tree_util.tree_map
     comp_shard = tmap(lambda a: ns(P("pipe", tuple(dp))), state["comp"])
     return {
         "stage_params": tmap(ns, stage_specs),

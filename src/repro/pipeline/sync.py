@@ -93,15 +93,22 @@ def make_stage_plans(
     num_stages: int,
     local_leaves: list[tuple[str, tuple[int, ...]]],
     bucket_bytes: int = bucketing.DEFAULT_BUCKET_BYTES,
+    local_path: Callable[[str], tuple[int, str] | None] = local_leaf_path,
 ) -> StagePlans:
     """Split a flat-layout plan into per-stage local plans + layouts.
 
     Pure function of (plan, leaf shapes): trace-time, host init, and window
     re-plans all derive the identical object, like ``BucketLayout`` itself.
+    ``local_leaves`` comes from the family adapter's stage-stacked template
+    (``stage_local_leaves``) — for ragged stage plans its shapes are the
+    PADDED per-rank shapes, which is exactly what each rank's bucketed
+    schedule must pack. ``local_path`` is the adapter's flat->local leaf
+    mapping (every registered family uses the shared ``['stages'][i]``
+    convention, so the default regex is the common case).
     """
     per_stage: list[list[tuple[str, int]]] = [[] for _ in range(num_stages)]
     for path, rank in plan.ranks:
-        loc = local_leaf_path(path)
+        loc = local_path(path)
         if loc is None:
             raise ValueError(f"plan compresses non-stage leaf {path!r}; "
                              "shared leaves are excluded from compression")
@@ -224,31 +231,34 @@ def init_pipeline_comp_state(
 
     Per-leaf warm starts use the SAME key folding as the flat
     ``init_compressor_state`` (fold_in by global plan index), so the
-    pipelined and single-program trainers start from bit-identical Q.
-    Leaves: (S, ...) stacked — uncovered (masked-off) stage slices are
-    filled with the first covered stage's values, which keeps every slice
-    finite and every rank's program shape-uniform.
+    pipelined and single-program trainers start from bit-identical Q when
+    the stage plan is uniform. Leaf SHAPES come from the stage-local
+    layouts (not the flat tree): ragged stage plans pad each rank's
+    stacks to the widest stage, and the compressor state must match the
+    padded gradient a rank actually compresses (padded slices carry zero
+    gradients, which PowerSGD maps to zero factors — they never pollute
+    the live slices). Leaves: (S, ...) stacked — uncovered (masked-off)
+    stage slices are filled with the first covered stage's values, which
+    keeps every slice finite and every rank's program shape-uniform.
     """
-    by_path = {
-        jax.tree_util.keystr(kp): leaf
-        for kp, leaf in jax.tree_util.tree_flatten_with_path(params)[0]
-    }
-    per_leaf: dict[str, LowRankState] = {}
-    for i, (path, rank) in enumerate(plan.ranks):
-        leaf = by_path[path]
-        per_leaf[path] = init_leaf_state(
-            tuple(leaf.shape), rank, jax.random.fold_in(key, i), leaf.dtype)
-
+    flat_index = {path: i for i, (path, _) in enumerate(plan.ranks)}
     state: dict[str, LowRankState] = {}
     for d, (plan_d, stages_d) in enumerate(splans.distinct):
         if not plan_d.ranks:
             continue
         layout = splans.layouts[d]
+        local_shapes = {p: shp for g in layout.groups for p, shp in g.members}
         stacks = []
         for s in range(splans.num_stages):
             src = s if s in stages_d else stages_d[0]
-            local = {lp: per_leaf[global_leaf_path(src, lp)]
-                     for lp, _ in plan_d.ranks}
+            local = {
+                lp: init_leaf_state(
+                    local_shapes[lp], rank,
+                    jax.random.fold_in(
+                        key, flat_index[global_leaf_path(src, lp)]),
+                    jnp.float32)
+                for lp, rank in plan_d.ranks
+            }
             stacks.append(bucketing.stack_state(local, layout))
         for gk in stacks[0]:
             state[splans.state_key(d, gk)] = LowRankState(

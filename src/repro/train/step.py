@@ -75,7 +75,10 @@ def make_train_step(model: Model, mesh, cfg: TrainStepConfig):
 
     ``cfg.num_stages > 1`` routes to the pipeline-parallel builder
     (``repro.pipeline.schedule``): same signature, but the state carries
-    the stage-partitioned layout documented there.
+    the stage-partitioned layout of the model family's ``StageAdapter``
+    (``repro.pipeline.adapters``) — stage-stacked stacks zero-padded to
+    the widest stage for ragged (hybrid/enc-dec) plans, plus the shared
+    (pipe-replicated) remainder.
     """
     if cfg.num_stages > 1 or "pipe" in mesh.axis_names:
         from repro.pipeline.schedule import make_pipeline_train_step

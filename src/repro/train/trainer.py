@@ -76,6 +76,8 @@ class Trainer:
 
         key = jax.random.PRNGKey(seed)
         params = model.init(key)
+        from repro.models.model import param_count
+        self.n_params = param_count(params)   # true count (pre-padding)
         self.leaves = classify_leaves(
             params, model.config.num_layers, edgc_cfg.num_stages,
             min_dim=tcfg.min_compress_dim,
@@ -130,10 +132,15 @@ class Trainer:
         reason = ppart.pipeline_supported(self.model.config, S)
         if reason is not None:
             raise ValueError(f"pipeline trainer unsupported: {reason}")
-        stage_p, shared_p = ppart.partition_params(params, S)
+        # The family's stage adapter owns the layout (stacked stage keys,
+        # ragged-plan padding, local<->global leaf paths).
+        self._part = ppart.make_partition(self.model, S,
+                                          remat=self.tcfg.remat)
+        stage_p, shared_p = self._part.partition_params(params)
         ost = adam.init({"stage": stage_p, "shared": shared_p}, acfg)
         self._splans = psync.make_stage_plans(
-            self.controller.plan, S, psync.stage_local_leaves(stage_p))
+            self.controller.plan, S, psync.stage_local_leaves(stage_p),
+            local_path=self._part.local_leaf_path)
         comp = psync.init_pipeline_comp_state(
             params, self.controller.plan, comp_key, self._splans)
         comp = psync.replicate_pipeline_comp_state(comp, self.world)
@@ -191,7 +198,8 @@ class Trainer:
             S = self.edgc_cfg.num_stages
             new_splans = psync.make_stage_plans(
                 plan, S,
-                psync.stage_local_leaves(self.state["stage_params"]))
+                psync.stage_local_leaves(self.state["stage_params"]),
+                local_path=self._part.local_leaf_path)
             comp_host = jax.device_get(self.state["comp"])
             fresh = psync.resize_pipeline_comp_state(
                 comp_host, self._splans, new_splans, self._comp_key)

@@ -140,3 +140,51 @@ def test_collective_parser():
     assert out["all-to-all"] == 2 * 16 * 16 * 4
     assert out["collective-permute"] == 4 * 4
     assert _shape_bytes("bf16[2,3]") == 12
+
+
+def test_stage_pspecs_per_family():
+    """Stage-stacked trees keep the Megatron TP rules behind the leading
+    'pipe' dim for every family: MoE expert stacks (S, L, E, d, f) shard
+    E over 'model' (expert parallelism under TP), Mamba2 projections keep
+    column/row rules, and replicated-by-path leaves stay replicated."""
+    from repro.dist.sharding import stage_param_pspecs
+    from repro.pipeline.partition import make_partition
+
+    mesh = make_host_mesh(pipe=1, data=1, model=1)
+
+    def stage_specs(cfg):
+        model = build_model(cfg)
+        part = make_partition(model, cfg.num_stages)
+        shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+        sp, _ = jax.eval_shape(lambda p: part.partition_params(p), shapes)
+        flat = jax.tree_util.tree_flatten_with_path(
+            stage_param_pspecs(sp, mesh))[0]
+        return {jax.tree_util.keystr(kp): s for kp, s in flat}
+
+    moe = stage_specs(ModelConfig(
+        name="m", family="moe", num_layers=2, d_model=128, num_heads=4,
+        num_kv_heads=2, d_ff=128, vocab_size=512, num_experts=4,
+        experts_per_token=2, num_stages=1))
+    gate = next(s for p, s in moe.items() if "experts" in p and "gate" in p)
+    assert gate[0] == "pipe" and gate[2] == "model"      # (S, L, E, d, f)
+    router = next(s for p, s in moe.items() if "router" in p)
+    assert "model" not in tuple(router)
+
+    zam = stage_specs(ModelConfig(
+        name="z", family="zamba", num_layers=2, d_model=128, num_heads=4,
+        num_kv_heads=4, d_ff=256, vocab_size=512, ssm_state=16, chunk=16,
+        attn_every=2, num_stages=1))
+    in_proj = next(s for p, s in zam.items() if "in_proj" in p)
+    out_proj = next(s for p, s in zam.items() if "out_proj" in p)
+    assert in_proj[0] == "pipe" and in_proj[-1] == "model"
+    assert out_proj[-2] == "model"
+    conv = next(s for p, s in zam.items() if "conv" in p)
+    assert "model" not in tuple(conv)
+
+    wh = stage_specs(ModelConfig(
+        name="w", family="whisper", num_layers=2, encoder_layers=2,
+        d_model=128, num_heads=4, num_kv_heads=4, d_ff=256, vocab_size=512,
+        audio_frames=16, max_position=512, num_stages=2))
+    cross_wq = next(s for p, s in wh.items()
+                    if "cross" in p and "wq" in p)
+    assert cross_wq[0] == "pipe" and cross_wq[-1] == "model"

@@ -139,6 +139,29 @@ def test_block_params_follow_stage_index(arch, built):
 
 
 @pytest.mark.parametrize("arch", ARCH_IDS)
+def test_stage_adapter_partition_roundtrip(arch, built):
+    """Every assigned arch's family has a stage adapter whose
+    partition/merge is lossless on the REDUCED config (the flat<->stacked
+    relayout the pipelined trainer rides on)."""
+    from repro.pipeline.partition import make_partition, pipeline_supported
+
+    cfg, model, params = built(arch)
+    S = max(1, cfg.num_stages)
+    reason = pipeline_supported(cfg, S)
+    assert reason is None, f"{arch}: {reason}"
+    part = make_partition(model, S)
+    stage_p, shared_p = part.partition_params(params)
+    for leaf in jax.tree_util.tree_leaves(stage_p):
+        assert leaf.shape[0] == S
+    merged = part.merge_params(stage_p, shared_p)
+    ref, out = jax.tree_util.tree_flatten(params), \
+        jax.tree_util.tree_flatten(merged)
+    assert ref[1] == out[1], arch
+    for a, b in zip(ref[0], out[0]):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
 def test_decode_step(arch, built):
     cfg, model, params = built(arch)
     if cfg.family == "whisper":
