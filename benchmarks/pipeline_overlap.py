@@ -132,6 +132,16 @@ def _analytics(num_stages: int = S, num_micro: int = M,
     )
     from repro.pipeline.sync import stage_wire_bytes
 
+    import dataclasses
+
+    import jax.numpy as jnp
+
+    from repro.pipeline.partition import make_partition
+    from repro.pipeline.schedule import (
+        STASH_POLICIES, boundary_nbytes, peak_activation_bytes,
+        policy_tick_cost,
+    )
+
     model = build_model(GPT2_FIDELITY)
     params_shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
     leaves = classify_leaves(params_shapes, GPT2_FIDELITY.num_layers,
@@ -178,6 +188,30 @@ def _analytics(num_stages: int = S, num_micro: int = M,
         "overlap_feasible": overlap_ok,
     }
 
+    # Activation-memory ledger per stash policy (byte-accurate, from the
+    # tick table). The fidelity config has one block per stage at S=4 —
+    # every policy would degenerate — so the ledger runs on a 16-layer
+    # variant (4 segmentable units per stage: full stashes 3 carries,
+    # every_k=2 one, replay none). Boundary bytes use the execution
+    # harness's microbatch shape (batch 8 / M=4 microbatches, T=32).
+    stash_cfg = dataclasses.replace(GPT2_FIDELITY, num_layers=16,
+                                    num_stages=num_stages)
+    part = make_partition(build_model(stash_cfg), num_stages)
+    n_units = part.num_units()
+    mb = {"tokens": jax.ShapeDtypeStruct((2, 32), jnp.int32)}
+    bbytes = boundary_nbytes(part, mb)
+    rec["stash"] = {
+        "n_units": n_units,
+        "boundary_bytes": bbytes,
+        "peak_activation_bytes": {
+            pol: {name: peak_activation_bytes(
+                      name, num_stages, num_micro, pol,
+                      boundary_bytes=bbytes, n_units=n_units)
+                  for name in ("gpipe", "1f1b")}
+            for pol in STASH_POLICIES
+        },
+    }
+
     if measure:
         # Calibrated tick costs (satellite): measured F/B per-microbatch
         # times instead of B-cost == F-cost, simulated through the real
@@ -186,20 +220,39 @@ def _analytics(num_stages: int = S, num_micro: int = M,
         # the measured t_b (the analytic one above uses a comm-model
         # stand-in).
         costs = _measure_tick_costs(num_stages)
-        cal = {}
-        for name in ("gpipe", "1f1b"):
-            sim = simulate_schedule(name, num_stages, num_micro,
-                                    costs["t_f_stage_s"],
-                                    costs["t_b_stage_s"])
-            cal[name] = {
-                "bubble_fraction": sim["bubble_fraction"],
-                "slack_seconds": sim["slack_seconds"],
-                "makespan_s": sim["makespan"],
+        # The executor's backward tick is NOT the flat model's pure
+        # backward: every stash policy's hand-rolled VJP re-runs the
+        # un-stashed segment forwards once (one extra t_f), and the
+        # replay policy with per-unit remat inside (the memory-floor
+        # configuration stashing exists to relax) pays that forward a
+        # second time. policy_tick_cost models exactly that for the
+        # FIDELITY config's remat setting — the same flag the executor
+        # would run — so the Eq. 4 slack and the DAC rank vector are
+        # calibrated per policy instead of from the understated t_b.
+        per_policy = {}
+        for pol in STASH_POLICIES:
+            t_b_pol = policy_tick_cost(costs["t_f_stage_s"],
+                                       costs["t_b_stage_s"], pol,
+                                       remat=GPT2_FIDELITY.remat)
+            sims = {}
+            for name in ("gpipe", "1f1b"):
+                sim = simulate_schedule(name, num_stages, num_micro,
+                                        costs["t_f_stage_s"], t_b_pol)
+                sims[name] = {
+                    "bubble_fraction": sim["bubble_fraction"],
+                    "slack_seconds": sim["slack_seconds"],
+                    "makespan_s": sim["makespan"],
+                }
+            per_policy[pol] = {
+                "t_b_tick_s": t_b_pol,
+                "schedules": sims,
+                "dac_ranks": stage_aligned_ranks(r1, num_stages, comm,
+                                                 t_b_pol, r_min, r_max),
             }
-        ranks_cal = stage_aligned_ranks(r1, num_stages, comm,
-                                        costs["t_b_stage_s"], r_min, r_max)
-        rec["calibrated"] = {**costs, "schedules": cal,
-                             "dac_ranks": ranks_cal}
+        replay = per_policy["replay"]
+        rec["calibrated"] = {**costs, "schedules": replay["schedules"],
+                             "dac_ranks": replay["dac_ranks"],
+                             "per_policy": per_policy}
     return rec
 
 
@@ -217,6 +270,16 @@ def _check_analytics(a: dict) -> None:
     assert sum(c for c, _ in per_stage) == a["plan_bytes"]["compressed"]
     assert sum(fu for _, fu in per_stage) == a["plan_bytes"]["full"]
     assert all(c <= fu for c, fu in per_stage)
+    # Activation ledger: stashing can only ADD ring bytes, per stage and
+    # schedule — full >= every_k >= replay, strictly when units allow it.
+    led = a["stash"]["peak_activation_bytes"]
+    for name in ("gpipe", "1f1b"):
+        for s in range(a["num_stages"]):
+            assert (led["full"][name][s] >= led["every_k"][name][s]
+                    >= led["replay"][name][s]), (name, s, led)
+    assert a["stash"]["n_units"] >= 3   # the 16-layer variant is non-trivial
+    assert max(led["full"]["1f1b"]) > max(led["every_k"]["1f1b"]) \
+        > max(led["replay"]["1f1b"]), led
     if "calibrated" in a:
         cal = a["calibrated"]
         assert cal["t_f_stage_s"] > 0 and cal["t_b_stage_s"] > 0
@@ -229,6 +292,18 @@ def _check_analytics(a: dict) -> None:
                 slack
         ranks_cal = cal["dac_ranks"]
         assert all(r2 >= r1 for r1, r2 in zip(ranks_cal, ranks_cal[1:]))
+        pp = cal["per_policy"]
+        # replay's backward tick is never shorter than a stashed one
+        # (equal at remat=False — the fidelity default — strictly longer
+        # when the config remats inside the stage), so its Eq. 4 slack
+        # and late-stage ranks dominate or match the stashed policies'
+        assert pp["replay"]["t_b_tick_s"] >= pp["full"]["t_b_tick_s"]
+        assert pp["full"]["t_b_tick_s"] == pp["every_k"]["t_b_tick_s"]
+        for pol in pp:
+            rks = pp[pol]["dac_ranks"]
+            assert all(b >= a2 for a2, b in zip(rks, rks[1:])), (pol, rks)
+        assert all(r >= f for r, f in zip(pp["replay"]["dac_ranks"],
+                                          pp["full"]["dac_ranks"]))
 
 
 def _csv_row(name: str, us_per_call: float, derived: str) -> str:
@@ -240,6 +315,7 @@ def _csv_row(name: str, us_per_call: float, derived: str) -> str:
 
 def _rows(a: dict, us: float) -> list[str]:
     g, f = a["schedules"]["gpipe"], a["schedules"]["1f1b"]
+    led = a["stash"]["peak_activation_bytes"]
     rows = [
         _csv_row("pipeline_bubble_fraction", us,
                  f"{a['bubble_fraction']:.4f}"),
@@ -249,10 +325,19 @@ def _rows(a: dict, us: float) -> list[str]:
         _csv_row("pipeline_stage_sync_bytes", 0.0,
                  ";".join(str(c) for c, _ in a["stage_bytes"])),
         _csv_row("pipeline_overlap_feasible", 0.0, str(a["overlap_feasible"])),
+    ] + [
+        _csv_row(f"pipeline_peak_act_bytes_{pol}_1f1b", 0.0,
+                 ";".join(str(b) for b in led[pol]["1f1b"]))
+        for pol in ("replay", "every_k", "full")
     ]
     if "calibrated" in a:
         cal = a["calibrated"]
         rows += [
+            _csv_row(f"pipeline_tick_b_{pol}",
+                     cal["per_policy"][pol]["t_b_tick_s"] * 1e6,
+                     ";".join(map(str, cal["per_policy"][pol]["dac_ranks"])))
+            for pol in ("replay", "every_k", "full")
+        ] + [
             _csv_row("pipeline_tick_b_over_f",
                      cal["t_b_stage_s"] * 1e6, f"{cal['b_over_f']:.2f}"),
             _csv_row("pipeline_bubble_calibrated_1f1b", 0.0,
@@ -280,7 +365,10 @@ def run(steps: int | None = None) -> list[str]:
 
 
 # ----------------------------------------------------------------- execution
-def _trainers(steps: int, family: str = "gpt2"):
+def _trainers(steps: int, family: str = "gpt2", stash: str = "replay",
+              num_layers: int | None = None):
+    import dataclasses
+
     import jax  # noqa: F401  (device count must already be forced)
 
     from repro.core import EDGCConfig, GDSConfig
@@ -295,15 +383,18 @@ def _trainers(steps: int, family: str = "gpt2"):
         # Both trainers share one config (num_stages=4): the flat baseline
         # keeps the "virtual stages" semantics, so param layouts — and with
         # them the PowerSGD warm-start keys — are identical and the loss
-        # trajectories are comparable down to fp tolerance.
+        # trajectories are comparable down to fp tolerance. alpha=1 keeps
+        # the ISR gate always-on: one compiled step variant per plan.
         cfg = _exec_cfg(family, S)
+        if num_layers is not None:
+            cfg = dataclasses.replace(cfg, num_layers=num_layers)
         model = build_model(cfg)
         edgc = EDGCConfig(policy="fixed", fixed_rank=8, num_stages=S,
                           total_iterations=steps,
-                          gds=GDSConfig(alpha=0.5, beta=0.25),
+                          gds=GDSConfig(alpha=1.0, beta=0.25),
                           dac=DACConfig(window=max(2, steps // 2)))
         tcfg = TrainerConfig(total_steps=steps, log_every=1,
-                             schedule=schedule,
+                             schedule=schedule, stash_policy=stash,
                              adam=AdamConfig(lr=1e-3, warmup_steps=2,
                                              total_steps=steps))
         return Trainer(model, mesh, edgc, tcfg, seed=0)
@@ -348,7 +439,22 @@ def execute(smoke: bool, family: str = "gpt2") -> dict:
 
     rec = {"family": family, "loss_gap": float(gap), "ppermutes": n_permute,
            "allreduces": n_allreduce,
+           "stash_policy": pipe.tcfg.stash_policy,
            "stage_bytes": pipe.stage_bytes()}
+
+    if family == "gpt2":
+        # Selective stashing through the REAL executor: a 12-layer variant
+        # (3 segmentable units per stage at S=4, so every_k=2 actually
+        # stashes a carry) must hold the same loss parity as replay.
+        pk, fk, datak = _trainers(steps, family, stash="every_k",
+                                  num_layers=12)
+        lpk = [h["loss"] for h in pk.run(datak())]
+        lfk = [h["loss"] for h in fk.run(datak())]
+        gap_k = max(abs(a - b) for a, b in zip(lpk, lfk))
+        print(f"pipeline_loss_gap_every_k,0.000,{gap_k:.2e}")
+        assert gap_k < 5e-3, f"every_k stashing must track flat DP ({gap_k})"
+        rec["every_k_loss_gap"] = float(gap_k)
+
     if not smoke:
         def time_steps(tr, n=5):
             it = data()

@@ -131,9 +131,12 @@ class EDGCController:
 
     # ------------------------------------------------------------------ hooks
     def wants_entropy(self, step: int) -> bool:
-        """The ISR (alpha) gate — trainer computes entropy only when True."""
-        if self.cfg.policy != "edgc":
-            return False
+        """The ISR (alpha) gate — the trainer dispatches an entropy-OFF
+        compiled step variant when False, so skipped iterations lower no
+        moment work at all (§IV-B measures entropy on a FRACTION of
+        iterations). The gate is a GDS sampling property, not an EDGC-
+        policy one: baselines keep the same schedule so their
+        observational entropy histories stay comparable."""
         return self.cfg.gds.should_measure(step % self.cfg.dac.window)
 
     def on_entropy(self, step: int, h: float) -> None:
@@ -179,6 +182,9 @@ class EDGCController:
                 "warmed_up": bool(self.dac.warmed_up),
                 "r_stage1": int(self.dac.r_stage1),
                 "window_index": int(self.dac.window_index),
+                "applied_ranks": (None if self.dac.applied_ranks is None
+                                  else [int(r) for r in
+                                        self.dac.applied_ranks]),
             },
             "cqm": {
                 "h_anchor": self.cqm._h_anchor,
@@ -199,6 +205,8 @@ class EDGCController:
         self.dac.warmed_up = bool(sd["dac"]["warmed_up"])
         self.dac.r_stage1 = int(sd["dac"]["r_stage1"])
         self.dac.window_index = int(sd["dac"]["window_index"])
+        ar = sd["dac"].get("applied_ranks")
+        self.dac.applied_ranks = None if ar is None else [int(r) for r in ar]
         h, g = sd["cqm"]["h_anchor"], sd["cqm"]["g_anchor"]
         self.cqm._h_anchor = None if h is None else float(h)
         self.cqm._g_anchor = None if g is None else float(g)

@@ -93,9 +93,33 @@ class DAC:
     warmed_up: bool = False
     r_stage1: int = 0
     window_index: int = 0
+    # per-stage ranks actually APPLIED last window (Constraint 2 is a
+    # bound on the applied move, so every stage — not just stage 1 —
+    # tracks its previous value); None until the first post-warm-up update
+    applied_ranks: list | None = None
 
     def __post_init__(self) -> None:
         self.r_stage1 = self.r_max
+
+    def _snap_limited(self, r: int, r_prev: int) -> int:
+        """Quantize to the rank grid WITHOUT leaving the ±adjust_limit
+        window around ``r_prev``: the snap happens INSIDE the clamp, so
+        the applied move can never exceed ``adjust_limit`` (the old
+        clamp-then-round order could emit adjust_limit + quantize_to/2,
+        a Constraint-2 violation). Rank bounds still win last — they are
+        Constraint 1."""
+        q = max(1, self.cfg.quantize_to)
+        s = self.cfg.adjust_limit
+        rq = round(r / q) * q
+        if rq > r_prev + s:
+            rq -= q * (-(-(rq - (r_prev + s)) // q))     # ceil-div steps
+            if rq < r_prev - s:
+                rq = r_prev   # no grid point in the window (q > 2s): hold
+        elif rq < r_prev - s:
+            rq += q * (-(-((r_prev - s) - rq) // q))
+            if rq > r_prev + s:
+                rq = r_prev
+        return max(self.r_min, min(self.r_max, rq))
 
     # -- §IV-D2: adaptive warm-up -------------------------------------------
     def maybe_end_warmup(self, h_window: float, step: int) -> bool:
@@ -117,24 +141,42 @@ class DAC:
 
     # -- Algorithm 1 + 2 ------------------------------------------------------
     def update(self, h_window: float) -> list[int]:
-        """Per-window update: new per-stage rank vector (stage 1 first)."""
+        """Per-window update: new per-stage rank vector (stage 1 first).
+
+        Quantization happens INSIDE the Constraint-2 clamp for every
+        stage: the Theorem-3 target is first limited to ±adjust_limit of
+        the stage's previously APPLIED rank, then snapped to the rank
+        grid without leaving that window (``_snap_limited``). Monotone
+        clamps over monotone previous/target vectors keep the Algorithm-2
+        non-decreasing-over-stages invariant intact.
+        """
         self.window_index += 1
         if not self.cqm.anchored:
             self.cqm.anchor(self.r_max, h_window)
+        prev = list(self.applied_ranks or [self.r_max] * self.num_stages)
         r_new = self.cqm.rank_for_entropy(h_window)
         r1 = window_rank_adjust(
-            self.r_stage1, r_new, self.r_min, self.r_max, self.cfg.adjust_limit
+            prev[0], r_new, self.r_min, self.r_max, self.cfg.adjust_limit
         )
-        q = max(1, self.cfg.quantize_to)
-        r1 = max(self.r_min, min(self.r_max, round(r1 / q) * q))
+        r1 = self._snap_limited(r1, prev[0])
         self.r_stage1 = r1
         ranks = stage_aligned_ranks(
             r1, self.num_stages, self.comm, self.t_micro_back,
             self.r_min, self.r_max,
         )
-        return [max(self.r_min, min(self.r_max, round(r / q) * q)) for r in ranks]
+        out = [r1]
+        for i in range(1, self.num_stages):
+            r_i = window_rank_adjust(
+                prev[i], ranks[i], self.r_min, self.r_max,
+                self.cfg.adjust_limit
+            )
+            out.append(self._snap_limited(r_i, prev[i]))
+        self.applied_ranks = out
+        return list(out)
 
     def current_ranks(self) -> list[int]:
+        if self.applied_ranks is not None:
+            return list(self.applied_ranks)
         return stage_aligned_ranks(
             self.r_stage1, self.num_stages, self.comm, self.t_micro_back,
             self.r_min, self.r_max,

@@ -107,7 +107,7 @@ def _leaf_entropy(leaf: jax.Array, cfg: GDSConfig) -> tuple[jax.Array, jax.Array
     return h, jnp.asarray(s.shape[0], jnp.float32)
 
 
-def sample_moments(grads, cfg: GDSConfig = GDSConfig()):
+def sample_moments(grads, cfg: GDSConfig = GDSConfig(), lead_mask=None):
     """(count, sum, sum-of-squares) of the pooled beta-sample of a pytree.
 
     The three scalars are sufficient statistics for the Gaussian (Lemma 2)
@@ -116,15 +116,39 @@ def sample_moments(grads, cfg: GDSConfig = GDSConfig()):
     the ``pipe`` axis, reproducing the single-program pooled entropy exactly
     (moments are permutation-invariant, so partial-sum grouping only moves
     fp32 association error).
+
+    ``lead_mask`` (a boolean (Lmax,) live-unit vector for a stage-stacked
+    tree whose leaves all lead with that dim) excludes zero-PADDED slots
+    exactly: the mask broadcasts over each leaf, is strided-sampled at the
+    SAME positions as the values, and only live samples enter n/s1/s2.
+    Without it a ragged pipeline stage would pool its pad zeros — n
+    inflated, sigma (and the entropy CQM's Theorem 3 consumes) biased low.
+    Since the pad slots are a contiguous tail per unit row and the stride
+    divides the row evenly for the usual power-of-two leaf shapes, the
+    surviving sample positions coincide with the flat (unpadded) leaf's,
+    keeping pipelined pooled entropy equal to the flat ``grads_entropy``.
     """
     leaves = [l for l in jax.tree_util.tree_leaves(grads) if l.size > 16]
     if not leaves:
         z = jnp.zeros((), jnp.float32)
         return z, z, z
     samples = [strided_sample(l, cfg.beta).astype(jnp.float32) for l in leaves]
-    n = jnp.asarray(sum(s.shape[0] for s in samples), jnp.float32)
-    s1 = sum(jnp.sum(s) for s in samples)
-    s2 = sum(jnp.sum(jnp.square(s)) for s in samples)
+    if lead_mask is None:
+        n = jnp.asarray(sum(s.shape[0] for s in samples), jnp.float32)
+        s1 = sum(jnp.sum(s) for s in samples)
+        s2 = sum(jnp.sum(jnp.square(s)) for s in samples)
+        return n, s1, s2
+    masks = [
+        strided_sample(
+            jnp.broadcast_to(
+                lead_mask.reshape((lead_mask.shape[0],) + (1,) * (l.ndim - 1)),
+                l.shape).astype(jnp.float32),
+            cfg.beta)
+        for l in leaves
+    ]
+    n = sum(jnp.sum(m) for m in masks)
+    s1 = sum(jnp.sum(s * m) for s, m in zip(samples, masks))
+    s2 = sum(jnp.sum(jnp.square(s) * m) for s, m in zip(samples, masks))
     return n, s1, s2
 
 

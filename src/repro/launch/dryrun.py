@@ -110,7 +110,8 @@ def _eval_shape_tree(fn, *args):
 # ------------------------------------------------------------- one combo
 def lower_one(arch: str, shape_name: str, mesh, policy: str = "edgc",
               rank: int = 64, verbose: bool = True,
-              opt_dtype: str = "float32") -> dict:
+              opt_dtype: str = "float32", stash: str = "replay",
+              stash_every: int = 2) -> dict:
     """Lower+compile one (arch, shape, mesh); return the roofline record."""
     spec = INPUT_SHAPES[shape_name]
     kind = spec["kind"]
@@ -146,7 +147,8 @@ def lower_one(arch: str, shape_name: str, mesh, policy: str = "edgc",
 
     if kind == "train" and pipe:
         rec = _lower_train_pipelined(arch, cfg, model, mesh, params_shapes,
-                                     shape_name, policy, rank, opt_dtype)
+                                     shape_name, policy, rank, opt_dtype,
+                                     stash=stash, stash_every=stash_every)
     elif kind == "train":
         rec = _lower_train(arch, cfg, model, mesh, mode, params_shapes,
                            pshard, shape_name, policy, rank, opt_dtype)
@@ -258,13 +260,18 @@ def _lower_train(arch, cfg, model, mesh, mode, params_shapes, pshard,
 
 
 def _lower_train_pipelined(arch, cfg, model, mesh, params_shapes, shape_name,
-                           policy, rank, opt_dtype="float32"):
+                           policy, rank, opt_dtype="float32",
+                           stash="replay", stash_every=2):
     """Lower+compile the pipelined train step (pipe mesh): stage-partitioned
-    state, 1F1B schedule, per-stage DP sync — what a pipelined pod runs."""
+    state, 1F1B schedule, per-stage DP sync — what a pipelined pod runs.
+    ``stash`` picks the executor's activation-stashing policy; the record
+    carries the per-stage ``peak_activation_bytes`` ledger for it."""
     from repro.launch.mesh import pipe_size
     from repro.pipeline import partition as ppart
     from repro.pipeline import sync as psync
-    from repro.pipeline.schedule import pipeline_state_shardings
+    from repro.pipeline.schedule import (
+        boundary_nbytes, peak_activation_bytes, pipeline_state_shardings,
+    )
 
     spec = INPUT_SHAPES[shape_name]
     B = spec["global_batch"]
@@ -304,7 +311,9 @@ def _lower_train_pipelined(arch, cfg, model, mesh, params_shapes, shape_name,
 
     scfg = TrainStepConfig(mode="dp_tp", policy_plan=plan,
                            measure_entropy=True, remat=cfg.remat,
-                           num_stages=S, schedule="1f1b", adam=acfg)
+                           num_stages=S, schedule="1f1b",
+                           stash_policy=stash, stash_every=stash_every,
+                           adam=acfg)
     step = make_train_step(model, mesh, scfg)
     jstep = jax.jit(step, in_shardings=(sshard, bshard),
                     out_shardings=(sshard, NamedSharding(mesh, P())),
@@ -322,6 +331,17 @@ def _lower_train_pipelined(arch, cfg, model, mesh, params_shapes, shape_name,
                        "family": cfg.family,
                        "distinct_plans": len(splans.distinct),
                        "stage_bytes": psync.stage_wire_bytes(leaves, plan, S)}
+    # Activation-memory ledger: per-rank microbatch boundary bytes (the
+    # local batch is B / dp_world, split M ways) x the stash policy's
+    # live ring entries from the tick table.
+    M = S  # the executor's default microbatch count
+    mb = {k: jax.ShapeDtypeStruct((max(1, v.shape[0] // (world * M)),)
+                                  + v.shape[1:], v.dtype)
+          for k, v in batch.items()}
+    rec["pipeline"]["stash_policy"] = stash
+    rec["pipeline"]["peak_activation_bytes"] = peak_activation_bytes(
+        "1f1b", S, M, stash, boundary_bytes=boundary_nbytes(part, mb),
+        n_units=part.num_units(), stash_every=stash_every)
     return rec
 
 
@@ -381,6 +401,13 @@ def main() -> None:
                          "lowers the pipelined (1F1B) train step")
     ap.add_argument("--policy", default="edgc")
     ap.add_argument("--rank", type=int, default=64)
+    ap.add_argument("--stash", default="replay",
+                    choices=["replay", "full", "every_k"],
+                    help="pipeline activation-stash policy (with --pipe): "
+                         "how much of each stage's forward survives to its "
+                         "backward tick")
+    ap.add_argument("--stash-every", type=int, default=2,
+                    help="k for --stash every_k")
     ap.add_argument("--out", default=None, help="write JSON records here")
     args = ap.parse_args()
 
@@ -394,7 +421,9 @@ def main() -> None:
             tag = f"{arch} x {shape_name} [{'x'.join(map(str, mesh.devices.shape))}]"
             try:
                 rec = lower_one(arch, shape_name, mesh,
-                                policy=args.policy, rank=args.rank)
+                                policy=args.policy, rank=args.rank,
+                                stash=args.stash,
+                                stash_every=args.stash_every)
                 if rec.get("skipped"):
                     print(f"SKIP {tag}: {rec['reason']}", flush=True)
                 else:

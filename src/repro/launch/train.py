@@ -53,6 +53,15 @@ def main() -> None:
     ap.add_argument("--schedule", default="1f1b", choices=["gpipe", "1f1b"])
     ap.add_argument("--micro", type=int, default=0,
                     help="microbatches per step (0 -> num_stages)")
+    ap.add_argument("--stash", default="replay",
+                    choices=["replay", "full", "every_k"],
+                    help="pipeline activation stashing: replay re-derives "
+                         "each stage's forward in its backward (memory "
+                         "floor); full/every_k stash inter-unit carries "
+                         "into a second ring and replay only the un-stashed "
+                         "segments")
+    ap.add_argument("--stash-every", type=int, default=2,
+                    help="k for --stash every_k")
     ap.add_argument("--data-mesh", type=int, default=1)
     ap.add_argument("--model-mesh", type=int, default=1)
     ap.add_argument("--use-kernels", action="store_true")
@@ -91,11 +100,13 @@ def main() -> None:
         total_steps=args.steps, log_every=max(1, args.steps // 20),
         use_kernels=args.use_kernels,
         schedule=args.schedule, num_microbatches=args.micro,
+        stash_policy=args.stash, stash_every=args.stash_every,
         adam=AdamConfig(lr=args.lr, warmup_steps=max(10, args.steps // 10),
                         total_steps=args.steps),
     )
     trainer = Trainer(model, mesh, edgc, tcfg, seed=args.seed)
-    pipe_tag = f", pipe={args.pipe} ({args.schedule})" if args.pipe else ""
+    pipe_tag = (f", pipe={args.pipe} ({args.schedule}, stash={args.stash})"
+                if args.pipe else "")
     print(f"{cfg.name}: {trainer.n_params/1e6:.1f}M params, "
           f"policy={args.policy}{pipe_tag}, {trainer.controller.describe()}")
 

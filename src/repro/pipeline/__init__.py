@@ -18,11 +18,16 @@ from .partition import (
 )
 from .schedule import (
     SCHEDULES,
+    STASH_POLICIES,
     bubble_fraction,
     make_pipeline_train_step,
+    peak_activation_bytes,
     peak_inflight,
+    policy_tick_cost,
     simulate_schedule,
     slot_table,
+    stash_points,
+    stash_segments,
 )
 from .sync import (
     StagePlans,
@@ -37,8 +42,10 @@ __all__ = [
     "StageAdapter", "adapter_families", "register_adapter",
     "PipelinePartition", "make_partition", "merge_params",
     "partition_params", "pipeline_supported",
-    "SCHEDULES", "bubble_fraction", "make_pipeline_train_step",
-    "peak_inflight", "simulate_schedule", "slot_table",
+    "SCHEDULES", "STASH_POLICIES", "bubble_fraction",
+    "make_pipeline_train_step", "peak_activation_bytes", "peak_inflight",
+    "policy_tick_cost", "simulate_schedule", "slot_table",
+    "stash_points", "stash_segments",
     "StagePlans", "init_pipeline_comp_state", "make_stage_plans",
     "resize_pipeline_comp_state", "stage_sync_grads", "stage_wire_bytes",
 ]

@@ -18,11 +18,20 @@ GPT-2 shaped":
     ``merge_params``) — stacked leaves lead with (S, Lmax, ...) and shard
     over the ``pipe`` mesh axis; everything else (embeddings, heads,
     norms, Zamba's shared attention block) replicates;
-  * the **compute closures** (``embed`` / ``blocks`` / ``head_loss``) the
-    schedule executes every tick, SPMD-uniform across ranks — ``blocks``
-    returns ``(boundary_out, aux_loss)`` so per-stage auxiliary losses
-    (the MoE router balance term) reach the total without a second
-    collective;
+  * the **compute closures** (``embed`` / ``blocks_segment`` /
+    ``head_loss``) the schedule executes every tick, SPMD-uniform across
+    ranks — ``blocks_segment`` runs a static span ``[lo, hi)`` of the
+    stage's scan units and returns ``(boundary_out, aux_loss)`` so
+    per-stage auxiliary losses (the MoE router balance term) reach the
+    total without a second collective; ``blocks`` is the full-stage span;
+  * the **stash contract** (``num_units`` / ``stash_spec``) — the
+    executor's selective activation stashing cuts the stage at unit
+    boundaries: the family says how many segmentable units a rank scans
+    (dense/MoE block, xLSTM pair, Zamba group slot, whisper enc/dec
+    block — SPMD-uniform, i.e. the WIDEST stage's count) and what one
+    stashed inter-unit carry looks like (the boundary pytree, for every
+    current family). Chaining ``blocks_segment`` over any partition of
+    ``[0, num_units)`` must reproduce ``blocks`` (aux summed);
   * the **boundary-activation spec** (``boundary_spec``) — an arbitrary
     pytree; the enc-dec adapter ships two channels (the frozen encoder
     memory rides along the decoder stages for cross-attention).
@@ -154,10 +163,44 @@ class StageAdapter:
         """Stage-0 boundary input from one microbatch."""
         raise NotImplementedError
 
+    def blocks_segment(self, stage_tree: Any, shared: Any, boundary: Any,
+                       s_idx, lo: int, hi: int) -> tuple[Any, jax.Array]:
+        """Units ``[lo, hi)`` of one stage: boundary -> (boundary, aux).
+
+        ``lo``/``hi`` are STATIC unit indices (the stash schedule is
+        trace-time); chaining segments over a partition of
+        ``[0, num_units)`` with the aux contributions summed must equal
+        ``blocks`` — that contract is what lets the executor's backward
+        replay only the un-stashed spans.
+        """
+        raise NotImplementedError
+
     def blocks(self, stage_tree: Any, shared: Any, boundary: Any,
                s_idx) -> tuple[Any, jax.Array]:
-        """One stage's compute: boundary -> (boundary, aux loss scalar)."""
-        raise NotImplementedError
+        """One stage's full compute: boundary -> (boundary, aux loss)."""
+        return self.blocks_segment(stage_tree, shared, boundary, s_idx,
+                                   0, self.num_units())
+
+    def num_units(self) -> int:
+        """Stash-segmentable scan units per rank (the widest stage's count
+        — SPMD uniformity; narrower stages mask their padded tail).
+
+        Default covers the single-stack families (dense/vlm/moe/xlstm);
+        zamba (group slots) and whisper (enc + dec halves) override.
+        """
+        assert len(self._counts) == 1, "multi-stack family must override"
+        (per,) = self._counts.values()
+        return max(per)
+
+    def stash_spec(self, mb: dict) -> Any:
+        """ShapeDtype pytree of ONE stashed inter-unit carry.
+
+        For every current family the scan carry IS the boundary
+        activation, so the stash ring reuses ``boundary_spec``; a family
+        whose units carry extra state would widen this (and
+        ``blocks_segment`` would thread it).
+        """
+        return self.boundary_spec(mb)
 
     def head_loss(self, shared: Any, boundary: Any, mb: dict) -> jax.Array:
         """Last-stage loss from the final boundary."""
@@ -237,7 +280,12 @@ class StageAdapter:
         params["stages"] = stages
         return params
 
-    # ---- scan helper -----------------------------------------------------
+    # ---- scan helpers ----------------------------------------------------
+    @staticmethod
+    def _slice_units(tree: Any, lo: int, hi: int) -> Any:
+        """Static unit-span slice of a stage-local stack (leading dim)."""
+        return jax.tree_util.tree_map(lambda a: a[lo:hi], tree)
+
     def _masked_scan(self, body, carry, xs, flags):
         """Scan ``body`` over stacked units; dead (padded) units pass the
         carry through unchanged. ``flags=None`` is the uniform fast path
@@ -287,15 +335,17 @@ class DenseAdapter(StageAdapter):
         from repro.models import transformer as T
         return T.embed_tokens(shared, mb["tokens"], self.cfg)
 
-    def blocks(self, stage_tree, shared, x, s_idx):
+    def blocks_segment(self, stage_tree, shared, x, s_idx, lo, hi):
         from repro.models import transformer as T
         cfg = self.cfg
         pos = _positions(x)
 
         def body(h, bp):
             return T._block_apply(bp, h, cfg, pos, cfg.sliding_window)
-        y = self._masked_scan(body, x, stage_tree["blocks"],
-                              self.stage_flags("blocks", s_idx))
+        flags = self.stage_flags("blocks", s_idx)
+        y = self._masked_scan(body, x,
+                              self._slice_units(stage_tree["blocks"], lo, hi),
+                              None if flags is None else flags[lo:hi])
         return y, jnp.zeros((), F32)
 
     def head_loss(self, shared, y, mb):
@@ -353,7 +403,7 @@ class MoEAdapter(StageAdapter):
     def embed(self, shared, mb):
         return jnp.take(shared["embed"]["tok"], mb["tokens"], axis=0)
 
-    def blocks(self, stage_tree, shared, x, s_idx):
+    def blocks_segment(self, stage_tree, shared, x, s_idx, lo, hi):
         from repro.models import moe as M
         cfg = self.cfg
         pos = _positions(x)
@@ -362,10 +412,13 @@ class MoEAdapter(StageAdapter):
             h, aux = carry
             h, a = M._block_apply(bp, h, cfg, pos, cfg.sliding_window)
             return h, aux + a
+        flags = self.stage_flags("blocks", s_idx)
         y, aux = self._masked_scan(body, (x, jnp.zeros((), F32)),
-                                   stage_tree["blocks"],
-                                   self.stage_flags("blocks", s_idx))
+                                   self._slice_units(stage_tree["blocks"],
+                                                     lo, hi),
+                                   None if flags is None else flags[lo:hi])
         # same normalization as the flat forward: weight * mean-over-layers
+        # (applied per segment — contributions stay additive across spans)
         aux = aux * cfg.router_aux_weight / max(1, cfg.num_layers)
         return y, aux
 
@@ -403,15 +456,17 @@ class XLSTMAdapter(StageAdapter):
     def embed(self, shared, mb):
         return jnp.take(shared["embed"]["tok"], mb["tokens"], axis=0)
 
-    def blocks(self, stage_tree, shared, x, s_idx):
+    def blocks_segment(self, stage_tree, shared, x, s_idx, lo, hi):
         from repro.models import ssm
         cfg = self.cfg
 
         def body(h, pair):
             h = ssm.mlstm_apply(pair["mlstm"], h, cfg)
             return ssm.slstm_apply(pair["slstm"], h, cfg)
-        y = self._masked_scan(body, x, stage_tree["pairs"],
-                              self.stage_flags("pairs", s_idx))
+        flags = self.stage_flags("pairs", s_idx)
+        y = self._masked_scan(body, x,
+                              self._slice_units(stage_tree["pairs"], lo, hi),
+                              None if flags is None else flags[lo:hi])
         return y, jnp.zeros((), F32)
 
     def head_loss(self, shared, y, mb):
@@ -481,14 +536,20 @@ class ZambaAdapter(StageAdapter):
     def embed(self, shared, mb):
         return jnp.take(shared["embed"]["tok"], mb["tokens"], axis=0)
 
-    def blocks(self, stage_tree, shared, x, s_idx):
+    def num_units(self):
+        # The stash/segment unit is the GROUP SLOT (one mamba run + its
+        # shared-attention site), not the mamba layer: a finer cut would
+        # split a run from the attention application it masks into.
+        return self._group_idx.shape[1]
+
+    def blocks_segment(self, stage_tree, shared, x, s_idx, lo, hi):
         from repro.models import ssm
         from repro.models.hybrid import _shared_apply
         cfg = self.cfg
         pos = _positions(x)
-        idx = jnp.take(jnp.asarray(self._group_idx), s_idx, axis=0)
-        layer_ok = jnp.take(jnp.asarray(self._layer_ok), s_idx, axis=0)
-        group_ok = jnp.take(jnp.asarray(self._group_ok), s_idx, axis=0)
+        idx = jnp.take(jnp.asarray(self._group_idx), s_idx, axis=0)[lo:hi]
+        layer_ok = jnp.take(jnp.asarray(self._layer_ok), s_idx, axis=0)[lo:hi]
+        group_ok = jnp.take(jnp.asarray(self._group_ok), s_idx, axis=0)[lo:hi]
         mamba = stage_tree["mamba"]
         sp = shared["shared"]
 
@@ -572,10 +633,19 @@ class EncDecAdapter(StageAdapter):
         x = x + lax.dynamic_slice_in_dim(shared["dec_pos"], 0, t, 0)
         return {"mem": mem, "x": x}
 
-    def blocks(self, stage_tree, shared, bnd, s_idx):
+    def num_units(self):
+        # Units enumerate the enc half first, then the dec half — the same
+        # order a rank's compute runs them; the enc output norm rides with
+        # the LAST enc unit (applied exactly once, by whichever segment
+        # finishes the encoder half).
+        return (max(self._counts["enc_blocks"])
+                + max(self._counts["dec_blocks"]))
+
+    def blocks_segment(self, stage_tree, shared, bnd, s_idx, lo, hi):
         from repro.models import encdec as E
         from repro.models import layers as L
         cfg = self.cfg
+        le = max(self._counts["enc_blocks"])
         mem, x = bnd["mem"], bnd["x"]
         enc_pos = _positions(mem)
         dec_pos = _positions(x)
@@ -593,11 +663,19 @@ class EncDecAdapter(StageAdapter):
         # stage_flags is None only at S == 1 (every unit live on the one
         # stage — the unmasked fast path is correct); for S >= 2 the
         # enc/dec counts always contain a 0, so masks always exist.
-        mem = self._masked_scan(enc_body, mem, stage_tree["enc_blocks"],
-                                self.stage_flags("enc_blocks", s_idx))
-        # encoder output norm applies exactly once, on the last enc stage
-        last_enc = s_idx == self._num_enc_stages - 1
-        mem = jnp.where(last_enc, E._ln(mem, shared, "enc_norm", cfg), mem)
+        elo, ehi = lo, min(hi, le)
+        if ehi > elo:
+            flags = self.stage_flags("enc_blocks", s_idx)
+            mem = self._masked_scan(
+                enc_body, mem,
+                self._slice_units(stage_tree["enc_blocks"], elo, ehi),
+                None if flags is None else flags[elo:ehi])
+        # encoder output norm applies exactly once, on the last enc stage,
+        # by the segment that runs the final enc unit
+        if le and lo <= le - 1 < hi:
+            last_enc = s_idx == self._num_enc_stages - 1
+            mem = jnp.where(last_enc, E._ln(mem, shared, "enc_norm", cfg),
+                            mem)
 
         def dec_body(h, bp):
             a = E._ln(h, bp, "attn_norm", cfg)
@@ -617,8 +695,13 @@ class EncDecAdapter(StageAdapter):
             m = E._ln(h, bp, "mlp_norm", cfg)
             return h + L.mlp_apply(bp["mlp"], m, act="gelu")
 
-        x = self._masked_scan(dec_body, x, stage_tree["dec_blocks"],
-                              self.stage_flags("dec_blocks", s_idx))
+        dlo, dhi = max(lo - le, 0), hi - le
+        if dhi > dlo:
+            flags = self.stage_flags("dec_blocks", s_idx)
+            x = self._masked_scan(
+                dec_body, x,
+                self._slice_units(stage_tree["dec_blocks"], dlo, dhi),
+                None if flags is None else flags[dlo:dhi])
         return {"mem": mem, "x": x}, jnp.zeros((), F32)
 
     def head_loss(self, shared, bnd, mb):

@@ -16,9 +16,14 @@ whisper enc/dec blocks), so partitioning is a relayout, not a re-trace:
     zeros).
 
 WHICH units land on which stage, what the boundary activation looks like,
-and how a stage computes are family decisions owned by the
+how a stage computes, and the stash granularity the executor's selective
+activation stashing cuts at (``num_units`` / ``stash_spec`` /
+``blocks_segment`` — see the stash contract in ``adapters.py``) are
+family decisions owned by the
 :class:`~repro.pipeline.adapters.StageAdapter` registry —
-``make_partition`` returns the family's adapter instance. Ownership
+``make_partition`` returns the family's adapter instance (``remat``
+False runs the stage scans un-remat'ed, which the stashed policies use
+to bound residual spans by the segment instead). Ownership
 follows the same ``_layer_stage`` mapping the compressor uses
 (``core/compressor.py``): ``['stages'][s]`` leaves go to their stage
 index, embeddings pin to stage 0, head/final-norm to stage S-1 — so the

@@ -15,10 +15,29 @@ auxiliary loss (the MoE router balance term) all come from the family's
 tick tables and the collective choreography.
 
 The backward is a hand-rolled VJP (not ``jax.grad`` of the whole chain):
-each backward tick replays its stage's forward from the SAVED boundary
-input (stage-granular rematerialization, Megatron's standard recompute)
-and pulls cotangents through ``jax.vjp``. That makes the *schedule* an
-explicit tick table rather than whatever AD reversal produces:
+each backward tick re-derives its stage's forward from SAVED activations
+and pulls cotangents through ``jax.vjp``. HOW MUCH is saved is the
+``stash_policy`` axis (the executor's memory/compute knob):
+
+  replay   only the stage's boundary input survives the forward tick
+           (stage-granular rematerialization, Megatron's standard
+           recompute) — the backward's VJP replays the WHOLE stage, with
+           the adapter's per-unit remat inside when ``cfg.remat``.
+  full     every inter-unit carry is stashed into a second activation
+           ring; the backward runs one VJP per unit from its stashed
+           input — residual live range is one unit, no remat recompute.
+  every_k  stash every ``stash_every``-th unit boundary; segment VJPs
+           replay at most k units from the nearest stash (segments run
+           un-remat'ed — the stash bounds the residual span instead).
+
+Every policy's VJP re-runs the un-stashed segment forwards exactly once
+(one stage-forward total): stashing bounds the residual/recompute SPAN
+and removes replay's per-unit remat recompute, it does not change the
+replay SUM. ``peak_activation_bytes`` is the byte-accurate ledger of what
+each policy keeps live per stage; ``policy_tick_cost`` is the matching
+backward-tick cost model the calibrated ``simulate_schedule`` (and with
+it the Eq. 4 slack the DAC consumes) runs on. That makes the *schedule*
+an explicit tick table rather than whatever AD reversal produces:
 
   tick grids (F = forward of microbatch j at stage s, B = its backward)
 
@@ -57,18 +76,25 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 __all__ = [
     "SCHEDULES",
+    "STASH_POLICIES",
     "slot_table",
     "tick_count",
     "ring_slots",
     "bubble_fraction",
     "peak_inflight",
     "sync_slack_ticks",
+    "stash_points",
+    "stash_segments",
+    "peak_activation_bytes",
+    "policy_tick_cost",
+    "boundary_nbytes",
     "simulate_schedule",
     "make_pipeline_train_step",
     "pipeline_state_shardings",
 ]
 
 SCHEDULES = ("gpipe", "1f1b")
+STASH_POLICIES = ("replay", "full", "every_k")
 
 tmap = jax.tree_util.tree_map
 
@@ -152,13 +178,93 @@ def sync_slack_ticks(name: str, S: int, M: int) -> list[int]:
     return [last_b[0] - last_b[s] for s in range(S)]
 
 
+def stash_points(policy: str, n_units: int, stash_every: int = 2
+                 ) -> tuple[int, ...]:
+    """Interior unit boundaries the forward tick stashes (static).
+
+    ``replay`` stashes nothing (the backward re-derives the stage from its
+    boundary input); ``full`` stashes every inter-unit carry; ``every_k``
+    stashes multiples of ``stash_every`` strictly inside ``(0, n_units)``.
+    """
+    if policy == "replay":
+        return ()
+    if policy == "full":
+        return tuple(range(1, n_units))
+    if policy == "every_k":
+        return tuple(range(max(1, stash_every), n_units,
+                           max(1, stash_every)))
+    raise ValueError(
+        f"unknown stash policy {policy!r} (want one of {STASH_POLICIES})")
+
+
+def stash_segments(policy: str, n_units: int, stash_every: int = 2
+                   ) -> tuple[tuple[int, int], ...]:
+    """Consecutive unit spans between stash points — what the backward
+    replays per VJP. ``replay`` degenerates to one whole-stage span."""
+    bounds = (0,) + stash_points(policy, n_units, stash_every) + (n_units,)
+    return tuple(zip(bounds[:-1], bounds[1:]))
+
+
+def peak_activation_bytes(name: str, S: int, M: int, policy: str, *,
+                          boundary_bytes: int, n_units: int,
+                          stash_every: int = 2) -> list[int]:
+    """Per-stage peak bytes of the saved-activation rings — the ledger.
+
+    Tick-table derived: each F tick saves one boundary-ring entry plus
+    ``len(stash_points)`` stash-ring entries for its microbatch and the
+    matching B tick frees them, so the peak live entry count per stage is
+    exactly ``peak_inflight``. Every entry is one boundary-spec'd pytree
+    (``boundary_bytes``; the stashed inter-unit carry IS the boundary for
+    every current family — see ``StageAdapter.stash_spec``), hence
+    ``full >= every_k >= replay`` per stage, always.
+    """
+    n_stash = len(stash_points(policy, n_units, stash_every))
+    per_mb = boundary_bytes * (1 + n_stash)
+    return [p * per_mb for p in peak_inflight(name, S, M)]
+
+
+def policy_tick_cost(t_f: float, t_b: float, policy: str,
+                     remat: bool = False) -> float:
+    """Backward-tick cost model per stash policy (feeds the calibrated
+    ``simulate_schedule`` and the Eq. 4 slack the DAC consumes).
+
+    Every policy's hand-rolled VJP re-runs the un-stashed segment
+    forwards once — one stage-forward (``t_f``) on top of the pure
+    backward ``t_b`` — because stashing bounds the recompute SPAN, not
+    the replay SUM. ``replay`` with per-unit remat inside the stage pays
+    that forward a second time (the scan bodies recompute under
+    ``jax.checkpoint``); the stashed policies run their segments
+    un-remat'ed, so they never do.
+    """
+    if policy not in STASH_POLICIES:
+        raise ValueError(
+            f"unknown stash policy {policy!r} (want one of {STASH_POLICIES})")
+    replay_cost = t_f * (2.0 if (policy == "replay" and remat) else 1.0)
+    return t_b + replay_cost
+
+
+def boundary_nbytes(part, mb: dict) -> int:
+    """Bytes of one boundary-activation pytree for one microbatch.
+
+    ``mb`` maps batch keys to per-microbatch ShapeDtypeStructs (or
+    arrays); ``part`` is the family's stage adapter.
+    """
+    import math
+    spec = part.boundary_spec(mb)
+    return sum(math.prod(l.shape) * jnp.dtype(l.dtype).itemsize
+               for l in jax.tree_util.tree_leaves(spec))
+
+
 def simulate_schedule(name: str, S: int, M: int,
                       t_f: float = 1.0, t_b: float = 1.0) -> dict:
     """Dependency-driven timing of a schedule with measured tick costs.
 
     The unit-tick analytics above assume B-cost == F-cost; real backwards
     run ~2x the forward (plus the stage-replay recompute here), which
-    changes both the bubble fraction and the per-stage Eq. 4 slack. This
+    changes both the bubble fraction and the per-stage Eq. 4 slack.
+    ``t_b`` is per STASH POLICY: pass ``policy_tick_cost(t_f, t_b_pure,
+    policy, remat)`` so the slack the DAC consumes reflects what the
+    backward tick actually replays under that policy. This
     replays the slot table as an event simulation: each F(s, j) waits for
     F(s-1, j) and the rank's previous op; each B(s, j) waits for B(s+1, j)
     (or its own F on the last stage). Returns::
@@ -229,9 +335,19 @@ def make_pipeline_train_step(model: Model, mesh, cfg):
     if pipe_size(mesh) != S:
         raise ValueError(f"mesh pipe axis has size {pipe_size(mesh)}, "
                          f"step wants num_stages={S}")
+    stash = getattr(cfg, "stash_policy", "replay")
+    if stash not in STASH_POLICIES:
+        raise ValueError(f"unknown stash policy {stash!r} "
+                         f"(want one of {STASH_POLICIES})")
     axes_dp = dp_axes(mesh)
     manual = ("pipe",) + tuple(axes_dp)
-    part = make_partition(model, S, remat=cfg.remat)
+    # Stashed policies bound the backward's residual span by the segment
+    # width, so per-unit remat inside the stage would only re-add the
+    # recompute the stash exists to remove — replay keeps cfg.remat.
+    part = make_partition(model, S, remat=cfg.remat and stash == "replay")
+    segs = stash_segments(stash, part.num_units(),
+                          getattr(cfg, "stash_every", 2))
+    n_stash = len(segs) - 1
     adam_cfg = cfg.adam
 
     # Static stage-plan schedule from the flat plan + the local leaf shapes.
@@ -273,24 +389,48 @@ def make_pipeline_train_step(model: Model, mesh, cfg):
              for k, v in mb.items()})
         zeros_bnd = lambda: tmap(lambda s: jnp.zeros(s.shape, s.dtype), bspec)
 
+        def seg_fwd(sp, sh, xin, mbj, i):
+            # One stash segment's compute, SPMD-uniform across ranks: the
+            # first segment owns embed (+ the is_first boundary select),
+            # the last owns the head CE (masked by is_last), and every
+            # segment contributes its own aux loss (MoE router balance) —
+            # the pipe psum of loss_acc totals both. The masked paths get
+            # zero cotangents in the backward, so their params see zero
+            # gradient without explicit bookkeeping.
+            lo, hi = segs[i]
+            if i == 0:
+                x0 = part.embed(sh, mbj)
+                xin = tmap(lambda a, b: jnp.where(is_first, a, b), x0, xin)
+            y, aux = part.blocks_segment(sp, sh, xin, s_idx, lo, hi)
+            contrib = aux
+            if i == len(segs) - 1:
+                head = part.head_loss(sh, y, mbj)
+                contrib = contrib + jnp.where(is_last, head, 0.0)
+            return y, contrib
+
         def rank_fwd(sp, sh, mbj, x_recv):
-            # Every rank runs embed + blocks + head; the first/last masks
-            # select which parts are live — SPMD uniformity. The masked
-            # paths get zero cotangents in the backward, so their params
-            # see zero gradient without explicit bookkeeping. ``blocks``
-            # may add a per-stage auxiliary loss (MoE router balance) —
-            # it lands in local_loss on EVERY rank, the head CE only on
-            # the last, and the pipe psum of loss_acc totals both.
-            x0 = part.embed(sh, mbj)
-            x_in = tmap(lambda a, b: jnp.where(is_first, a, b), x0, x_recv)
-            y, aux = part.blocks(sp, sh, x_in, s_idx)
-            head = part.head_loss(sh, y, mbj)
-            local_loss = jnp.where(is_last, head, 0.0) + aux
-            return y, local_loss
+            # Full forward chain; with stash_policy="replay" (one segment)
+            # this is byte-identical to the pre-stash executor. The
+            # interior segment inputs are what the stash ring saves.
+            y = x_recv
+            local_loss = jnp.zeros((), jnp.float32)
+            interior = []
+            for i in range(len(segs)):
+                if i:
+                    interior.append(y)
+                y, contrib = seg_fwd(sp, sh, y, mbj, i)
+                local_loss = local_loss + contrib
+            return y, local_loss, interior
 
         fwd_recv = zeros_bnd()
         bwd_recv = zeros_bnd()
         ring = tmap(lambda s: jnp.zeros((R,) + s.shape, s.dtype), bspec)
+        sspec = part.stash_spec(
+            {k: jax.ShapeDtypeStruct(v.shape[1:], v.dtype)
+             for k, v in mb.items()})
+        stash_ring = (tmap(lambda s: jnp.zeros((R, n_stash) + s.shape,
+                                               s.dtype), sspec)
+                      if n_stash else None)
         loss_acc = jnp.zeros((), jnp.float32)
         f32z = lambda t: tmap(lambda a: jnp.zeros(a.shape, jnp.float32), t)
         gacc_s = f32z(stage_p)
@@ -301,13 +441,17 @@ def make_pipeline_train_step(model: Model, mesh, cfg):
                 off = t - s_idx
                 valid_f = (off >= 0) & (off < M)
                 jf = jnp.clip(off, 0, M - 1)
-                y, loss_mb = rank_fwd(stage_p, shared_p, take_mb(jf), fwd_recv)
+                y, loss_mb, interior = rank_fwd(stage_p, shared_p,
+                                                take_mb(jf), fwd_recv)
                 loss_acc = loss_acc + jnp.where(valid_f, loss_mb, 0.0)
-                ring = tmap(
-                    lambda r, v: jnp.where(
-                        valid_f,
-                        lax.dynamic_update_index_in_dim(r, v, jf % R, 0), r),
-                    ring, fwd_recv)
+                upd = lambda r, v: jnp.where(
+                    valid_f,
+                    lax.dynamic_update_index_in_dim(r, v, jf % R, 0), r)
+                ring = tmap(upd, ring, fwd_recv)
+                if n_stash:
+                    stash_ring = tmap(
+                        upd, stash_ring,
+                        tmap(lambda *xs: jnp.stack(xs), *interior))
                 fwd_recv = tmap(lambda a: lax.ppermute(a, "pipe", fwd_perm), y)
             if t >= fbt:
                 # same arithmetic the slot_table analytics use (on traced s)
@@ -316,26 +460,37 @@ def make_pipeline_train_step(model: Model, mesh, cfg):
                 jb = jnp.clip(offb, 0, M - 1)
                 mbj = take_mb(jb)
                 x_saved = tmap(lambda r: jnp.take(r, jb % R, axis=0), ring)
+                stash_saved = (tmap(lambda r: jnp.take(r, jb % R, axis=0),
+                                    stash_ring) if n_stash else None)
 
-                def replay(sp, sh, xr, mbj=mbj):
-                    return rank_fwd(sp, sh, mbj, xr)
-
-                _, vjp = jax.vjp(replay, stage_p, shared_p, x_saved)
                 # vjp is linear in the cotangents: masking them masks the
                 # whole backward (param grads AND the outgoing boundary
                 # cotangent) — off-schedule ranks contribute exact zeros.
-                # local_loss internally masks the head by is_last, so the
+                # seg_fwd internally masks the head by is_last, so the
                 # uniform inv_M loss cotangent is correct on every rank
                 # (it also pulls the per-stage aux-loss gradients).
-                ct_y = tmap(
+                # Segments chain back to front: each VJP re-runs only its
+                # own span's forward from the stashed input (replay's
+                # single segment re-runs the whole stage) and hands its
+                # input cotangent to the upstream segment.
+                ct_carry = tmap(
                     lambda a: jnp.where(valid_b & ~is_last, a,
                                         jnp.zeros_like(a)), bwd_recv)
                 ct_loss = jnp.where(valid_b, inv_M, 0.0)
-                gs, gsh, gx = vjp((ct_y, ct_loss))
                 add32 = lambda a, g: a + g.astype(jnp.float32)
-                gacc_s = tmap(add32, gacc_s, gs)
-                gacc_sh = tmap(add32, gacc_sh, gsh)
-                bwd_recv = tmap(lambda a: lax.ppermute(a, "pipe", bwd_perm), gx)
+                for i in range(len(segs) - 1, -1, -1):
+                    xin = (x_saved if i == 0 else
+                           tmap(lambda a, i=i: a[i - 1], stash_saved))
+
+                    def seg(sp, sh, xr, mbj=mbj, i=i):
+                        return seg_fwd(sp, sh, xr, mbj, i)
+
+                    _, vjp = jax.vjp(seg, stage_p, shared_p, xin)
+                    gs, gsh, ct_carry = vjp((ct_carry, ct_loss))
+                    gacc_s = tmap(add32, gacc_s, gs)
+                    gacc_sh = tmap(add32, gacc_sh, gsh)
+                bwd_recv = tmap(lambda a: lax.ppermute(a, "pipe", bwd_perm),
+                                ct_carry)
 
         pmean_dp = make_dp_pmean(axes_dp)
         psum_pipe = lambda x: lax.psum(x, "pipe")
@@ -355,7 +510,19 @@ def make_pipeline_train_step(model: Model, mesh, cfg):
 
         if cfg.measure_entropy:
             from repro.core.entropy import entropy_from_moments, sample_moments
-            n1, a1, a2 = sample_moments(synced_s, cfg.gds)
+            # Ragged stage plans zero-pad each rank's stacks to the widest
+            # stage; pooling the PADDED leaves would count the exact-zero
+            # pad slots in n and bias sigma (and the Lemma-2 entropy) low.
+            # Each top-level key of the stage tree is one adapter stack —
+            # its live-unit mask drops pad samples so the pipelined pooled
+            # moments match the flat step's exactly.
+            z = jnp.zeros((), jnp.float32)
+            n1 = a1 = a2 = z
+            for key in sorted(synced_s):
+                kn, k1, k2 = sample_moments(
+                    synced_s[key], cfg.gds,
+                    lead_mask=part.stage_flags(key, s_idx))
+                n1, a1, a2 = n1 + kn, a1 + k1, a2 + k2
             n2, c1, c2 = sample_moments(synced_sh, cfg.gds)
             w = jnp.where(is_first, 1.0, 0.0)  # count shared leaves once
             entropy = entropy_from_moments(

@@ -53,6 +53,11 @@ class TrainStepConfig:
     num_stages: int = 1
     schedule: str = "1f1b"         # gpipe | 1f1b
     num_microbatches: int = 0      # 0 -> num_stages
+    # Selective activation stashing (pipeline executor only; the flat step
+    # has no microbatch rings): replay | full | every_k — how much of each
+    # stage's forward survives to its backward tick vs being re-derived.
+    stash_policy: str = "replay"
+    stash_every: int = 2           # k for stash_policy="every_k"
     adam: adam.AdamConfig = dataclasses.field(default_factory=adam.AdamConfig)
 
 

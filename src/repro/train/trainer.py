@@ -63,6 +63,12 @@ class TrainerConfig:
     # EDGC config asks for num_stages > 1).
     schedule: str = "1f1b"         # gpipe | 1f1b
     num_microbatches: int = 0      # 0 -> num_stages
+    # Selective activation stashing for the pipelined executor:
+    # replay (re-derive each stage forward in its backward, today's
+    # memory floor) | full (stash every inter-unit carry) | every_k
+    # (stash every stash_every-th unit boundary).
+    stash_policy: str = "replay"
+    stash_every: int = 2
     adam: adam.AdamConfig = dataclasses.field(default_factory=adam.AdamConfig)
 
 
@@ -73,6 +79,12 @@ class Trainer:
         self.mesh = mesh
         self.edgc_cfg = edgc_cfg
         self.tcfg = tcfg
+        if edgc_cfg.policy == "edgc" and not tcfg.measure_entropy:
+            # The DAC window would silently fill with the step's 0.0
+            # placeholder entropies and drive ranks off a constant — an
+            # unconditionally corrupt control loop, so refuse up front.
+            raise ValueError("policy='edgc' requires measure_entropy=True: "
+                             "the DAC consumes the GDS entropy readings")
 
         key = jax.random.PRNGKey(seed)
         params = model.init(key)
@@ -123,6 +135,7 @@ class Trainer:
         self.history: list[dict] = []
         self.bytes_synced = 0           # exact DP wire bytes so far
         self.bytes_full = 0             # what no-compression would have moved
+        self._last_entropy = 0.0        # most recent alpha-gated reading
 
     def _init_pipelined_state(self, params, comp_key, acfg) -> None:
         from repro.pipeline import partition as ppart
@@ -160,20 +173,27 @@ class Trainer:
             self._sshard = state_shardings(self.state, self.model, self.mesh)
         self.state = jax.device_put(self.state, self._sshard)
 
-    def _get_step(self):
+    def _get_step(self, measure_entropy: bool | None = None):
+        """Compiled step for the current plan; ``measure_entropy`` picks
+        the entropy-on or entropy-off variant (the GDS ISR/alpha gate —
+        off-steps must lower no moment work at all, §IV-B)."""
+        if measure_entropy is None:
+            measure_entropy = self.tcfg.measure_entropy
         plan = self.controller.plan
-        key = (plan, self.tcfg.measure_entropy)
+        key = (plan, measure_entropy)
         if key not in self._step_cache:
             scfg = TrainStepConfig(
                 mode="dp_tp", policy_plan=plan,
                 gds=self.edgc_cfg.gds,
-                measure_entropy=self.tcfg.measure_entropy,
+                measure_entropy=measure_entropy,
                 use_kernels=self.tcfg.use_kernels,
                 bucketed=None if self.pipelined else self._bucketed,
                 remat=self.tcfg.remat,
                 num_stages=self.edgc_cfg.num_stages if self.pipelined else 1,
                 schedule=self.tcfg.schedule,
                 num_microbatches=self.tcfg.num_microbatches,
+                stash_policy=self.tcfg.stash_policy,
+                stash_every=self.tcfg.stash_every,
                 adam=self.tcfg.adam,
             )
             raw = make_train_step(self.model, self.mesh, scfg)
@@ -250,14 +270,19 @@ class Trainer:
         for step_idx in range(start, end):
             batch = next(batches)
             batch = {k: jnp.asarray(v) for k, v in batch.items()}
-            step_fn = self._get_step()
+            # ISR (alpha) gate: off-iterations dispatch the entropy-off
+            # step variant, so the skipped measurements never lower any
+            # device work (§IV-B's "fraction of iterations" sampling).
+            measure = tcfg.measure_entropy and ctrl.wants_entropy(step_idx)
+            step_fn = self._get_step(measure)
             self.state, mets = step_fn(self.state, batch)
 
             self.bytes_synced += comp_bytes
             self.bytes_full += full_bytes
 
-            if ctrl.wants_entropy(step_idx):
-                ctrl.on_entropy(step_idx, float(mets["entropy"]))
+            if measure:
+                self._last_entropy = float(mets["entropy"])
+                ctrl.on_entropy(step_idx, self._last_entropy)
 
             if (step_idx + 1) % window == 0:
                 if ctrl.on_window_end(step_idx):
@@ -269,7 +294,10 @@ class Trainer:
                 rec = {
                     "step": step_idx,
                     "loss": float(mets["loss"]),
-                    "entropy": float(mets["entropy"]),
+                    # zero-order hold: off-gate steps report the most
+                    # recent alpha-gated reading, not the step's 0.0
+                    # placeholder (the sampled trajectory stays usable)
+                    "entropy": self._last_entropy,
                     "grad_norm": float(mets["grad_norm"]),
                     "lr": float(mets["lr"]),
                     "bytes_synced": self.bytes_synced,
@@ -317,6 +345,10 @@ class Trainer:
         self.bytes_synced = int(extra.get("bytes_synced", 0))
         self.bytes_full = int(extra.get("bytes_full", 0))
         self._global_step = int(extra.get("step", 0))
+        # re-seed the zero-order hold so post-resume off-gate history
+        # records carry the last real reading, not the 0.0 init
+        hist = self.controller.entropy_history
+        self._last_entropy = float(hist[-1][1]) if hist else 0.0
         restored, _ = ckpt_mod.restore(path, jax.device_get(self.state))
         self.state = restored
         self._shard_state()

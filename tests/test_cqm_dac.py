@@ -97,6 +97,67 @@ def test_dac_update_moves_slowly():
     dac.maybe_end_warmup(-3.4, step=250)
     r_before = dac.r_stage1
     ranks = dac.update(-5.0)               # massive drop
-    assert r_before - dac.r_stage1 <= dac.cfg.adjust_limit + dac.cfg.quantize_to
+    # quantization happens INSIDE the clamp: the applied move respects
+    # Constraint 2 exactly (no +quantize_to/2 slop)
+    assert r_before - dac.r_stage1 <= dac.cfg.adjust_limit
     assert all(dac.r_min <= r <= dac.r_max for r in ranks)
     assert len(ranks) == 4
+
+
+def test_dac_quantized_move_respects_constraint2():
+    """Regression (Constraint 2): clamp-then-round could move the applied
+    stage-1 rank by adjust_limit + quantize_to/2 in one window — e.g.
+    prev=10, target 20, s=3, q=2: clamp -> 13, round -> 14, a move of 4.
+    Snapping inside the clamp yields 12 (move 2 <= 3). Every stage's
+    applied rank obeys the same bound across a window walk."""
+    cqm = CQM(m=256, n=1024)
+    comm = _comm()
+    dac = DAC(cqm=cqm, comm=comm,
+              cfg=DACConfig(window=100, adjust_limit=3, quantize_to=2),
+              r_min=8, r_max=64, num_stages=4,
+              t_micro_back=comm.t_com(4), total_iterations=1000)
+    assert dac._snap_limited(13, 10) == 12          # the old path gave 14
+    assert abs(dac._snap_limited(13, 10) - 10) <= 3
+
+    # degenerate grid (quantize_to > 2*adjust_limit): no multiple of q
+    # inside the +-s window -> hold at prev rather than stepping q past it
+    dac_q = DAC(cqm=CQM(m=256, n=1024), comm=comm,
+                cfg=DACConfig(window=100, adjust_limit=1, quantize_to=4),
+                r_min=8, r_max=64, num_stages=4,
+                t_micro_back=comm.t_com(4), total_iterations=1000)
+    assert dac_q._snap_limited(15, 14) == 14         # was 12 (move of 2 > 1)
+    assert dac_q._snap_limited(13, 14) == 14
+
+    dac.maybe_end_warmup(-3.0, step=150)            # anchors at r_max
+    dac.maybe_end_warmup(-3.4, step=250)
+    assert dac.warmed_up
+    prev = [dac.r_max] * 4                           # warm-up exit vector
+    # a window sequence with violent entropy swings: every applied move,
+    # for every stage, stays within +-adjust_limit and the Algorithm-2
+    # monotonicity (non-decreasing over stages) survives the clamping
+    for h in (-5.0, -2.0, -6.0, -3.0, -3.0, -7.0):
+        ranks = dac.update(h)
+        assert len(ranks) == 4
+        for i, (p, r) in enumerate(zip(prev, ranks)):
+            assert abs(r - p) <= dac.cfg.adjust_limit, (h, i, p, r)
+            assert dac.r_min <= r <= dac.r_max
+        assert all(b >= a for a, b in zip(ranks, ranks[1:])), ranks
+        assert ranks == dac.current_ranks()
+        prev = ranks
+
+
+def test_dac_old_quantization_overshoot_would_fail():
+    """The sequence the fix targets: prev=10, Theorem-3 target 20, s=5,
+    q=2 — the old clamp-then-round order produced 16 (round(15/2)*2), a
+    one-window move of adjust_limit + 1; snapping inside the clamp stays
+    within +-s."""
+    old = round(window_rank_adjust(10, 20, 8, 128, 5) / 2) * 2
+    assert abs(old - 10) == 6 == 5 + 1              # the former violation
+    cqm = CQM(m=256, n=1024)
+    comm = _comm()
+    dac = DAC(cqm=cqm, comm=comm,
+              cfg=DACConfig(window=100, adjust_limit=5, quantize_to=2),
+              r_min=8, r_max=128, num_stages=1,
+              t_micro_back=comm.t_com(4), total_iterations=1000)
+    new = dac._snap_limited(window_rank_adjust(10, 20, 8, 128, 5), 10)
+    assert abs(new - 10) <= 5 and new % 2 == 0

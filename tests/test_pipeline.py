@@ -232,6 +232,72 @@ def test_simulate_schedule_degenerates_and_weights():
     assert sim["makespan"] == (M + S - 1) * 3.0
 
 
+def test_stash_points_and_segments():
+    """Stash cuts are static interior unit boundaries; the segments tile
+    [0, n_units) for every policy."""
+    assert psched.stash_points("replay", 6) == ()
+    assert psched.stash_points("full", 6) == (1, 2, 3, 4, 5)
+    assert psched.stash_points("every_k", 6, 2) == (2, 4)
+    assert psched.stash_points("every_k", 7, 3) == (3, 6)
+    assert psched.stash_points("full", 1) == ()      # single unit: no cuts
+    with pytest.raises(ValueError, match="stash policy"):
+        psched.stash_points("nope", 4)
+    for pol, n, k in [("replay", 5, 2), ("full", 5, 2), ("every_k", 5, 2),
+                      ("every_k", 8, 3)]:
+        segs = psched.stash_segments(pol, n, k)
+        assert segs[0][0] == 0 and segs[-1][1] == n
+        assert all(a[1] == b[0] for a, b in zip(segs, segs[1:]))
+        assert all(hi > lo for lo, hi in segs)
+        assert len(segs) == len(psched.stash_points(pol, n, k)) + 1
+
+
+@pytest.mark.parametrize("name", psched.SCHEDULES)
+@pytest.mark.parametrize("S,M", [(2, 4), (4, 8), (4, 16)])
+def test_peak_activation_bytes_matches_tick_oracle(name, S, M):
+    """Acceptance: the activation-memory ledger equals an independent
+    tick-table walk — at each F the stage saves (1 + n_stash) boundary-
+    sized entries for its microbatch, each B frees them — and orders
+    full >= every_k >= replay per stage."""
+    n_units, bbytes, k = 4, 1000, 2
+    table = psched.slot_table(name, S, M)
+    by_pol = {}
+    for pol in psched.STASH_POLICIES:
+        per_entry = bbytes * (1 + len(psched.stash_points(pol, n_units, k)))
+        oracle = []
+        for s in range(S):
+            live = peak = 0
+            for acts in table[s]:
+                for kind, _ in acts:
+                    live += per_entry if kind == "F" else -per_entry
+                    peak = max(peak, live)
+            oracle.append(peak)
+        got = psched.peak_activation_bytes(name, S, M, pol,
+                                           boundary_bytes=bbytes,
+                                           n_units=n_units, stash_every=k)
+        assert got == oracle, (name, pol, got, oracle)
+        by_pol[pol] = got
+    for s in range(S):
+        assert (by_pol["full"][s] >= by_pol["every_k"][s]
+                >= by_pol["replay"][s])
+    assert max(by_pol["full"]) > max(by_pol["every_k"]) \
+        > max(by_pol["replay"])
+
+
+def test_policy_tick_cost_model():
+    """Every policy's VJP replays the un-stashed spans once (+t_f); only
+    replay-with-remat pays the per-unit recompute a second time."""
+    t_f, t_b = 1.0, 2.5
+    assert psched.policy_tick_cost(t_f, t_b, "replay") == t_b + t_f
+    assert psched.policy_tick_cost(t_f, t_b, "full") == t_b + t_f
+    assert psched.policy_tick_cost(t_f, t_b, "every_k") == t_b + t_f
+    assert psched.policy_tick_cost(t_f, t_b, "replay", remat=True) \
+        == t_b + 2 * t_f
+    # stashed segments run un-remat'ed: remat never changes their cost
+    assert psched.policy_tick_cost(t_f, t_b, "full", remat=True) == t_b + t_f
+    with pytest.raises(ValueError, match="stash policy"):
+        psched.policy_tick_cost(t_f, t_b, "nope")
+
+
 def test_schedule_analytics():
     S, M = 4, 16
     assert psched.bubble_fraction(S, M) == pytest.approx((S - 1) / (M + S - 1))
@@ -552,19 +618,62 @@ def test_resize_pipeline_comp_state_across_replan():
                 np.asarray(per1[lp].q[..., :keep]))
 
 
+# ------------------------------------- pipelined entropy vs flat (ragged)
+@pytest.mark.parametrize("fam", ["zamba", "whisper"])
+def test_pipelined_entropy_matches_flat_ragged(fam):
+    """Acceptance/regression: ragged stage plans zero-pad each rank's
+    stacks — pooling the PADDED leaves fed exact-zero pad slots into the
+    Lemma-2 moments (sigma under-estimated, entropy biased low). With the
+    live-unit masks the pipelined pooled entropy equals the flat
+    ``grads_entropy`` to 1e-6 (the strided sample positions coincide)."""
+    from repro.core.entropy import (
+        entropy_from_moments, grads_entropy, sample_moments,
+    )
+    cfg = FAMILY_CFGS[fam]
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    part = ppart.make_partition(model, cfg.num_stages)
+    rng = np.random.default_rng(0)
+    grads = jax.tree_util.tree_map(
+        lambda p: jnp.asarray(rng.standard_normal(p.shape), jnp.float32),
+        params)
+    g_stage, g_shared = part.partition_params(grads)
+    gds = GDSConfig(alpha=0.5, beta=0.25)
+
+    z = jnp.zeros((), jnp.float32)
+    n = s1 = s2 = z
+    n_old = o1 = o2 = z
+    for s in range(cfg.num_stages):
+        local = jax.tree_util.tree_map(lambda a: a[s], g_stage)
+        for key in sorted(local):
+            kn, k1, k2 = sample_moments(
+                local[key], gds,
+                lead_mask=part.stage_flags(key, jnp.int32(s)))
+            n, s1, s2 = n + kn, s1 + k1, s2 + k2
+        kn, k1, k2 = sample_moments(local, gds)     # the old padded pooling
+        n_old, o1, o2 = n_old + kn, o1 + k1, o2 + k2
+    n2, c1, c2 = sample_moments(g_shared, gds)
+    masked = float(entropy_from_moments(n + n2, s1 + c1, s2 + c2))
+    padded = float(entropy_from_moments(n_old + n2, o1 + c1, o2 + c2))
+    flat = float(grads_entropy(grads, gds))
+    assert abs(masked - flat) < 1e-6, (fam, masked, flat)
+    # the bias this guards against was real and material
+    assert padded < flat - 1e-3, (fam, padded, flat)
+
+
 # --------------------------------------------- end-to-end (single device)
 def _trainer(mesh, policy="fixed", num_stages=1, steps=6, schedule="1f1b",
-             num_micro=2, seed=0):
-    cfg = ModelConfig(name="pp1", family="dense", num_layers=2, d_model=128,
-                      num_heads=4, num_kv_heads=2, d_ff=256, vocab_size=512,
-                      num_stages=num_stages)
+             num_micro=2, seed=0, stash="replay", num_layers=2):
+    cfg = ModelConfig(name="pp1", family="dense", num_layers=num_layers,
+                      d_model=128, num_heads=4, num_kv_heads=2, d_ff=256,
+                      vocab_size=512, num_stages=num_stages)
     model = build_model(cfg)
     edgc = EDGCConfig(policy=policy, fixed_rank=8, num_stages=num_stages,
                       total_iterations=steps,
                       gds=GDSConfig(alpha=0.5, beta=0.25),
                       dac=DACConfig(window=3, adjust_limit=4))
     tcfg = TrainerConfig(total_steps=steps, log_every=1, schedule=schedule,
-                         num_microbatches=num_micro,
+                         num_microbatches=num_micro, stash_policy=stash,
                          adam=AdamConfig(lr=1e-3, warmup_steps=2,
                                          total_steps=steps))
     return Trainer(model, mesh, edgc, tcfg, seed=seed)
@@ -583,6 +692,87 @@ def test_pipelined_trainer_single_device_parity(schedule):
     lp, lf = [h["loss"] for h in hp], [h["loss"] for h in hf]
     assert max(abs(a - b) for a, b in zip(lp, lf)) < 5e-3, (lp, lf)
     assert tp.bytes_synced == tf_.bytes_synced
+
+
+@pytest.mark.parametrize("schedule", psched.SCHEDULES)
+@pytest.mark.parametrize("stash", ["full", "every_k"])
+def test_pipelined_trainer_stash_policies_parity(schedule, stash):
+    """Acceptance: the stashed executors (segmented forward + stash ring +
+    per-segment backward VJPs) hold the same loss parity replay does, for
+    both schedules. 4 layers -> 4 units at pipe=1: full stashes 3 carries,
+    every_k=2 one — both exercise a real second ring."""
+    data = lambda: SyntheticLM(512, 32, 4, seed=3).batches()
+    tp = _trainer(make_host_mesh(pipe=1, data=1, model=1), schedule=schedule,
+                  stash=stash, num_layers=4)
+    hp = tp.run(data())
+    tf_ = _trainer(make_host_mesh(data=1, model=1), num_layers=4)
+    hf = tf_.run(data())
+    lp, lf = [h["loss"] for h in hp], [h["loss"] for h in hf]
+    assert max(abs(a - b) for a, b in zip(lp, lf)) < 5e-3, \
+        (schedule, stash, lp, lf)
+    assert tp.bytes_synced == tf_.bytes_synced
+
+
+def test_entropy_off_variant_lowers_no_moment_collectives():
+    """Satellite: the GDS ISR (alpha) gate is real — the entropy-off step
+    variant traces EXACTLY the three Lemma-2 moment psums fewer (n, s1,
+    s2 over the pipe axis) and nothing else; dispatching on
+    wants_entropy means off-gate iterations run the cheaper program.
+    (Counted in the jaxpr: on a pipe=1 mesh the partitioned HLO elides
+    size-1 collectives entirely.)"""
+    from repro.train.step import TrainStepConfig, make_train_step
+    data = lambda: SyntheticLM(512, 32, 4, seed=3).batches()
+    tp = _trainer(make_host_mesh(pipe=1, data=1, model=1), num_layers=4)
+    batch = {k: jnp.asarray(v) for k, v in next(data()).items()}
+    state = jax.device_get(tp.state)
+    counts = {}
+    for measure in (True, False):
+        scfg = TrainStepConfig(
+            mode="dp_tp", policy_plan=tp.controller.plan,
+            gds=tp.edgc_cfg.gds, measure_entropy=measure,
+            num_stages=1, schedule="1f1b", num_microbatches=2,
+            adam=tp.tcfg.adam)
+        raw = make_train_step(tp.model, tp.mesh, scfg)
+        counts[measure] = str(jax.make_jaxpr(raw)(state, batch)).count("psum")
+    assert counts[False] < counts[True], counts
+    assert counts[True] - counts[False] == 3, counts
+
+
+def test_trainer_rejects_edgc_without_entropy():
+    """Satellite: policy='edgc' with measure_entropy=False used to fill
+    the DAC window with the step's 0.0 placeholder entropies — now an
+    up-front error."""
+    cfg = ModelConfig(name="pp1", family="dense", num_layers=2, d_model=128,
+                      num_heads=4, num_kv_heads=2, d_ff=256, vocab_size=512,
+                      num_stages=1)
+    model = build_model(cfg)
+    edgc = EDGCConfig(policy="edgc", num_stages=1, total_iterations=8,
+                      gds=GDSConfig(alpha=0.5, beta=0.25),
+                      dac=DACConfig(window=3))
+    tcfg = TrainerConfig(total_steps=8, measure_entropy=False)
+    with pytest.raises(ValueError, match="measure_entropy"):
+        Trainer(model, make_host_mesh(), edgc, tcfg, seed=0)
+
+
+def test_alpha_gate_skips_and_holds_history():
+    """Satellite: off-gate iterations dispatch the entropy-off variant
+    (no on_entropy recording) and history zero-order-holds the last
+    measured reading instead of logging a 0.0 placeholder."""
+    data = lambda: SyntheticLM(512, 32, 4, seed=3).batches()
+    tr = _trainer(make_host_mesh(data=1, model=1), steps=6)
+    hist = tr.run(data())
+    gds = tr.edgc_cfg.gds
+    measured = {s for s in range(6)
+                if gds.should_measure(s % tr.edgc_cfg.dac.window)}
+    assert {s for s, _ in tr.controller.entropy_history} == measured
+    by_step = {h["step"]: h["entropy"] for h in hist}
+    ent = dict(tr.controller.entropy_history)
+    last = 0.0
+    for s in range(6):
+        if s in ent:
+            last = ent[s]
+        assert by_step[s] == pytest.approx(last)
+    assert any(v != 0.0 for v in by_step.values())
 
 
 def test_pipelined_trainer_checkpoint_resume(tmp_path):
@@ -658,9 +848,12 @@ _SCRIPT = textwrap.dedent("""
 
     def trainer(policy, mesh, steps, sched="1f1b"):
         model = build_model(CFG)
+        # alpha=1 keeps the ISR gate always-on: one compiled step
+        # variant per (policy, plan) instead of two, which keeps this
+        # 10-trainer subprocess inside its timeout
         edgc = EDGCConfig(policy=policy, fixed_rank=16, num_stages=S,
                           total_iterations=steps,
-                          gds=GDSConfig(alpha=0.5, beta=0.25),
+                          gds=GDSConfig(alpha=1.0, beta=0.25),
                           dac=DACConfig(window=5, adjust_limit=4))
         tcfg = TrainerConfig(total_steps=steps, log_every=1, schedule=sched,
                              adam=AdamConfig(lr=1e-3, warmup_steps=2,
@@ -749,13 +942,14 @@ _SCRIPT_FAMILIES = textwrap.dedent("""
                       vocab_size=512, num_experts=2, experts_per_token=1,
                       capacity_factor=4.0, num_stages=2)
 
-    def trainer(cfg, mesh, steps):
+    def trainer(cfg, mesh, steps, stash="replay"):
         model = build_model(cfg)
         edgc = EDGCConfig(policy="fixed", fixed_rank=8, num_stages=2,
                           total_iterations=steps,
-                          gds=GDSConfig(alpha=0.5, beta=0.25),
+                          gds=GDSConfig(alpha=1.0, beta=0.25),
                           dac=DACConfig(window=5, adjust_limit=4))
         tcfg = TrainerConfig(total_steps=steps, log_every=1, schedule="1f1b",
+                             stash_policy=stash,
                              adam=AdamConfig(lr=1e-3, warmup_steps=2,
                                              total_steps=steps))
         return Trainer(model, mesh, edgc, tcfg, seed=0)
@@ -795,6 +989,24 @@ _SCRIPT_FAMILIES = textwrap.dedent("""
     assert sum(c for c, _ in per_stage) == comp
     assert sum(f for _, f in per_stage) == full
     print(f"moe pipe=2: gap {gap:.2e} stage bytes {per_stage}")
+
+    # Selective stashing on a REAL pipe axis with a RAGGED plan: 5 layers,
+    # attn_every=2 -> groups [2,2,1] -> stage group slots [2, 1] (Gmax=2),
+    # so stash="full" saves one inter-group carry per microbatch and the
+    # backward replays single group slots instead of the whole stage.
+    ZAMBA5 = ModelConfig(name="pp2-zamba5", family="zamba", num_layers=5,
+                         d_model=128, num_heads=4, num_kv_heads=4, d_ff=256,
+                         vocab_size=512, ssm_state=16, chunk=16,
+                         attn_every=2, num_stages=2)
+    steps = 4
+    tp = trainer(ZAMBA5, mesh_pipe, steps, stash="full")
+    hp = tp.run(data(ZAMBA5))
+    tf = trainer(ZAMBA5, mesh_flat, steps)
+    hf = tf.run(data(ZAMBA5))
+    lp = [h["loss"] for h in hp]; lf = [h["loss"] for h in hf]
+    gap = max(abs(a - b) for a, b in zip(lp, lf))
+    assert gap < 5e-3, ("zamba5-stash-full", gap, lp, lf)
+    print(f"zamba ragged pipe=2 stash=full: gap {gap:.2e} PARITY_OK")
     print("PIPELINE_FAMILIES_2DEV_OK")
 """)
 
