@@ -1,6 +1,7 @@
 """EDGC core: entropy-driven dynamic gradient compression (the paper's contribution)."""
-from .bucketing import BucketLayout, make_bucket_layout
+from .bucketing import BucketLayout, SyncChunk, make_bucket_layout, sync_chunks
 from .comm_model import CommModel, HardwareSpec, TPU_V5E, rank_bounds
+from .config import COMM_MODES, SyncConfig
 from .compressor import (
     CompressionPlan,
     LeafInfo,
@@ -24,10 +25,12 @@ from .entropy import (
 )
 from .mp_law import GTable, g_table, mp_cdf, mp_support, sample_eigenvalues
 from .powersgd import LowRankState, compress_leaf, gram_schmidt, init_leaf_state
+from .sync_executor import SyncExecutor
 
 __all__ = [
-    "BucketLayout", "make_bucket_layout",
+    "BucketLayout", "SyncChunk", "make_bucket_layout", "sync_chunks",
     "CommModel", "HardwareSpec", "TPU_V5E", "rank_bounds",
+    "COMM_MODES", "SyncConfig", "SyncExecutor",
     "CompressionPlan", "LeafInfo", "NO_COMPRESSION", "classify_leaves",
     "init_compressor_state", "make_plan", "plan_wire_bytes",
     "resize_compressor_state", "sync_grads",

@@ -50,13 +50,16 @@ __all__ = [
     "ShapeGroup",
     "FlatBucket",
     "BucketLayout",
+    "SyncChunk",
     "make_bucket_layout",
     "layout_for_tree",
+    "sync_chunks",
     "is_stacked_state",
     "stack_state",
     "unstack_state",
     "resize_stacked_state",
     "bucketed_sync_grads",
+    "sync_chunk_grads",
 ]
 
 PsumFn = Callable[[jax.Array], jax.Array]
@@ -103,20 +106,88 @@ class FlatBucket:
 
 @dataclasses.dataclass(frozen=True)
 class BucketLayout:
-    """Static, hashable sync schedule: stacked groups + flat buckets."""
+    """Static, hashable sync schedule: stacked groups + flat buckets.
+
+    ``chunk_bytes`` is the schedule-overlap transfer cap: ``sync_chunks``
+    splits each flat bucket into member runs of at most that many (fp32)
+    bytes, so one chunk's collective fits under one pipeline backward tick.
+    0 keeps the natural per-collective granularity. It does NOT change the
+    groups/buckets packing (state keys and stacking are chunk-agnostic).
+    """
 
     groups: tuple[ShapeGroup, ...]
     buckets: tuple[FlatBucket, ...]
+    chunk_bytes: int = 0
 
     def num_collectives(self) -> int:
         """Collectives per step: two factor psums per group, one per bucket."""
         return 2 * len(self.groups) + len(self.buckets)
 
 
+@dataclasses.dataclass(frozen=True)
+class SyncChunk:
+    """One independently-launchable slice of a bucketed sync schedule.
+
+    Either one whole shape group (stacked PowerSGD is atomic: its factor
+    psums and error feedback act on the full stack) or a member run of one
+    flat bucket. Chunks partition the layout's leaves exactly — running
+    every chunk of a layout reproduces ``bucketed_sync_grads`` bit for bit
+    (a psum of a packed sub-run equals the matching slice of the packed
+    whole-bucket psum), which is what lets the pipelined executor spread
+    them over drain ticks.
+    """
+
+    kind: str                           # "group" | "bucket"
+    group: ShapeGroup | None = None
+    members: tuple[Member, ...] = ()    # kind="bucket": the packed run
+
+    @property
+    def member_paths(self) -> tuple[str, ...]:
+        src = self.group.members if self.kind == "group" else self.members
+        return tuple(path for path, _ in src)
+
+    def wire_bytes(self, bytes_per_elem: int = 4) -> int:
+        """Estimated collective payload (factor psums / packed bucket)."""
+        if self.kind == "group":
+            g = self.group
+            return (g.m + g.n) * g.rank * g.stack_size * bytes_per_elem
+        return sum(math.prod(shape) if shape else 1
+                   for _, shape in self.members) * bytes_per_elem
+
+
+def sync_chunks(layout: BucketLayout) -> tuple[SyncChunk, ...]:
+    """Split a layout into launchable chunks (groups first, tree order).
+
+    Shape groups are atomic — one chunk each. Flat buckets split into
+    member runs capped at ``layout.chunk_bytes`` of fp32 payload (a single
+    oversized member still gets its own chunk); ``chunk_bytes == 0`` keeps
+    one chunk per bucket.
+    """
+    chunks = [SyncChunk(kind="group", group=g) for g in layout.groups]
+    cap_elems = max(1, layout.chunk_bytes // 4) if layout.chunk_bytes > 0 else 0
+    for bucket in layout.buckets:
+        if cap_elems <= 0:
+            chunks.append(SyncChunk(kind="bucket", members=bucket.members))
+            continue
+        run: list[Member] = []
+        run_elems = 0
+        for path, shape in bucket.members:
+            nelem = math.prod(shape) if shape else 1
+            if run and run_elems + nelem > cap_elems:
+                chunks.append(SyncChunk(kind="bucket", members=tuple(run)))
+                run, run_elems = [], 0
+            run.append((path, shape))
+            run_elems += nelem
+        if run:
+            chunks.append(SyncChunk(kind="bucket", members=tuple(run)))
+    return tuple(chunks)
+
+
 def make_bucket_layout(
     leaves: Iterable[Any],
     plan,
     bucket_bytes: int = DEFAULT_BUCKET_BYTES,
+    chunk_bytes: int = 0,
 ) -> BucketLayout:
     """Derive the bucketed sync schedule from leaf shapes and a plan.
 
@@ -158,16 +229,18 @@ def make_bucket_layout(
         ShapeGroup(m=m, n=n, rank=r, members=tuple(members))
         for (m, n, r), members in grouped.items()   # first-appearance order
     )
-    return BucketLayout(groups=groups, buckets=tuple(buckets))
+    return BucketLayout(groups=groups, buckets=tuple(buckets),
+                        chunk_bytes=chunk_bytes)
 
 
 def layout_for_tree(tree: Any, plan,
-                    bucket_bytes: int = DEFAULT_BUCKET_BYTES) -> BucketLayout:
+                    bucket_bytes: int = DEFAULT_BUCKET_BYTES,
+                    chunk_bytes: int = 0) -> BucketLayout:
     """Layout from a (gradient/param) pytree — shapes are static at trace."""
     flat = jax.tree_util.tree_flatten_with_path(tree)[0]
     return make_bucket_layout(
         [(jax.tree_util.keystr(kp), tuple(leaf.shape)) for kp, leaf in flat],
-        plan, bucket_bytes,
+        plan, bucket_bytes, chunk_bytes,
     )
 
 
@@ -252,6 +325,58 @@ def resize_stacked_state(
 
 
 # ------------------------------------------------------------- sync executor
+def _sync_group(
+    by_path: dict[str, jax.Array],
+    group: ShapeGroup,
+    state: LowRankState,
+    psum_mean: PsumFn,
+    use_kernels: bool = False,
+) -> tuple[dict[str, jax.Array], LowRankState]:
+    """One shape group: concat -> stacked PowerSGD (2 psums) -> slice back."""
+    stack = jnp.concatenate(
+        [by_path[path].astype(jnp.float32).reshape(-1, group.m, group.n)
+         for path, _ in group.members],
+        axis=0,
+    )
+    g_hat, st = compress_leaf(stack, state, psum_mean, use_kernels=use_kernels)
+    out: dict[str, jax.Array] = {}
+    offset = 0
+    for path, shape in group.members:
+        e = _batch_of(shape)
+        out[path] = (g_hat[offset:offset + e]
+                     .reshape(shape).astype(by_path[path].dtype))
+        offset += e
+    return out, st
+
+
+def _sync_flat(
+    by_path: dict[str, jax.Array],
+    members: tuple[Member, ...],
+    psum_mean: PsumFn,
+) -> dict[str, jax.Array]:
+    """One flat member run: pack -> psum-mean -> slice back.
+
+    The psum is elementwise, so syncing a bucket's member runs separately
+    is bit-identical to syncing the packed whole bucket — chunked and
+    monolithic flat transfers reassemble to the same values. (The widest
+    member dtype is computed per RUN: sub-runs of a mixed-dtype bucket may
+    move narrower than the whole bucket would; uniform trees are exact.)
+    """
+    wire_dtype = jnp.result_type(*[by_path[path].dtype for path, _ in members])
+    packed = jnp.concatenate(
+        [by_path[path].astype(wire_dtype).reshape(-1) for path, _ in members]
+    )
+    packed = psum_mean(packed)
+    out: dict[str, jax.Array] = {}
+    offset = 0
+    for path, shape in members:
+        nelem = math.prod(shape) if shape else 1
+        out[path] = (packed[offset:offset + nelem]
+                     .reshape(shape).astype(by_path[path].dtype))
+        offset += nelem
+    return out
+
+
 def bucketed_sync_grads(
     grads: Any,
     comp_state: dict[str, LowRankState],
@@ -270,37 +395,36 @@ def bucketed_sync_grads(
     new_state = dict(comp_state)
 
     for group in layout.groups:
-        stack = jnp.concatenate(
-            [by_path[path].astype(jnp.float32).reshape(-1, group.m, group.n)
-             for path, _ in group.members],
-            axis=0,
-        )
-        g_hat, st = compress_leaf(stack, comp_state[group.key], psum_mean,
-                                  use_kernels=use_kernels)
+        upd, st = _sync_group(by_path, group, comp_state[group.key],
+                              psum_mean, use_kernels=use_kernels)
+        out.update(upd)
         new_state[group.key] = st
-        offset = 0
-        for path, shape in group.members:
-            e = _batch_of(shape)
-            out[path] = (g_hat[offset:offset + e]
-                         .reshape(shape).astype(by_path[path].dtype))
-            offset += e
 
     for bucket in layout.buckets:
-        # widest member dtype: uniform trees keep their native wire dtype
-        # (byte/rounding parity with per-leaf psums); mixed buckets upcast
-        wire_dtype = jnp.result_type(
-            *[by_path[path].dtype for path, _ in bucket.members])
-        packed = jnp.concatenate(
-            [by_path[path].astype(wire_dtype).reshape(-1)
-             for path, _ in bucket.members]
-        )
-        packed = psum_mean(packed)
-        offset = 0
-        for path, shape in bucket.members:
-            nelem = math.prod(shape) if shape else 1
-            out[path] = (packed[offset:offset + nelem]
-                         .reshape(shape).astype(by_path[path].dtype))
-            offset += nelem
+        out.update(_sync_flat(by_path, bucket.members, psum_mean))
 
     out_leaves = [out[jax.tree_util.keystr(kp)] for kp, _ in flat]
     return jax.tree_util.tree_unflatten(treedef, out_leaves), new_state
+
+
+def sync_chunk_grads(
+    grads_by_path: dict[str, jax.Array],
+    comp_state: dict[str, LowRankState],
+    chunk: SyncChunk,
+    psum_mean: PsumFn,
+    use_kernels: bool = False,
+) -> tuple[dict[str, jax.Array], dict[str, LowRankState]]:
+    """Execute ONE chunk of a layout's schedule (the overlap primitive).
+
+    ``grads_by_path`` only needs the chunk's own members. Returns the
+    synced leaves (by path) and the state entries the chunk touched
+    ({group key: new state} for a group chunk, {} for a flat run) — the
+    same helpers ``bucketed_sync_grads`` runs, so executing every chunk of
+    a layout in any order reproduces the monolithic schedule exactly.
+    """
+    if chunk.kind == "group":
+        upd, st = _sync_group(grads_by_path, chunk.group,
+                              comp_state[chunk.group.key], psum_mean,
+                              use_kernels=use_kernels)
+        return upd, {chunk.group.key: st}
+    return _sync_flat(grads_by_path, chunk.members, psum_mean), {}

@@ -1,0 +1,97 @@
+"""SyncConfig + the shared legacy-field shim for the unified config surface.
+
+The DP-sync knobs (``bucketed`` / ``use_kernels`` / ``bucket_bytes``) used
+to be scattered across ``TrainStepConfig`` / ``TrainerConfig`` /
+``EDGCConfig``; they now live in one :class:`SyncConfig` that all three
+embed, next to ``repro.pipeline.PipelineConfig`` for the pipeline knobs.
+``resolve_embedded`` is the init-shim those dataclasses share: it accepts
+the old flat keyword arguments and folds them into the embedded configs,
+so existing call sites keep working unchanged.
+
+``COMM_MODES`` names the three communication modes the
+:class:`~repro.core.sync_executor.SyncExecutor` facade dispatches on.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from .bucketing import DEFAULT_BUCKET_BYTES
+
+__all__ = ["SyncConfig", "SYNC_FIELDS", "COMM_MODES", "resolve_embedded"]
+
+#: Communication modes of the SyncExecutor facade.
+#:   flat                  one DP sync over the whole gradient tree
+#:   per-stage             one bucketed schedule per distinct stage plan,
+#:                         run monolithically after the pipeline drain
+#:   per-stage-overlapped  the same schedules split into chunks and
+#:                         interleaved with the pipeline's drain ticks
+COMM_MODES = ("flat", "per-stage", "per-stage-overlapped")
+
+
+@dataclasses.dataclass(frozen=True)
+class SyncConfig:
+    """DP gradient-sync executor knobs (hashable, compile-cache safe).
+
+    ``bucketed``: True = shape-grouped stacked compression + flat buckets
+    (O(groups + buckets) collectives), False = the per-leaf parity oracle,
+    None = infer (the trainer resolves to "bucketed where supported", the
+    flat step infers from the compressor-state format).
+    """
+
+    bucketed: bool | None = None
+    use_kernels: bool = False      # route matmuls through Pallas ops
+    bucket_bytes: int = DEFAULT_BUCKET_BYTES
+
+
+SYNC_FIELDS = tuple(f.name for f in dataclasses.fields(SyncConfig))
+
+
+def resolve_embedded(pipeline, sync, legacy: dict, where: str):
+    """Fold deprecated flat config kwargs into the embedded configs.
+
+    ``legacy`` maps old flat field names (``num_stages``, ``schedule``,
+    ``bucketed``, ``use_kernels``, ...) to explicitly-passed values; they
+    override the matching field of the embedded ``pipeline`` / ``sync``
+    config (which default-construct when not given). Unknown names raise
+    ``TypeError`` exactly like a normal bad keyword. Returns the resolved
+    ``(PipelineConfig, SyncConfig)`` pair.
+
+    The PipelineConfig import is deferred so ``repro.core`` (whose
+    ``EDGCConfig`` also uses this shim) never imports ``repro.pipeline``
+    at module-load time.
+    """
+    from repro.pipeline.config import PIPELINE_FIELDS, PipelineConfig
+
+    pipe_over = {k: v for k, v in legacy.items() if k in PIPELINE_FIELDS}
+    sync_over = {k: v for k, v in legacy.items() if k in SYNC_FIELDS}
+    unknown = set(legacy) - set(pipe_over) - set(sync_over)
+    if unknown:
+        raise TypeError(f"{where} got unexpected keyword argument(s) "
+                        f"{sorted(unknown)}")
+    if pipeline is None:
+        pipeline = PipelineConfig()
+    if sync is None:
+        sync = SyncConfig()
+    if pipe_over:
+        pipeline = dataclasses.replace(pipeline, **pipe_over)
+    if sync_over:
+        sync = dataclasses.replace(sync, **sync_over)
+    return pipeline, sync
+
+
+def alias_property(container: str, name: str, settable: bool = False):
+    """A ``cfg.<name>`` property delegating to ``cfg.<container>.<name>``.
+
+    The deprecated flat fields of the three config dataclasses are these:
+    reads keep working forever; ``settable=True`` (mutable TrainerConfig
+    only) writes through by replacing the embedded frozen config.
+    """
+    def get(self):
+        return getattr(getattr(self, container), name)
+
+    def set_(self, value):
+        setattr(self, container,
+                dataclasses.replace(getattr(self, container), **{name: value}))
+
+    return property(get, set_ if settable else None,
+                    doc=f"Deprecated alias for .{container}.{name}")

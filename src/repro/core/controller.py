@@ -27,6 +27,7 @@ from .compressor import (
     LeafInfo,
     make_plan,
 )
+from .config import alias_property, resolve_embedded
 from .cqm import CQM
 from .dac import DAC, DACConfig
 from .entropy import GDSConfig
@@ -34,16 +35,47 @@ from .entropy import GDSConfig
 __all__ = ["EDGCConfig", "EDGCController"]
 
 
-@dataclasses.dataclass(frozen=True)
+@dataclasses.dataclass(frozen=True, init=False)
 class EDGCConfig:
+    """EDGC policy configuration.
+
+    The execution knobs live in the embedded configs: ``pipeline``
+    (``repro.pipeline.PipelineConfig`` — ``num_stages``, schedule, overlap)
+    and ``sync`` (``repro.core.SyncConfig`` — bucketing, kernels). The old
+    flat fields (``num_stages``, ``use_kernels``) are accepted as init
+    kwargs and readable as properties, deprecated in favor of
+    ``cfg.pipeline.num_stages`` / ``cfg.sync.use_kernels``.
+    """
+
     policy: str = "edgc"          # none | fixed | optimus | edgc
     fixed_rank: int = 64          # for the fixed / optimus baselines
     gds: GDSConfig = GDSConfig()
     dac: DACConfig = DACConfig()
-    num_stages: int = 1
     total_iterations: int = 10_000
-    use_kernels: bool = False     # route matmuls through Pallas ops
     mxu_efficiency: float = 0.35  # for the analytic comm/compute model
+    pipeline: Any = None          # PipelineConfig (resolved in __init__)
+    sync: Any = None              # SyncConfig (resolved in __init__)
+
+    def __init__(self, policy: str = "edgc", fixed_rank: int = 64,
+                 gds: GDSConfig | None = None, dac: DACConfig | None = None,
+                 total_iterations: int = 10_000, mxu_efficiency: float = 0.35,
+                 pipeline=None, sync=None, **legacy) -> None:
+        pipeline, sync = resolve_embedded(pipeline, sync, legacy,
+                                          where="EDGCConfig")
+        set_ = lambda k, v: object.__setattr__(self, k, v)
+        set_("policy", policy)
+        set_("fixed_rank", fixed_rank)
+        set_("gds", gds if gds is not None else GDSConfig())
+        set_("dac", dac if dac is not None else DACConfig())
+        set_("total_iterations", total_iterations)
+        set_("mxu_efficiency", mxu_efficiency)
+        set_("pipeline", pipeline)
+        set_("sync", sync)
+
+
+# Deprecated flat-field aliases (kept for existing call sites/tests).
+EDGCConfig.num_stages = alias_property("pipeline", "num_stages")
+EDGCConfig.use_kernels = alias_property("sync", "use_kernels")
 
 
 class EDGCController:
@@ -128,6 +160,18 @@ class EDGCController:
     @property
     def in_warmup(self) -> bool:
         return self.cfg.policy == "edgc" and not self.dac.warmed_up
+
+    def set_overlap_feedback(self, slack_seconds) -> None:
+        """Feed the overlap planner's measured per-stage Eq. 4 slack.
+
+        The trainer calls this (pipelined + ``overlap_sync`` runs) with
+        ``simulate_schedule``'s per-stage slack in seconds; the DAC then
+        aligns ranks against the REAL schedule geometry and clamps any
+        stage whose comm would not fit its overlap budget
+        (``DAC._feasible_clamp``) — Algorithm 2 trading rank for overlap
+        feasibility.
+        """
+        self.dac.set_overlap(slack_seconds)
 
     # ------------------------------------------------------------------ hooks
     def wants_entropy(self, step: int) -> bool:

@@ -55,6 +55,7 @@ def stage_aligned_ranks(
     t_micro_back: float,
     r_min: int,
     r_max: int,
+    slack_seconds: list | None = None,
 ) -> list[int]:
     """Algorithm 2: align all stages' comm completion with stage 1 (Eq. 4).
 
@@ -62,11 +63,21 @@ def stage_aligned_ranks(
     stage i has an (i-1) * T_microBack head start, so it can afford
     T_com(r^{s1}) + (i-1) * T_microBack of communication — i.e. a *larger*
     (more accurate) rank — and still finish with stage 1.
+
+    ``slack_seconds`` (0-indexed per stage, entry 0 ignored) replaces the
+    analytic ``(i-1) * t_micro_back`` head start with the overlap planner's
+    measured Eq. 4 slack (``simulate_schedule``'s calibrated event times):
+    the rank vector then reflects what the schedule-interleaved sync can
+    actually hide, not the unit-tick idealization. With
+    ``slack_seconds[s] == s * t_micro_back`` (the unit model) the two
+    formulations coincide exactly.
     """
     t1 = comm.t_com(r_stage1)
     ranks = [r_stage1]
     for i in range(2, num_stages + 1):
-        t_i = t1 + (i - 1) * t_micro_back
+        head = (slack_seconds[i - 1] if slack_seconds is not None
+                else (i - 1) * t_micro_back)
+        t_i = t1 + head
         ranks.append(comm.rank_for_time(t_i, r_min, r_max))
     return ranks
 
@@ -97,9 +108,55 @@ class DAC:
     # bound on the applied move, so every stage — not just stage 1 —
     # tracks its previous value); None until the first post-warm-up update
     applied_ranks: list | None = None
+    # Overlap feedback (set via set_overlap): the planner's measured
+    # per-stage Eq. 4 slack in seconds. When present it (a) replaces the
+    # analytic (i-1)*t_micro_back head start in stage alignment and
+    # (b) turns on the feasibility clamp — a stage's applied rank is
+    # lowered until its comm fits T_com(r_stage1) + slack, so the rank
+    # vector trades rank for OVERLAP FEASIBILITY, not just raw bytes.
+    slack_seconds: list | None = None
 
     def __post_init__(self) -> None:
         self.r_stage1 = self.r_max
+
+    def set_overlap(self, slack_seconds) -> None:
+        """Feed the overlap planner's per-stage Eq. 4 slack (seconds).
+
+        ``slack_seconds[s]`` is how long before stage 0's last backward
+        stage s's last backward retires (``simulate_schedule(...)
+        ["slack_seconds"]``, possibly calibrated with measured t_f/t_b).
+        Must be per-stage, non-negative, with stage 0 at zero slack.
+        """
+        slack = [float(t) for t in slack_seconds]
+        if len(slack) != self.num_stages:
+            raise ValueError(f"slack_seconds has {len(slack)} entries, "
+                             f"DAC drives {self.num_stages} stages")
+        if any(t < 0 for t in slack):
+            raise ValueError(f"negative Eq. 4 slack: {slack}")
+        self.slack_seconds = slack
+
+    def _feasible_clamp(self, ranks: list[int]) -> list[int]:
+        """Lower any stage's rank until its comm fits its overlap budget.
+
+        Budget = T_com(r_stage1) + slack_s (Eq. 4 with measured slack).
+        Like the [r_min, r_max] bounds this is a Constraint-1-style hard
+        limit, applied after the ±adjust_limit window: an infeasible rank
+        would push the stage's sync past stage 0's and stall the pipeline,
+        so feasibility wins over move smoothness (downward only — the
+        clamp never raises a rank).
+        """
+        if self.slack_seconds is None:
+            return ranks
+        q = max(1, self.cfg.quantize_to)
+        t1 = self.comm.t_com(ranks[0])
+        out = [ranks[0]]
+        for s in range(1, len(ranks)):
+            budget = t1 + self.slack_seconds[s]
+            r = ranks[s]
+            while r - q >= self.r_min and self.comm.t_com(r) > budget:
+                r -= q
+            out.append(max(self.r_min, r))
+        return out
 
     def _snap_limited(self, r: int, r_prev: int) -> int:
         """Quantize to the rank grid WITHOUT leaving the ±adjust_limit
@@ -162,7 +219,7 @@ class DAC:
         self.r_stage1 = r1
         ranks = stage_aligned_ranks(
             r1, self.num_stages, self.comm, self.t_micro_back,
-            self.r_min, self.r_max,
+            self.r_min, self.r_max, slack_seconds=self.slack_seconds,
         )
         out = [r1]
         for i in range(1, self.num_stages):
@@ -171,13 +228,14 @@ class DAC:
                 self.cfg.adjust_limit
             )
             out.append(self._snap_limited(r_i, prev[i]))
+        out = self._feasible_clamp(out)
         self.applied_ranks = out
         return list(out)
 
     def current_ranks(self) -> list[int]:
         if self.applied_ranks is not None:
             return list(self.applied_ranks)
-        return stage_aligned_ranks(
+        return self._feasible_clamp(stage_aligned_ranks(
             self.r_stage1, self.num_stages, self.comm, self.t_micro_back,
-            self.r_min, self.r_max,
-        )
+            self.r_min, self.r_max, slack_seconds=self.slack_seconds,
+        ))

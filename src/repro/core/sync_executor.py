@@ -1,0 +1,104 @@
+"""SyncExecutor — the one entry point for DP gradient synchronization.
+
+Three call paths grew up around the compressor (``core/compressor.
+sync_grads`` for the flat step, ``dist/collectives.dp_sync_grads`` as its
+mesh-axis convenience, and ``pipeline/sync.stage_sync_grads`` for the
+pipelined executor), each threading ``use_kernels`` / ``bucketed`` /
+bucket sizes by hand. This facade collapses them behind one object taking
+a :class:`~repro.core.config.SyncConfig` plus a ``CommMode``:
+
+  flat                   ``sync(grads, comp, psum_mean)`` — the whole
+                         gradient tree under one CompressionPlan.
+  per-stage              ``sync(stage_grads, comp, psum_mean,
+                         shared_grads=..., my_stage=...)`` — one bucketed
+                         schedule per distinct stage plan, run after the
+                         pipeline drain (PR 3 semantics).
+  per-stage-overlapped   the same schedules split into
+                         :class:`~repro.core.bucketing.SyncChunk`s that the
+                         pipelined executor launches inside its drain ticks
+                         (``chunks`` / ``run_chunks`` / ``sync_shared``);
+                         any chunks the launch plan left over run through
+                         ``run_chunks`` after the loop.
+
+The legacy entry points remain as thin wrappers (they ARE the primitives
+this facade dispatches to), so nothing downstream breaks; new code should
+construct a SyncExecutor.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+from . import bucketing
+from .compressor import CompressionPlan, sync_grads
+from .config import COMM_MODES, SyncConfig
+
+__all__ = ["SyncExecutor"]
+
+PsumFn = Callable[[Any], Any]
+
+
+class SyncExecutor:
+    """Facade over the flat / per-stage / overlapped DP-sync executors.
+
+    Static construction (cfg + mode + plan or stage plans) happens at
+    trace/build time; the ``sync``/``run_chunks`` methods are called inside
+    the shard_map region with the traced psum hook.
+    """
+
+    def __init__(self, cfg: SyncConfig | None = None, mode: str = "flat", *,
+                 plan: CompressionPlan | None = None, splans=None) -> None:
+        if mode not in COMM_MODES:
+            raise ValueError(f"unknown CommMode {mode!r} "
+                             f"(want one of {COMM_MODES})")
+        if mode == "flat" and plan is None:
+            raise ValueError("mode='flat' requires a CompressionPlan")
+        if mode != "flat" and splans is None:
+            raise ValueError(f"mode={mode!r} requires StagePlans")
+        self.cfg = cfg or SyncConfig()
+        self.mode = mode
+        self.plan = plan
+        self.splans = splans
+
+    # ------------------------------------------------------------- monolithic
+    def sync(self, grads: Any, comp_state: dict, psum_mean: PsumFn, *,
+             shared_grads: Any = None, my_stage=None):
+        """One-call sync for the flat and per-stage modes.
+
+        flat: returns (synced, new_state). per-stage modes: ``grads`` is
+        the rank's stage tree, returns (synced_stage, synced_shared,
+        new_state). In per-stage-overlapped mode this is the no-chunks-
+        launched fallback — identical to per-stage.
+        """
+        if self.mode == "flat":
+            return sync_grads(grads, comp_state, self.plan, psum_mean,
+                              use_kernels=self.cfg.use_kernels,
+                              bucketed=self.cfg.bucketed,
+                              bucket_bytes=self.cfg.bucket_bytes)
+        from repro.pipeline.sync import stage_sync_grads
+        return stage_sync_grads(grads, shared_grads, comp_state, self.splans,
+                                psum_mean, my_stage,
+                                use_kernels=self.cfg.use_kernels)
+
+    # ------------------------------------------------------------- overlapped
+    def chunks(self, d: int) -> tuple[bucketing.SyncChunk, ...]:
+        """Launchable chunks of distinct schedule ``d`` (static)."""
+        return bucketing.sync_chunks(self.splans.layouts[d])
+
+    def run_chunks(self, d: int, chunk_ids, grads_by_path: dict,
+                   comp_state: dict, psum_mean: PsumFn):
+        """Run a subset of schedule ``d``'s chunks for one stage.
+
+        ``grads_by_path`` maps stage-local leaf paths to wire-dtype grads
+        (only the chunks' members are read). Returns (synced updates by
+        path, full new comp dict with schedule ``d``'s touched keys
+        replaced).
+        """
+        from repro.pipeline.sync import stage_sync_chunks
+        return stage_sync_chunks(grads_by_path, comp_state, self.splans, d,
+                                 chunk_ids, psum_mean,
+                                 use_kernels=self.cfg.use_kernels)
+
+    def sync_shared(self, shared_grads: Any, psum_mean: PsumFn):
+        """Flat-bucket sync of the pipe-replicated shared leaves."""
+        from repro.pipeline.sync import sync_shared_grads
+        return sync_shared_grads(shared_grads, psum_mean)

@@ -111,7 +111,8 @@ def _eval_shape_tree(fn, *args):
 def lower_one(arch: str, shape_name: str, mesh, policy: str = "edgc",
               rank: int = 64, verbose: bool = True,
               opt_dtype: str = "float32", stash: str = "replay",
-              stash_every: int = 2) -> dict:
+              stash_every: int = 2, overlap: bool = False,
+              chunk_bytes: int = 0) -> dict:
     """Lower+compile one (arch, shape, mesh); return the roofline record."""
     spec = INPUT_SHAPES[shape_name]
     kind = spec["kind"]
@@ -148,7 +149,9 @@ def lower_one(arch: str, shape_name: str, mesh, policy: str = "edgc",
     if kind == "train" and pipe:
         rec = _lower_train_pipelined(arch, cfg, model, mesh, params_shapes,
                                      shape_name, policy, rank, opt_dtype,
-                                     stash=stash, stash_every=stash_every)
+                                     stash=stash, stash_every=stash_every,
+                                     overlap=overlap,
+                                     chunk_bytes=chunk_bytes)
     elif kind == "train":
         rec = _lower_train(arch, cfg, model, mesh, mode, params_shapes,
                            pshard, shape_name, policy, rank, opt_dtype)
@@ -261,16 +264,21 @@ def _lower_train(arch, cfg, model, mesh, mode, params_shapes, pshard,
 
 def _lower_train_pipelined(arch, cfg, model, mesh, params_shapes, shape_name,
                            policy, rank, opt_dtype="float32",
-                           stash="replay", stash_every=2):
+                           stash="replay", stash_every=2, overlap=False,
+                           chunk_bytes=0):
     """Lower+compile the pipelined train step (pipe mesh): stage-partitioned
     state, 1F1B schedule, per-stage DP sync — what a pipelined pod runs.
     ``stash`` picks the executor's activation-stashing policy; the record
-    carries the per-stage ``peak_activation_bytes`` ledger for it."""
+    carries the per-stage ``peak_activation_bytes`` ledger for it.
+    ``overlap`` lowers the schedule-interleaved sync executor and records
+    the overlap planner's launch/residual/feasibility summary."""
     from repro.launch.mesh import pipe_size
     from repro.pipeline import partition as ppart
     from repro.pipeline import sync as psync
+    from repro.pipeline.config import PipelineConfig
     from repro.pipeline.schedule import (
         boundary_nbytes, peak_activation_bytes, pipeline_state_shardings,
+        plan_overlap,
     )
 
     spec = INPUT_SHAPES[shape_name]
@@ -288,6 +296,7 @@ def _lower_train_pipelined(arch, cfg, model, mesh, params_shapes, shape_name,
         lambda p: part.partition_params(p)[0], params_shapes)
     splans = psync.make_stage_plans(
         plan, S, psync.stage_local_leaves(stage_shapes),
+        chunk_bytes=chunk_bytes,
         local_path=part.local_leaf_path)
     acfg = adam.AdamConfig(opt_dtype=opt_dtype)
 
@@ -311,8 +320,11 @@ def _lower_train_pipelined(arch, cfg, model, mesh, params_shapes, shape_name,
 
     scfg = TrainStepConfig(mode="dp_tp", policy_plan=plan,
                            measure_entropy=True, remat=cfg.remat,
-                           num_stages=S, schedule="1f1b",
-                           stash_policy=stash, stash_every=stash_every,
+                           pipeline=PipelineConfig(
+                               num_stages=S, schedule="1f1b",
+                               stash_policy=stash, stash_every=stash_every,
+                               overlap_sync=overlap,
+                               chunk_bytes=chunk_bytes),
                            adam=acfg)
     step = make_train_step(model, mesh, scfg)
     jstep = jax.jit(step, in_shardings=(sshard, bshard),
@@ -342,6 +354,18 @@ def _lower_train_pipelined(arch, cfg, model, mesh, params_shapes, shape_name,
     rec["pipeline"]["peak_activation_bytes"] = peak_activation_bytes(
         "1f1b", S, M, stash, boundary_bytes=boundary_nbytes(part, mb),
         n_units=part.num_units(), stash_every=stash_every)
+    if overlap:
+        # The overlap planner's summary for this lowering: how many chunks
+        # each stage hides in its drain ticks vs runs post-loop, and the
+        # Eq. 4 feasibility signal the DAC would consume.
+        oplan = plan_overlap("1f1b", S, M, splans)
+        rec["pipeline"]["overlap"] = {
+            "chunk_bytes": chunk_bytes,
+            "in_loop_chunks": [sum(len(ids) for _, ids in oplan.launches[s])
+                               for s in range(S)],
+            "residual_chunks": [len(oplan.residual[s]) for s in range(S)],
+            "feasible": list(oplan.feasible),
+        }
     return rec
 
 
@@ -408,6 +432,12 @@ def main() -> None:
                          "backward tick")
     ap.add_argument("--stash-every", type=int, default=2,
                     help="k for --stash every_k")
+    ap.add_argument("--overlap", action="store_true",
+                    help="with --pipe: lower the schedule-interleaved "
+                         "(overlapped) per-stage sync executor")
+    ap.add_argument("--chunk-bytes", type=int, default=0,
+                    help="with --overlap: max bytes per sync transfer "
+                         "chunk (0 = one chunk per bucket)")
     ap.add_argument("--out", default=None, help="write JSON records here")
     args = ap.parse_args()
 
@@ -423,7 +453,9 @@ def main() -> None:
                 rec = lower_one(arch, shape_name, mesh,
                                 policy=args.policy, rank=args.rank,
                                 stash=args.stash,
-                                stash_every=args.stash_every)
+                                stash_every=args.stash_every,
+                                overlap=args.overlap,
+                                chunk_bytes=args.chunk_bytes)
                 if rec.get("skipped"):
                     print(f"SKIP {tag}: {rec['reason']}", flush=True)
                 else:
@@ -435,6 +467,11 @@ def main() -> None:
                                       rec["pipeline"]["stage_bytes"])
                         extra = (f", {rec['pipeline']['family']} "
                                  f"stage-sync [{sb}] B")
+                        if "overlap" in rec["pipeline"]:
+                            ov = rec["pipeline"]["overlap"]
+                            extra += (", overlap in-loop "
+                                      f"{ov['in_loop_chunks']} residual "
+                                      f"{ov['residual_chunks']}")
                     print(f"OK   {tag}: {rec['flops_per_chip']:.3e} FLOP/chip, "
                           f"{rec['bytes_per_chip']:.3e} B/chip, "
                           f"coll {rec['collective_total']/2**20:.1f} MiB/chip, "

@@ -62,6 +62,15 @@ def main() -> None:
                          "segments")
     ap.add_argument("--stash-every", type=int, default=2,
                     help="k for --stash every_k")
+    ap.add_argument("--overlap", action="store_true",
+                    help="overlap each stage's DP sync with the pipeline "
+                         "drain: sync chunks launch inside the schedule's "
+                         "free back-of-drain ticks instead of after the "
+                         "loop (pipelined executor only)")
+    ap.add_argument("--chunk-bytes", type=int, default=0,
+                    help="split flat sync buckets into transfer chunks of "
+                         "at most this many bytes for overlap scheduling "
+                         "(0 = one chunk per bucket)")
     ap.add_argument("--data-mesh", type=int, default=1)
     ap.add_argument("--model-mesh", type=int, default=1)
     ap.add_argument("--use-kernels", action="store_true")
@@ -89,23 +98,35 @@ def main() -> None:
         mesh = make_host_mesh(data=args.data_mesh, model=args.model_mesh)
     model = build_model(cfg)
 
+    # The unified config surface: one PipelineConfig + one SyncConfig,
+    # shared by the EDGC controller, the Trainer, and (by identity) every
+    # step build.
+    from repro.core import SyncConfig
+    from repro.pipeline import PipelineConfig
+    pipe_cfg = PipelineConfig(
+        num_stages=num_stages, schedule=args.schedule,
+        num_microbatches=args.micro, stash_policy=args.stash,
+        stash_every=args.stash_every, overlap_sync=args.overlap,
+        chunk_bytes=args.chunk_bytes,
+    )
+    sync_cfg = SyncConfig(use_kernels=args.use_kernels)
+
     edgc = EDGCConfig(
-        policy=args.policy, fixed_rank=args.rank, num_stages=num_stages,
+        policy=args.policy, fixed_rank=args.rank,
         total_iterations=args.steps,
         gds=GDSConfig(alpha=0.5, beta=0.25),
         dac=DACConfig(window=args.window, adjust_limit=4),
-        use_kernels=args.use_kernels,
+        pipeline=pipe_cfg, sync=sync_cfg,
     )
     tcfg = TrainerConfig(
         total_steps=args.steps, log_every=max(1, args.steps // 20),
-        use_kernels=args.use_kernels,
-        schedule=args.schedule, num_microbatches=args.micro,
-        stash_policy=args.stash, stash_every=args.stash_every,
+        pipeline=pipe_cfg, sync=sync_cfg,
         adam=AdamConfig(lr=args.lr, warmup_steps=max(10, args.steps // 10),
                         total_steps=args.steps),
     )
     trainer = Trainer(model, mesh, edgc, tcfg, seed=args.seed)
-    pipe_tag = (f", pipe={args.pipe} ({args.schedule}, stash={args.stash})"
+    pipe_tag = (f", pipe={args.pipe} ({args.schedule}, stash={args.stash}"
+                f"{', overlapped sync' if args.overlap else ''})"
                 if args.pipe else "")
     print(f"{cfg.name}: {trainer.n_params/1e6:.1f}M params, "
           f"policy={args.policy}{pipe_tag}, {trainer.controller.describe()}")

@@ -6,9 +6,13 @@ per-family ``StageAdapter`` registry and stage partitioning of a model's
 parameters (``adapters`` / ``partition``), GPipe / 1F1B microbatch
 schedules over a ``pipe`` mesh axis (``schedule``), and the per-stage
 data-parallel gradient sync that applies one DAC rank per stage
-(``sync``).
+(``sync``). ``PipelineConfig`` (``config``) is the one config surface the
+trainer, step builder, and EDGC controller share for these knobs;
+``plan_overlap`` / ``OverlapPlan`` (``schedule``) interleave the sync with
+the schedule's drain ticks.
 """
 from .adapters import StageAdapter, adapter_families, register_adapter
+from .config import PipelineConfig
 from .partition import (
     PipelinePartition,
     make_partition,
@@ -19,33 +23,42 @@ from .partition import (
 from .schedule import (
     SCHEDULES,
     STASH_POLICIES,
+    OverlapPlan,
     bubble_fraction,
+    last_backward_tick,
     make_pipeline_train_step,
     peak_activation_bytes,
     peak_inflight,
+    plan_overlap,
     policy_tick_cost,
     simulate_schedule,
     slot_table,
     stash_points,
     stash_segments,
+    sync_ticks,
 )
 from .sync import (
     StagePlans,
     init_pipeline_comp_state,
     make_stage_plans,
     resize_pipeline_comp_state,
+    stage_sync_chunks,
     stage_sync_grads,
     stage_wire_bytes,
+    sync_shared_grads,
 )
 
 __all__ = [
     "StageAdapter", "adapter_families", "register_adapter",
+    "PipelineConfig",
     "PipelinePartition", "make_partition", "merge_params",
     "partition_params", "pipeline_supported",
-    "SCHEDULES", "STASH_POLICIES", "bubble_fraction",
-    "make_pipeline_train_step", "peak_activation_bytes", "peak_inflight",
+    "SCHEDULES", "STASH_POLICIES", "OverlapPlan", "bubble_fraction",
+    "last_backward_tick", "make_pipeline_train_step",
+    "peak_activation_bytes", "peak_inflight", "plan_overlap",
     "policy_tick_cost", "simulate_schedule", "slot_table",
-    "stash_points", "stash_segments",
+    "stash_points", "stash_segments", "sync_ticks",
     "StagePlans", "init_pipeline_comp_state", "make_stage_plans",
-    "resize_pipeline_comp_state", "stage_sync_grads", "stage_wire_bytes",
+    "resize_pipeline_comp_state", "stage_sync_chunks", "stage_sync_grads",
+    "stage_wire_bytes", "sync_shared_grads",
 ]

@@ -1,0 +1,47 @@
+"""PipelineConfig — the one home for pipeline-execution knobs.
+
+Before this module existed, ``schedule`` / ``num_stages`` /
+``num_microbatches`` / ``stash_policy`` / ``stash_every`` were re-declared
+(and had to be kept in sync by hand) on ``TrainStepConfig``,
+``TrainerConfig`` AND ``EDGCConfig``. All three now embed one
+:class:`PipelineConfig`; their old flat fields survive as deprecated
+init-shim properties (see ``repro.core.config.resolve_embedded``).
+
+Deliberately dependency-free: only ``dataclasses``, so the config can be
+imported by ``repro.core`` (controller) and ``repro.train`` without
+dragging in the execution modules.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+__all__ = ["PipelineConfig", "PIPELINE_FIELDS"]
+
+
+@dataclasses.dataclass(frozen=True)
+class PipelineConfig:
+    """Static pipeline-execution surface (hashable, compile-cache safe).
+
+    ``num_stages > 1`` routes ``make_train_step`` to the pipelined builder;
+    the mesh must carry a matching ``pipe`` axis. ``overlap_sync`` turns on
+    the schedule-interleaved per-stage DP sync (stages launch their sync
+    chunks during their 1F1B/GPipe drain ticks instead of after the loop —
+    see ``pipeline/schedule.py::plan_overlap``); ``chunk_bytes`` caps each
+    flat-bucket transfer so it fits under one backward tick (0 = natural
+    granularity: one chunk per shape group / flat bucket).
+    """
+
+    num_stages: int = 1
+    schedule: str = "1f1b"         # gpipe | 1f1b
+    num_microbatches: int = 0      # 0 -> num_stages
+    # Selective activation stashing (pipeline executor only): replay |
+    # full | every_k — how much of each stage's forward survives to its
+    # backward tick vs being re-derived.
+    stash_policy: str = "replay"
+    stash_every: int = 2           # k for stash_policy="every_k"
+    # Schedule-interleaved per-stage sync (ROADMAP item 1, TAGC-style).
+    overlap_sync: bool = False
+    chunk_bytes: int = 0           # flat-bucket chunk cap; 0 = per-collective
+
+
+PIPELINE_FIELDS = tuple(f.name for f in dataclasses.fields(PipelineConfig))

@@ -61,10 +61,16 @@ for the CommModel.fit calibration).
 """
 from __future__ import annotations
 
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.core import bucketing
+from repro.core.comm_model import ring_allreduce_seconds
+from repro.core.config import SyncConfig
+from repro.core.sync_executor import SyncExecutor
 from repro.dist.collectives import make_dp_pmean, shard_map_dp
 from repro.dist.sharding import param_pspecs, stage_param_pspecs
 from repro.launch.mesh import dp_axes, pipe_size
@@ -83,6 +89,10 @@ __all__ = [
     "bubble_fraction",
     "peak_inflight",
     "sync_slack_ticks",
+    "last_backward_tick",
+    "sync_ticks",
+    "OverlapPlan",
+    "plan_overlap",
     "stash_points",
     "stash_segments",
     "peak_activation_bytes",
@@ -127,8 +137,15 @@ def first_bwd_tick(name: str, S: int, M: int) -> int:
     return (M + S - 1) if name == "gpipe" else S
 
 
-def slot_table(name: str, S: int, M: int) -> list[list[tuple]]:
-    """table[s][t] = tuple of ("F"|"B", microbatch) actions at that tick."""
+def slot_table(name: str, S: int, M: int,
+               sync_plan: "OverlapPlan | None" = None) -> list[list[tuple]]:
+    """table[s][t] = tuple of ("F"|"B", microbatch) actions at that tick.
+
+    With a ``sync_plan`` (``plan_overlap``), each stage's tick row also
+    carries ("S", chunk_id) entries at the ticks where the overlapped
+    executor launches that stage's DP-sync chunks — the schedule-
+    interleaved tick table, SYNC ticks included.
+    """
     n = tick_count(name, S, M)
     table: list[list[tuple]] = [[() for _ in range(n)] for _ in range(S)]
     for s in range(S):
@@ -143,6 +160,11 @@ def slot_table(name: str, S: int, M: int) -> list[list[tuple]]:
                 if 0 <= j < M:
                     acts.append(("B", j))
             table[s][t] = tuple(acts)
+    if sync_plan is not None:
+        for s in range(S):
+            for t, chunk_ids in sync_plan.launches[s]:
+                table[s][t] = table[s][t] + tuple(
+                    ("S", ci) for ci in chunk_ids)
     return table
 
 
@@ -164,6 +186,8 @@ def peak_inflight(name: str, S: int, M: int) -> list[int]:
         live = peak = 0
         for acts in table[s]:
             for kind, _ in acts:
+                if kind not in ("F", "B"):   # "S" sync entries hold no ring slot
+                    continue
                 live += 1 if kind == "F" else -1
                 peak = max(peak, live)
         peaks.append(peak)
@@ -172,10 +196,108 @@ def peak_inflight(name: str, S: int, M: int) -> list[int]:
 
 def sync_slack_ticks(name: str, S: int, M: int) -> list[int]:
     """Ticks between stage s's last backward and stage 0's (Alg 2 slack)."""
-    table = slot_table(name, S, M)
-    last_b = [max(t for t, acts in enumerate(table[s])
-                  if any(k == "B" for k, _ in acts)) for s in range(S)]
+    last_b = last_backward_tick(name, S, M)
     return [last_b[0] - last_b[s] for s in range(S)]
+
+
+def last_backward_tick(name: str, S: int, M: int) -> list[int]:
+    """Tick of stage s's LAST microbatch backward — after it, the stage's
+    gradient accumulator is final (off-schedule VJPs add exact zeros), so
+    its DP sync may launch on the very next tick."""
+    table = slot_table(name, S, M)
+    return [max(t for t, acts in enumerate(table[s])
+                if any(k == "B" for k, _ in acts)) for s in range(S)]
+
+
+def sync_ticks(name: str, S: int, M: int) -> list[tuple[int, ...]]:
+    """Per-stage ticks eligible to carry SYNC work: strictly after the
+    stage's last backward, within the schedule's tick table. 1F1B drains
+    back-to-front, so stage s gets the trailing ``sync_slack_ticks[s]``
+    ticks (stage 0 gets none — its sync runs post-loop, as before)."""
+    last_b = last_backward_tick(name, S, M)
+    n = tick_count(name, S, M)
+    return [tuple(range(last_b[s] + 1, n)) for s in range(S)]
+
+
+@dataclasses.dataclass(frozen=True)
+class OverlapPlan:
+    """Schedule-interleaved sync plan emitted by ``plan_overlap``.
+
+    ``launches[s]`` is a tuple of ``(tick, chunk_ids)`` pairs: at global
+    ``tick`` the overlapped executor launches those ``sync_chunks`` of
+    stage s's bucket layout (psums for a stacked-PowerSGD shape group, or
+    one flat-bucket member run). ``residual[s]`` holds the chunk ids that
+    did not fit the stage's drain window and run post-loop (stage 0's
+    whole schedule is residual — zero slack). ``feasible[s]`` is the
+    Eq. 4 signal the DAC consumes: does stage s's estimated sync time fit
+    ``est_sync_seconds[0] + slack_seconds[s]``?
+    """
+
+    schedule: str
+    num_stages: int
+    num_microbatches: int
+    launches: tuple          # per stage: ((tick, (chunk_id, ...)), ...)
+    residual: tuple          # per stage: (chunk_id, ...)
+    slack_seconds: tuple     # per stage, from simulate_schedule
+    est_sync_seconds: tuple  # per stage, CommModel estimate (or tick units)
+    feasible: tuple          # per stage: bool
+
+    def launch_ticks(self, s: int) -> tuple[int, ...]:
+        return tuple(t for t, _ in self.launches[s])
+
+
+def plan_overlap(name: str, S: int, M: int, splans, *,
+                 t_f: float = 1.0, t_b: float = 1.0,
+                 comm=None) -> OverlapPlan:
+    """Plan which sync chunks launch at which drain ticks (the planner).
+
+    Greedy per stage: walk the stage's eligible drain ticks front-to-back
+    and pack chunks into each tick until the tick's time budget (``t_b``,
+    one backward's worth of compute to hide under) is spent; whatever is
+    left spills to the post-loop residual. Chunk times come from the
+    fitted ``CommModel`` when given (``ring_allreduce_seconds`` of the
+    chunk's wire bytes over the model's ICI bandwidth); without one each
+    chunk counts a full tick (the unit model — one chunk per drain tick).
+
+    The feasibility signal compares each stage's total estimated sync
+    time against stage 0's plus the stage's measured slack — exactly the
+    Eq. 4 budget ``DAC._feasible_clamp`` enforces on ranks.
+    """
+    sim = simulate_schedule(name, S, M, t_f, t_b)
+    slack = sim["slack_seconds"]
+    ticks = sync_ticks(name, S, M)
+    launches, residual, est = [], [], []
+    for s in range(S):
+        d = splans.d_of_stage[s]
+        chunks = bucketing.sync_chunks(splans.layouts[d])
+        if comm is not None:
+            times = [ring_allreduce_seconds(c.wire_bytes(), comm.world,
+                                            comm.hw.ici_bw) for c in chunks]
+        else:
+            times = [t_b] * len(chunks)
+        est.append(sum(times))
+        per_tick: list[list[int]] = [[] for _ in ticks[s]]
+        rest: list[int] = []
+        ti, used = 0, 0.0
+        for ci, ct in enumerate(times):
+            if ti >= len(per_tick):
+                rest.append(ci)
+                continue
+            per_tick[ti].append(ci)
+            used += ct
+            if used >= t_b - 1e-12:
+                ti, used = ti + 1, 0.0
+        launches.append(tuple((ticks[s][i], tuple(ids))
+                              for i, ids in enumerate(per_tick) if ids))
+        residual.append(tuple(rest))
+    return OverlapPlan(
+        schedule=name, num_stages=S, num_microbatches=M,
+        launches=tuple(launches), residual=tuple(residual),
+        slack_seconds=tuple(float(t) for t in slack),
+        est_sync_seconds=tuple(est),
+        feasible=tuple(est[s] <= est[0] + slack[s] + 1e-9
+                       for s in range(S)),
+    )
 
 
 def stash_points(policy: str, n_units: int, stash_every: int = 2
@@ -256,7 +378,8 @@ def boundary_nbytes(part, mb: dict) -> int:
 
 
 def simulate_schedule(name: str, S: int, M: int,
-                      t_f: float = 1.0, t_b: float = 1.0) -> dict:
+                      t_f: float = 1.0, t_b: float = 1.0,
+                      splans=None, comm=None) -> dict:
     """Dependency-driven timing of a schedule with measured tick costs.
 
     The unit-tick analytics above assume B-cost == F-cost; real backwards
@@ -276,6 +399,14 @@ def simulate_schedule(name: str, S: int, M: int,
     M * (t_f + t_b) seconds of the same makespan. With t_f == t_b == 1
     it matches ``bubble_fraction`` and the slack equals
     ``sync_slack_ticks`` (the calibration degenerates to the unit model).
+
+    With ``splans`` (per-stage bucket layouts from ``make_stage_plans``)
+    the simulation is also the OVERLAP PLANNER: the returned dict gains
+    ``out["overlap"]``, the :class:`OverlapPlan` from ``plan_overlap``
+    driven by this run's measured (t_f, t_b) — which tick each stage's
+    sync chunks launch at, what spills to the residual, and the per-stage
+    Eq. 4 feasibility signal (chunk times from the fitted ``comm`` model
+    when given).
     """
     table = slot_table(name, S, M)
     end_f: dict[tuple[int, int], float] = {}
@@ -297,11 +428,15 @@ def simulate_schedule(name: str, S: int, M: int,
     makespan = max(free)
     busy = M * (t_f + t_b)
     last_b = [max(end_b[(s, j)] for j in range(M)) for s in range(S)]
-    return {
+    out = {
         "makespan": makespan,
         "bubble_fraction": 1.0 - busy / makespan,
         "slack_seconds": [last_b[0] - last_b[s] for s in range(S)],
     }
+    if splans is not None:
+        out["overlap"] = plan_overlap(name, S, M, splans,
+                                      t_f=t_f, t_b=t_b, comm=comm)
+    return out
 
 
 # ------------------------------------------------------------- step builder
@@ -350,13 +485,36 @@ def make_pipeline_train_step(model: Model, mesh, cfg):
     n_stash = len(segs) - 1
     adam_cfg = cfg.adam
 
+    sync_cfg = getattr(cfg, "sync", None) or SyncConfig(
+        use_kernels=getattr(cfg, "use_kernels", False))
+    overlap = bool(getattr(cfg, "overlap_sync", False))
+
     # Static stage-plan schedule from the flat plan + the local leaf shapes.
     params_shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
     stage_shapes = jax.eval_shape(
         lambda p: part.partition_params(p)[0], params_shapes)
     splans = psync.make_stage_plans(
         cfg.policy_plan, S, psync.stage_local_leaves(stage_shapes),
+        bucket_bytes=sync_cfg.bucket_bytes,
+        chunk_bytes=int(getattr(cfg, "chunk_bytes", 0) or 0),
         local_path=part.local_leaf_path)
+    sync_exec = SyncExecutor(
+        sync_cfg, mode="per-stage-overlapped" if overlap else "per-stage",
+        splans=splans)
+    if overlap:
+        # The planner: which drain tick launches which sync chunks. The
+        # tick table is static, so the launch plan specializes the traced
+        # loop at build time — SYNC ticks become real per-rank branches
+        # (one lax.switch on the pipe index per launching tick) instead of
+        # every rank running every distinct schedule where-masked.
+        oplan = plan_overlap(name, S, M, splans)
+        chunks_by_d = tuple(bucketing.sync_chunks(l) for l in splans.layouts)
+        launch_at: dict[int, dict[int, tuple[int, ...]]] = {}
+        for s_ in range(S):
+            for t_, ids_ in oplan.launches[s_]:
+                launch_at.setdefault(t_, {})[s_] = ids_
+    else:
+        oplan, launch_at = None, {}
 
     R = ring_slots(name, S, M)
     n_ticks = tick_count(name, S, M)
@@ -436,6 +594,52 @@ def make_pipeline_train_step(model: Model, mesh, cfg):
         gacc_s = f32z(stage_p)
         gacc_sh = f32z(shared_p)
 
+        pmean_dp = make_dp_pmean(axes_dp)
+        kps, stage_def = jax.tree_util.tree_flatten_with_path(stage_p)
+        spaths = tuple(jax.tree_util.keystr(kp) for kp, _ in kps)
+        pdt = {p: l.dtype for p, (_, l) in zip(spaths, kps)}
+        sync_carry = None
+        if overlap:
+            # In-loop sync carry: synced stage leaves (wire dtype, zeros
+            # until their chunk runs) + the compressor state. Every
+            # lax.switch branch returns this exact pytree structure.
+            sync_carry = (
+                {p: jnp.zeros(l.shape, l.dtype)
+                 for p, (_, l) in zip(spaths, kps)},
+                comp,
+            )
+
+        def launch_sync(t, carry, gacc):
+            """Launch tick t's planned chunks: one lax.switch on the pipe
+            index. All DP peers of a stage share the index, hence the
+            branch, so the chunk psums stay collective-consistent inside
+            the stage's DP group while other stages run real F/B work.
+            A stage's gacc is final here — its last backward already
+            retired (plan invariant; off-schedule VJPs add exact zeros)."""
+            here = launch_at[t]
+            gvals = jax.tree_util.tree_leaves(gacc)
+            g_by_path = {p: g.astype(pdt[p]) for p, g in zip(spaths, gvals)}
+
+            def mk(s):
+                ids = here.get(s, ())
+                if not ids:
+                    return lambda c: c
+                d = splans.d_of_stage[s]
+                need = sorted({p for ci in ids
+                               for p in chunks_by_d[d][ci].member_paths})
+
+                def run(c, ids=ids, d=d, need=need):
+                    parts, comp_c = c
+                    gb = {p: g_by_path[p] for p in need}
+                    upd, comp_c = sync_exec.run_chunks(
+                        d, ids, gb, comp_c, pmean_dp)
+                    parts = {p: upd.get(p, parts[p]) for p in spaths}
+                    return parts, comp_c
+
+                return run
+
+            return lax.switch(s_idx, [mk(s) for s in range(S)], carry)
+
         for t in range(n_ticks):
             if t < M + S - 1:
                 off = t - s_idx
@@ -491,8 +695,9 @@ def make_pipeline_train_step(model: Model, mesh, cfg):
                     gacc_sh = tmap(add32, gacc_sh, gsh)
                 bwd_recv = tmap(lambda a: lax.ppermute(a, "pipe", bwd_perm),
                                 ct_carry)
+            if overlap and t in launch_at:
+                sync_carry = launch_sync(t, sync_carry, gacc_s)
 
-        pmean_dp = make_dp_pmean(axes_dp)
         psum_pipe = lambda x: lax.psum(x, "pipe")
         loss = pmean_dp(psum_pipe(loss_acc) * inv_M)
 
@@ -504,9 +709,40 @@ def make_pipeline_train_step(model: Model, mesh, cfg):
         gacc_sh = tmap(lambda g, p: psum_pipe(g).astype(p.dtype),
                        gacc_sh, shared_p)
 
-        synced_s, synced_sh, comp2 = psync.stage_sync_grads(
-            gacc_s, gacc_sh, comp, splans, pmean_dp, s_idx,
-            use_kernels=cfg.use_kernels)
+        if overlap:
+            # Residual chunks (whatever the drain window couldn't hide —
+            # all of stage 0's, whose slack is zero) run post-loop in the
+            # same per-stage switch; then the synced leaves reassemble in
+            # flatten order and the shared leaves finish exactly as the
+            # monolithic path does.
+            g_by_path = dict(zip(spaths, jax.tree_util.tree_leaves(gacc_s)))
+
+            def fin(s):
+                ids = oplan.residual[s]
+                d = splans.d_of_stage[s]
+                need = sorted({p for ci in ids
+                               for p in chunks_by_d[d][ci].member_paths})
+
+                def run(c, ids=ids, d=d, need=need):
+                    parts, comp_c = c
+                    if ids:
+                        gb = {p: g_by_path[p] for p in need}
+                        upd, comp_c = sync_exec.run_chunks(
+                            d, ids, gb, comp_c, pmean_dp)
+                        parts = {p: upd.get(p, parts[p]) for p in spaths}
+                    return parts, comp_c
+
+                return run
+
+            parts_f, comp2 = lax.switch(
+                s_idx, [fin(s) for s in range(S)], sync_carry)
+            synced_s = jax.tree_util.tree_unflatten(
+                stage_def, [parts_f[p] for p in spaths])
+            synced_sh = sync_exec.sync_shared(gacc_sh, pmean_dp)
+        else:
+            synced_s, synced_sh, comp2 = sync_exec.sync(
+                gacc_s, comp, pmean_dp, shared_grads=gacc_sh,
+                my_stage=s_idx)
 
         if cfg.measure_entropy:
             from repro.core.entropy import entropy_from_moments, sample_moments

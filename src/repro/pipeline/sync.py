@@ -45,6 +45,8 @@ __all__ = [
     "StagePlans",
     "make_stage_plans",
     "stage_sync_grads",
+    "stage_sync_chunks",
+    "sync_shared_grads",
     "stage_wire_bytes",
     "init_pipeline_comp_state",
     "resize_pipeline_comp_state",
@@ -93,6 +95,7 @@ def make_stage_plans(
     num_stages: int,
     local_leaves: list[tuple[str, tuple[int, ...]]],
     bucket_bytes: int = bucketing.DEFAULT_BUCKET_BYTES,
+    chunk_bytes: int = 0,
     local_path: Callable[[str], tuple[int, str] | None] = local_leaf_path,
 ) -> StagePlans:
     """Split a flat-layout plan into per-stage local plans + layouts.
@@ -131,7 +134,8 @@ def make_stage_plans(
             distinct.append((sp, (s,)))
 
     layouts = tuple(
-        bucketing.make_bucket_layout(local_leaves, p, bucket_bytes)
+        bucketing.make_bucket_layout(local_leaves, p, bucket_bytes,
+                                     chunk_bytes)
         for p, _ in distinct
     )
     return StagePlans(
@@ -183,12 +187,53 @@ def stage_sync_grads(
             out_stage = jax.tree_util.tree_map(
                 lambda a, b: jnp.where(mine, a, b), synced_d, out_stage)
 
-    # Shared leaves are never compressed (DEFAULT_EXCLUDE covers embeddings,
-    # head, norms), so they move as one flat-bucket schedule, once.
+    synced_shared = sync_shared_grads(shared_grads, psum_mean)
+    return out_stage, synced_shared, new_state
+
+
+def sync_shared_grads(shared_grads: Any, psum_mean: PsumFn) -> Any:
+    """DP sync of the pipe-replicated shared leaves (embeddings, head,
+    norms). Shared leaves are never compressed (DEFAULT_EXCLUDE), so they
+    move as one flat-bucket schedule — both the monolithic and the
+    overlapped executor finish with exactly this call."""
     shared_layout = bucketing.layout_for_tree(shared_grads, NO_COMPRESSION)
     synced_shared, _ = bucketing.bucketed_sync_grads(
         shared_grads, {}, shared_layout, psum_mean)
-    return out_stage, synced_shared, new_state
+    return synced_shared
+
+
+def stage_sync_chunks(
+    grads_by_path: dict[str, jax.Array],
+    comp_state: dict[str, LowRankState],
+    splans: StagePlans,
+    d: int,
+    chunk_ids,
+    psum_mean: PsumFn,
+    use_kernels: bool = False,
+) -> tuple[dict[str, jax.Array], dict[str, LowRankState]]:
+    """Run a subset of distinct schedule ``d``'s chunks (overlap primitive).
+
+    The pipelined executor calls this inside a per-stage ``lax.switch``
+    branch: every DP peer of a stage shares the same pipe index, hence the
+    same branch, so the chunk collectives stay SPMD-consistent across the
+    stage's DP group. ``grads_by_path`` holds the rank's stage-local grads
+    in wire (param) dtype; only the chunks' members are read. Returns
+    (synced leaves by local path, the full comp dict with schedule ``d``'s
+    touched ``p{d}:group`` keys replaced).
+    """
+    prefix = f"p{d}:"
+    sub = _sub_state(comp_state, prefix)
+    chunks = bucketing.sync_chunks(splans.layouts[d])
+    new_state = dict(comp_state)
+    updates: dict[str, jax.Array] = {}
+    for ci in chunk_ids:
+        upd, st = bucketing.sync_chunk_grads(
+            grads_by_path, sub, chunks[ci], psum_mean,
+            use_kernels=use_kernels)
+        updates.update(upd)
+        for k, v in st.items():
+            new_state[prefix + k] = v
+    return updates, new_state
 
 
 # ----------------------------------------------------------------- accounting

@@ -27,38 +27,74 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.core.compressor import CompressionPlan, sync_grads
+from repro.core.compressor import CompressionPlan
+from repro.core.config import SYNC_FIELDS, alias_property, resolve_embedded
 from repro.core.entropy import GDSConfig, grads_entropy
+from repro.core.sync_executor import SyncExecutor
 from repro.dist.collectives import make_dp_pmean, shard_map_dp
 from repro.dist.sharding import batch_pspec, param_shardings
 from repro.launch.mesh import dp_axes
 from repro.models.model import Model
 from repro.optim import adam
+from repro.pipeline.config import PIPELINE_FIELDS
 
 __all__ = ["TrainStepConfig", "make_train_step", "make_serve_step",
            "make_prefill_step", "TrainState"]
 
 
-@dataclasses.dataclass(frozen=True)
+@dataclasses.dataclass(frozen=True, init=False)
 class TrainStepConfig:
+    """Step-builder config.
+
+    Execution-surface knobs live in the embedded configs: ``pipeline``
+    (``repro.pipeline.PipelineConfig`` — stages, schedule, microbatching,
+    stashing, sync overlap) and ``sync`` (``repro.core.SyncConfig`` —
+    bucketing and kernels for the DP sync). The old flat fields
+    (``num_stages``, ``schedule``, ``bucketed``, ``use_kernels``, ...)
+    are still accepted as init kwargs and readable as properties —
+    deprecated aliases for ``cfg.pipeline.*`` / ``cfg.sync.*``.
+    """
+
     mode: str = "dp_tp"            # dp_tp | auto
     policy_plan: CompressionPlan = CompressionPlan(ranks=())
     gds: GDSConfig = GDSConfig()
     measure_entropy: bool = True
-    use_kernels: bool = False
-    bucketed: bool | None = None   # DP sync executor; None = infer from state
     remat: bool = True             # activation checkpointing over blocks
-    # Pipeline parallelism (repro.pipeline): > 1 routes make_train_step to
-    # the pipelined builder; the mesh must carry a matching 'pipe' axis.
-    num_stages: int = 1
-    schedule: str = "1f1b"         # gpipe | 1f1b
-    num_microbatches: int = 0      # 0 -> num_stages
-    # Selective activation stashing (pipeline executor only; the flat step
-    # has no microbatch rings): replay | full | every_k — how much of each
-    # stage's forward survives to its backward tick vs being re-derived.
-    stash_policy: str = "replay"
-    stash_every: int = 2           # k for stash_policy="every_k"
+    # Pipeline parallelism + sync-executor surfaces (resolved in __init__;
+    # pipeline.num_stages > 1 routes make_train_step to the pipelined
+    # builder — the mesh must carry a matching 'pipe' axis).
+    pipeline: object = None        # repro.pipeline.PipelineConfig
+    sync: object = None            # repro.core.SyncConfig
     adam: adam.AdamConfig = dataclasses.field(default_factory=adam.AdamConfig)
+
+    def __init__(self, mode: str = "dp_tp",
+                 policy_plan: CompressionPlan = CompressionPlan(ranks=()),
+                 gds: GDSConfig | None = None, measure_entropy: bool = True,
+                 remat: bool = True, pipeline=None, sync=None,
+                 adam=None, **legacy) -> None:
+        pipeline, sync = resolve_embedded(pipeline, sync, legacy,
+                                          where="TrainStepConfig")
+        if adam is None:
+            from repro.optim.adam import AdamConfig
+            adam = AdamConfig()
+        set_ = lambda k, v: object.__setattr__(self, k, v)
+        set_("mode", mode)
+        set_("policy_plan", policy_plan)
+        set_("gds", gds if gds is not None else GDSConfig())
+        set_("measure_entropy", measure_entropy)
+        set_("remat", remat)
+        set_("pipeline", pipeline)
+        set_("sync", sync)
+        set_("adam", adam)
+
+
+# Deprecated flat-field aliases (kept for existing call sites/tests); the
+# canonical homes are cfg.pipeline.* and cfg.sync.*.
+for _name in PIPELINE_FIELDS:
+    setattr(TrainStepConfig, _name, alias_property("pipeline", _name))
+for _name in SYNC_FIELDS:
+    setattr(TrainStepConfig, _name, alias_property("sync", _name))
+del _name
 
 
 class TrainState(dict):
@@ -94,6 +130,7 @@ def make_train_step(model: Model, mesh, cfg: TrainStepConfig):
     loss_fn = _loss_with_remat(model, cfg.remat)
 
     manual = cfg.mode == "dp_tp" and bool(axes)
+    sync_exec = SyncExecutor(cfg.sync, mode="flat", plan=cfg.policy_plan)
 
     def local_step(state, batch):
         params = state["params"]
@@ -111,9 +148,7 @@ def make_train_step(model: Model, mesh, cfg: TrainStepConfig):
         (loss, mets), grads = jax.value_and_grad(lf, has_aux=True)(params)
         pmean = make_dp_pmean(axes) if manual else (lambda x: x)
         loss = pmean(loss)
-        synced, comp = sync_grads(grads, comp_in, cfg.policy_plan,
-                                  pmean, use_kernels=cfg.use_kernels,
-                                  bucketed=cfg.bucketed)
+        synced, comp = sync_exec.sync(grads, comp_in, pmean)
         entropy = (grads_entropy(synced, cfg.gds)
                    if cfg.measure_entropy else jnp.zeros((), jnp.float32))
         opt_state = adam.AdamState(state["opt_step"], state["opt_m"], state["opt_v"])

@@ -31,6 +31,8 @@ from repro.core import (
     resize_compressor_state,
 )
 from repro.core.bucketing import bucketing_supported, make_bucket_layout
+from repro.core.config import SYNC_FIELDS, SyncConfig, alias_property, \
+    resolve_embedded
 from repro.models.model import Model
 from repro.optim import adam
 from repro.train import checkpoint as ckpt_mod
@@ -41,10 +43,25 @@ from repro.train.step import (
     state_shardings,
 )
 from repro.launch.mesh import dp_axes, pipe_size
+from repro.pipeline.config import PIPELINE_FIELDS
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(init=False)
 class TrainerConfig:
+    """Host-loop config.
+
+    The execution knobs live in the embedded configs: ``pipeline``
+    (``repro.pipeline.PipelineConfig`` — schedule, microbatching,
+    stashing, sync overlap) and ``sync`` (``repro.core.SyncConfig`` —
+    bucketing/kernels; ``bucketed=None`` resolves to "bucketed where the
+    mesh supports it", matching the old ``bucketed=True`` default — the
+    stacked group state cannot mirror per-leaf TP specs, so TP>1 meshes
+    drop to the per-leaf executor). The old flat fields (``schedule``,
+    ``bucketed``, ``use_kernels``, ...) remain accepted as init kwargs
+    and readable/settable as properties, deprecated in favor of
+    ``tcfg.pipeline.*`` / ``tcfg.sync.*``.
+    """
+
     total_steps: int = 1000
     log_every: int = 50
     ckpt_every: int = 0             # 0 = no checkpoints
@@ -52,24 +69,41 @@ class TrainerConfig:
     min_compress_dim: int = 64
     measure_entropy: bool = True
     remat: bool = False
-    use_kernels: bool = False
-    # Bucketed DP sync (core/bucketing.py): O(groups + buckets) collectives
-    # instead of O(leaves). Effective only on TP=1 meshes — stacked group
-    # state cannot mirror per-leaf TP specs, and a replicated EF residual
-    # forces gradient all-gathers (see state_shardings) — so the Trainer
-    # drops to the per-leaf executor when the mesh has a model axis > 1.
-    bucketed: bool = True
-    # Pipeline parallelism (used when the mesh has a 'pipe' axis and the
-    # EDGC config asks for num_stages > 1).
-    schedule: str = "1f1b"         # gpipe | 1f1b
-    num_microbatches: int = 0      # 0 -> num_stages
-    # Selective activation stashing for the pipelined executor:
-    # replay (re-derive each stage forward in its backward, today's
-    # memory floor) | full (stash every inter-unit carry) | every_k
-    # (stash every stash_every-th unit boundary).
-    stash_policy: str = "replay"
-    stash_every: int = 2
+    pipeline: Any = None            # repro.pipeline.PipelineConfig
+    sync: Any = None                # repro.core.SyncConfig
     adam: adam.AdamConfig = dataclasses.field(default_factory=adam.AdamConfig)
+
+    def __init__(self, total_steps: int = 1000, log_every: int = 50,
+                 ckpt_every: int = 0, ckpt_path: str = "ckpt/state",
+                 min_compress_dim: int = 64, measure_entropy: bool = True,
+                 remat: bool = False, pipeline=None, sync=None,
+                 adam=None, **legacy) -> None:
+        pipeline, sync = resolve_embedded(pipeline, sync, legacy,
+                                          where="TrainerConfig")
+        self.total_steps = total_steps
+        self.log_every = log_every
+        self.ckpt_every = ckpt_every
+        self.ckpt_path = ckpt_path
+        self.min_compress_dim = min_compress_dim
+        self.measure_entropy = measure_entropy
+        self.remat = remat
+        self.pipeline = pipeline
+        self.sync = sync
+        if adam is None:
+            from repro.optim.adam import AdamConfig
+            adam = AdamConfig()
+        self.adam = adam
+
+
+# Deprecated flat-field aliases; TrainerConfig is mutable, so writes pass
+# through too (replacing the embedded frozen config).
+for _name in PIPELINE_FIELDS:
+    setattr(TrainerConfig, _name,
+            alias_property("pipeline", _name, settable=True))
+for _name in SYNC_FIELDS:
+    setattr(TrainerConfig, _name, alias_property("sync", _name,
+                                                 settable=True))
+del _name
 
 
 class Trainer:
@@ -109,6 +143,27 @@ class Trainer:
                 f"mesh pipe axis size {pipe_size(mesh)} != "
                 f"num_stages={edgc_cfg.num_stages}")
 
+        # The ONE canonical config pair every step build sees (the step
+        # builder receives these exact objects, not copied fields): the
+        # trainer's PipelineConfig pinned to the executed stage count, and
+        # its SyncConfig with ``bucketed`` resolved against the mesh.
+        pcfg = tcfg.pipeline
+        s_exec = edgc_cfg.num_stages if self.pipelined else 1
+        if pcfg.num_stages != s_exec:
+            pcfg = dataclasses.replace(pcfg, num_stages=s_exec)
+        self.pipeline_cfg = pcfg
+        if self.pipelined:
+            # pipelined sync is always the per-stage bucketed executor;
+            # the flag is only meaningful on the flat path
+            self.sync_cfg = (tcfg.sync if tcfg.sync.bucketed is None
+                             else dataclasses.replace(tcfg.sync,
+                                                      bucketed=None))
+        else:
+            self._bucketed = ((tcfg.sync.bucketed is not False)
+                              and bucketing_supported(mesh))
+            self.sync_cfg = dataclasses.replace(tcfg.sync,
+                                                bucketed=self._bucketed)
+
         self._comp_key = jax.random.fold_in(key, 123)
         if self.pipelined:
             self._init_pipelined_state(params, jax.random.fold_in(key, 99),
@@ -118,10 +173,10 @@ class Trainer:
             # Stacked (group-keyed) compressor state + the bucketed sync
             # executor: O(shape groups + flat buckets) DP collectives
             # instead of O(leaves). TP>1 keeps the per-leaf executor (see
-            # TrainerConfig.bucketed).
-            self._bucketed = tcfg.bucketed and bucketing_supported(mesh)
+            # TrainerConfig.sync / SyncConfig.bucketed).
             self._layout = (make_bucket_layout(self.leaves,
-                                               self.controller.plan)
+                                               self.controller.plan,
+                                               self.sync_cfg.bucket_bytes)
                             if self._bucketed else None)
             comp = init_compressor_state(params, self.controller.plan,
                                          jax.random.fold_in(key, 99),
@@ -131,7 +186,22 @@ class Trainer:
                           "opt_step": ost.step, "comp": comp}
         self._shard_state()
 
+        # Overlapped per-stage sync: hand the DAC the schedule's measured
+        # Eq. 4 slack so Algorithm 2 aligns (and feasibility-clamps) ranks
+        # against the geometry the overlap planner actually schedules.
+        self.overlap_plan = None
+        if self.pipelined and self.pipeline_cfg.overlap_sync:
+            from repro.pipeline.schedule import plan_overlap
+            s_count = self.pipeline_cfg.num_stages
+            mb = self.pipeline_cfg.num_microbatches or s_count
+            self.overlap_plan = plan_overlap(
+                self.pipeline_cfg.schedule, s_count, mb, self._splans)
+            t_mb = self.controller.dac.t_micro_back
+            self.controller.set_overlap_feedback(
+                [t * t_mb for t in self.overlap_plan.slack_seconds])
+
         self._step_cache: dict[Any, Any] = {}
+        self.step_configs: dict[Any, TrainStepConfig] = {}
         self.history: list[dict] = []
         self.bytes_synced = 0           # exact DP wire bytes so far
         self.bytes_full = 0             # what no-compression would have moved
@@ -153,6 +223,8 @@ class Trainer:
         ost = adam.init({"stage": stage_p, "shared": shared_p}, acfg)
         self._splans = psync.make_stage_plans(
             self.controller.plan, S, psync.stage_local_leaves(stage_p),
+            bucket_bytes=self.sync_cfg.bucket_bytes,
+            chunk_bytes=self.pipeline_cfg.chunk_bytes,
             local_path=self._part.local_leaf_path)
         comp = psync.init_pipeline_comp_state(
             params, self.controller.plan, comp_key, self._splans)
@@ -182,20 +254,19 @@ class Trainer:
         plan = self.controller.plan
         key = (plan, measure_entropy)
         if key not in self._step_cache:
+            # The step builder sees the trainer's canonical embedded
+            # configs BY IDENTITY (no field copying): one source of truth
+            # for the pipeline/sync surface across host loop and step.
             scfg = TrainStepConfig(
                 mode="dp_tp", policy_plan=plan,
                 gds=self.edgc_cfg.gds,
                 measure_entropy=measure_entropy,
-                use_kernels=self.tcfg.use_kernels,
-                bucketed=None if self.pipelined else self._bucketed,
                 remat=self.tcfg.remat,
-                num_stages=self.edgc_cfg.num_stages if self.pipelined else 1,
-                schedule=self.tcfg.schedule,
-                num_microbatches=self.tcfg.num_microbatches,
-                stash_policy=self.tcfg.stash_policy,
-                stash_every=self.tcfg.stash_every,
+                pipeline=self.pipeline_cfg,
+                sync=self.sync_cfg,
                 adam=self.tcfg.adam,
             )
+            self.step_configs[key] = scfg
             raw = make_train_step(self.model, self.mesh, scfg)
             self._step_cache[key] = jax.jit(
                 raw,
@@ -219,6 +290,8 @@ class Trainer:
             new_splans = psync.make_stage_plans(
                 plan, S,
                 psync.stage_local_leaves(self.state["stage_params"]),
+                bucket_bytes=self.sync_cfg.bucket_bytes,
+                chunk_bytes=self.pipeline_cfg.chunk_bytes,
                 local_path=self._part.local_leaf_path)
             comp_host = jax.device_get(self.state["comp"])
             fresh = psync.resize_pipeline_comp_state(
@@ -231,7 +304,8 @@ class Trainer:
             return
         comp_host = jax.tree_util.tree_map(lambda a: a[0], self.state["comp"])
         if self._bucketed:
-            new_layout = make_bucket_layout(self.leaves, plan)
+            new_layout = make_bucket_layout(self.leaves, plan,
+                                            self.sync_cfg.bucket_bytes)
             fresh = resize_compressor_state(
                 comp_host, plan, self._comp_key,
                 old_layout=self._layout, new_layout=new_layout,

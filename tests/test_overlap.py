@@ -1,0 +1,435 @@
+"""Schedule-interleaved DP sync + the unified PipelineConfig/SyncConfig
+surface: planner invariants (SYNC ticks never precede a stage's last
+backward), chunked-bucket reassembly parity vs the monolithic schedule,
+config shims / embedded-identity regressions, DAC overlap feedback, and
+— in a fake-device subprocess — overlapped-1F1B loss parity with the
+flat trainer plus the wire ledger implied by the DAC ranks."""
+import dataclasses
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    CommModel, CompressionPlan, EDGCConfig, LeafInfo, NO_COMPRESSION,
+    SyncConfig, classify_leaves, init_compressor_state, make_plan,
+    sync_grads,
+)
+from repro.core import bucketing
+from repro.core.bucketing import make_bucket_layout, sync_chunks
+from repro.core.cqm import CQM
+from repro.core.dac import DAC, DACConfig, stage_aligned_ranks
+from repro.core.sync_executor import SyncExecutor
+from repro.models.model import ModelConfig, build_model
+from repro.pipeline import PipelineConfig
+from repro.pipeline.schedule import (
+    last_backward_tick, plan_overlap, simulate_schedule, slot_table,
+    sync_slack_ticks, sync_ticks, tick_count,
+)
+from repro.pipeline.sync import make_stage_plans, stage_wire_bytes
+from repro.train.step import TrainStepConfig
+from repro.train.trainer import TrainerConfig
+
+TINY = ModelConfig(name="ovl", family="dense", num_layers=2, d_model=128,
+                   num_heads=4, num_kv_heads=2, d_ff=256, vocab_size=512,
+                   num_stages=2)
+
+PLANS = {
+    "none": {},
+    "fixed": dict(fixed_rank=8),
+    "optimus": dict(fixed_rank=8, num_stages=2),
+    "edgc": dict(stage_ranks=[4, 16], num_stages=2),
+}
+
+
+def _setup(policy="fixed", **overrides):
+    model = build_model(TINY)
+    params = model.init(jax.random.PRNGKey(0))
+    leaves = classify_leaves(params, TINY.num_layers, 2, min_dim=64)
+    kw = dict(PLANS[policy]); kw.update(overrides)
+    return params, leaves, make_plan(policy, leaves, **kw)
+
+
+def _stage_world(num_stages=2, chunk_bytes=0, ranks=(4, 16)):
+    """Synthetic uniform-stage world with the ``['stages'][i]`` paths the
+    adapters emit: per-stage local template [w, u, b, t], no shared
+    leaves, stage s compressed at ``ranks[s]``."""
+    local = [("['w']", (64, 128)), ("['u']", (64, 128)),
+             ("['b']", (128,)), ("['t']", (8192,))]
+    g_ranks, infos = [], []
+    for s in range(num_stages):
+        for lp, shape in local:
+            path = f"['stages'][{s}]{lp}"
+            infos.append(LeafInfo(path=path, shape=shape, stage=s,
+                                  eligible=len(shape) == 2))
+            if len(shape) == 2:
+                g_ranks.append((path, ranks[s % len(ranks)]))
+    plan = CompressionPlan(ranks=tuple(g_ranks))
+    splans = make_stage_plans(plan, num_stages, local,
+                              chunk_bytes=chunk_bytes)
+    return splans, infos, plan
+
+
+# ------------------------------------------------------------- the planner
+@pytest.mark.parametrize("name", ["gpipe", "1f1b"])
+@pytest.mark.parametrize("S,M", [(2, 2), (2, 8), (4, 4), (4, 16)])
+def test_sync_ticks_strictly_after_last_backward(name, S, M):
+    last_b = last_backward_tick(name, S, M)
+    ticks = sync_ticks(name, S, M)
+    n = tick_count(name, S, M)
+    table = slot_table(name, S, M)
+    for s in range(S):
+        assert all(last_b[s] < t < n for t in ticks[s])
+        # the stage really is done at its recorded last backward
+        assert any(k == "B" for k, _ in table[s][last_b[s]])
+        assert all(k != "B" for t in range(last_b[s] + 1, n)
+                   for k, _ in table[s][t])
+        # the drain window IS the Alg-2 slack
+        assert len(ticks[s]) == sync_slack_ticks(name, S, M)[s]
+
+
+@pytest.mark.parametrize("name", ["gpipe", "1f1b"])
+def test_plan_overlap_partitions_chunks_in_drain(name):
+    S, M = 4, 8
+    splans, _, _ = _stage_world(num_stages=S, chunk_bytes=4 << 10)
+    plan = plan_overlap(name, S, M, splans)
+    last_b = last_backward_tick(name, S, M)
+    for s in range(S):
+        n_chunks = len(sync_chunks(splans.layouts[splans.d_of_stage[s]]))
+        launched = [ci for _, ids in plan.launches[s] for ci in ids]
+        # every chunk launches exactly once: in the drain or post-loop
+        assert sorted(launched + list(plan.residual[s])) == list(
+            range(n_chunks))
+        # SYNC ticks never precede the stage's last backward
+        assert all(t > last_b[s] for t in plan.launch_ticks(s))
+        assert set(plan.launch_ticks(s)) <= set(sync_ticks(name, S, M)[s])
+    # stage 0 has zero slack: its whole schedule is post-loop residual
+    assert plan.launches[0] == ()
+    assert plan.slack_seconds[0] == 0.0
+    # unit model, identical layouts: est[s] <= est[0] + slack[s] trivially
+    assert plan.feasible == (True,) * S
+
+
+def test_plan_overlap_feasibility_with_comm_model():
+    S, M = 4, 8
+    splans, _, _ = _stage_world(num_stages=S)
+    comm = CommModel.from_shapes([(128, 256)] * 8, world=4)
+    plan = plan_overlap("1f1b", S, M, splans, comm=comm)
+    sim = simulate_schedule("1f1b", S, M)
+    assert plan.slack_seconds == tuple(float(t) for t in
+                                       sim["slack_seconds"])
+    for s in range(S):
+        assert plan.est_sync_seconds[s] > 0
+        assert plan.feasible[s] == (
+            plan.est_sync_seconds[s]
+            <= plan.est_sync_seconds[0] + plan.slack_seconds[s] + 1e-9)
+
+
+def test_slot_table_carries_sync_entries():
+    S, M = 4, 8
+    splans, _, _ = _stage_world(num_stages=S, chunk_bytes=4 << 10)
+    plan = plan_overlap("1f1b", S, M, splans)
+    table = slot_table("1f1b", S, M, sync_plan=plan)
+    last_b = last_backward_tick("1f1b", S, M)
+    for s in range(S):
+        seen = sorted(ci for acts in table[s] for k, ci in acts if k == "S")
+        launched = sorted(ci for _, ids in plan.launches[s] for ci in ids)
+        assert seen == launched
+        for t, acts in enumerate(table[s]):
+            if any(k == "S" for k, _ in acts):
+                assert t > last_b[s]
+
+
+# --------------------------------------------------- chunked sync parity
+@pytest.mark.parametrize("policy", ["none", "fixed", "optimus", "edgc"])
+def test_chunked_reassembly_matches_monolithic(policy):
+    """Running every chunk reproduces the monolithic bucketed sync bit for
+    bit — grads, EF residual and warm-start Q — for all four policies."""
+    params, leaves, plan = _setup(policy)
+    mono_layout = make_bucket_layout(leaves, plan)
+    chunked = make_bucket_layout(leaves, plan, chunk_bytes=16 << 10)
+    chunks = sync_chunks(chunked)
+    # the tiny cap really splits the flat buckets
+    assert len(chunks) > len(mono_layout.groups) + len(mono_layout.buckets)
+
+    rng = np.random.default_rng(0)
+    grads = jax.tree_util.tree_map(
+        lambda p: jnp.asarray(rng.standard_normal(p.shape), jnp.float32),
+        params)
+    state = init_compressor_state(params, plan, jax.random.PRNGKey(1),
+                                  layout=mono_layout)
+    s_ref, st_ref = sync_grads(grads, dict(state), plan, lambda x: x,
+                               bucketed=True)
+
+    flat = jax.tree_util.tree_flatten_with_path(grads)[0]
+    by_path = {jax.tree_util.keystr(kp): g for kp, g in flat}
+    upd_all, st_new = {}, dict(state)
+    for chunk in chunks:
+        gb = {p: by_path[p] for p in chunk.member_paths}
+        upd, st_d = bucketing.sync_chunk_grads(gb, state, chunk,
+                                               lambda x: x)
+        upd_all.update(upd)
+        st_new.update(st_d)
+
+    ref_flat = jax.tree_util.tree_flatten_with_path(s_ref)[0]
+    assert set(upd_all) == {jax.tree_util.keystr(kp) for kp, _ in ref_flat}
+    for kp, ref in ref_flat:
+        np.testing.assert_array_equal(
+            np.asarray(ref), np.asarray(upd_all[jax.tree_util.keystr(kp)]),
+            err_msg=jax.tree_util.keystr(kp))
+    assert set(st_new) == set(st_ref)
+    for key in st_ref:
+        np.testing.assert_array_equal(np.asarray(st_ref[key].q),
+                                      np.asarray(st_new[key].q), err_msg=key)
+        np.testing.assert_array_equal(np.asarray(st_ref[key].err),
+                                      np.asarray(st_new[key].err),
+                                      err_msg=key)
+
+
+def test_chunk_wire_ledger_matches_plan_ranks():
+    """Per-stage chunk wire bytes == the Algorithm-2 ledger's compressed
+    bytes, and every group chunk carries exactly its plan rank."""
+    splans, leaves, plan = _stage_world(num_stages=2)
+    ledger = stage_wire_bytes(leaves, plan, 2, bytes_per_elem=4)
+    for s in range(2):
+        sp = splans.stage_plans[s]
+        chunks = sync_chunks(splans.layouts[splans.d_of_stage[s]])
+        for c in chunks:
+            if c.kind == "group":
+                for p in c.member_paths:
+                    assert sp.rank_of(p) == c.group.rank
+        assert sum(c.wire_bytes() for c in chunks) == ledger[s][0]
+
+
+# ----------------------------------------------------- the config surface
+def _adam(steps=4):
+    from repro.optim.adam import AdamConfig
+    return AdamConfig(lr=1e-3, warmup_steps=1, total_steps=steps)
+
+
+def test_step_config_legacy_shim():
+    cfg = TrainStepConfig(mode="dp_tp", policy_plan=NO_COMPRESSION,
+                          num_stages=2, schedule="gpipe",
+                          num_microbatches=4, use_kernels=True)
+    assert cfg.pipeline == PipelineConfig(num_stages=2, schedule="gpipe",
+                                          num_microbatches=4)
+    assert cfg.sync == SyncConfig(use_kernels=True)
+    # flat aliases read through to the embedded configs
+    assert cfg.num_stages == 2 and cfg.schedule == "gpipe"
+    assert cfg.use_kernels is True and cfg.overlap_sync is False
+    hash(cfg)                                    # still a static jit arg
+    r = dataclasses.replace(cfg, pipeline=PipelineConfig(num_stages=3))
+    assert r.num_stages == 3 and r.sync is cfg.sync
+    with pytest.raises(TypeError):
+        TrainStepConfig(mode="dp_tp", policy_plan=NO_COMPRESSION,
+                        not_a_knob=1)
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        cfg.remat = False
+
+
+def test_embedded_configs_pass_by_identity():
+    pcfg = PipelineConfig(num_stages=3, overlap_sync=True, chunk_bytes=256)
+    scfg = SyncConfig(use_kernels=True, bucket_bytes=1 << 20)
+    step = TrainStepConfig(mode="dp_tp", policy_plan=NO_COMPRESSION,
+                           pipeline=pcfg, sync=scfg)
+    assert step.pipeline is pcfg and step.sync is scfg
+    edgc = EDGCConfig(policy="fixed", fixed_rank=8, pipeline=pcfg, sync=scfg)
+    assert edgc.pipeline is pcfg and edgc.num_stages == 3
+    tcfg = TrainerConfig(total_steps=2, pipeline=pcfg, sync=scfg,
+                         adam=_adam())
+    assert tcfg.pipeline is pcfg and tcfg.sync is scfg
+    # a legacy override forces a (documented) copy, never a mutation
+    step2 = TrainStepConfig(mode="dp_tp", policy_plan=NO_COMPRESSION,
+                            pipeline=pcfg, num_stages=5)
+    assert step2.pipeline is not pcfg and step2.num_stages == 5
+    assert pcfg.num_stages == 3
+
+
+def test_trainer_config_aliases_are_settable():
+    tcfg = TrainerConfig(total_steps=2, adam=_adam())
+    assert tcfg.pipeline == PipelineConfig() and tcfg.sync == SyncConfig()
+    tcfg.schedule = "gpipe"
+    tcfg.overlap_sync = True
+    tcfg.bucket_bytes = 1 << 16
+    assert tcfg.pipeline.schedule == "gpipe"
+    assert tcfg.pipeline.overlap_sync is True
+    assert tcfg.sync.bucket_bytes == 1 << 16
+    with pytest.raises(TypeError):
+        TrainerConfig(total_steps=2, adam=_adam(), bogus=3)
+
+
+def test_trainer_and_step_builder_share_one_pipeline_config():
+    """Regression: the Trainer hands the step builder the IDENTICAL
+    PipelineConfig/SyncConfig objects it resolved, not copied fields."""
+    from repro.launch.mesh import make_host_mesh
+    from repro.train.trainer import Trainer
+
+    model = build_model(TINY)
+    pcfg = PipelineConfig(num_stages=1)
+    edgc = EDGCConfig(policy="fixed", fixed_rank=8, total_iterations=4,
+                      pipeline=pcfg)
+    tcfg = TrainerConfig(total_steps=4, pipeline=pcfg, adam=_adam())
+    tr = Trainer(model, make_host_mesh(data=1, model=1), edgc, tcfg, seed=0)
+    assert tr.pipeline_cfg is pcfg
+    tr._get_step(False)
+    assert tr.step_configs, "step builds must record their configs"
+    for scfg in tr.step_configs.values():
+        assert scfg.pipeline is tr.pipeline_cfg
+        assert scfg.sync is tr.sync_cfg
+
+
+def test_sync_executor_validates_mode_and_plans():
+    splans, _, plan = _stage_world()
+    with pytest.raises(ValueError):
+        SyncExecutor(SyncConfig(), mode="carrier-pigeon")
+    with pytest.raises(ValueError):
+        SyncExecutor(SyncConfig(), mode="flat")            # needs a plan
+    with pytest.raises(ValueError):
+        SyncExecutor(SyncConfig(), mode="per-stage")       # needs splans
+    SyncExecutor(SyncConfig(), mode="flat", plan=plan)
+    SyncExecutor(SyncConfig(), mode="per-stage-overlapped", splans=splans)
+
+
+# ------------------------------------------------------- DAC overlap hook
+def _dac(num_stages=4):
+    comm = CommModel.from_shapes([(1024, 4096)] * 24, world=16)
+    return DAC(cqm=CQM(m=256, n=1024), comm=comm,
+               cfg=DACConfig(window=100, adjust_limit=4),
+               r_min=8, r_max=64, num_stages=num_stages,
+               t_micro_back=comm.t_com(4), total_iterations=1000)
+
+
+def test_stage_aligned_ranks_slack_degenerates_to_analytic():
+    comm = CommModel.from_shapes([(1024, 4096)] * 24, world=16)
+    t_mb = comm.t_com(4)
+    base = stage_aligned_ranks(16, 4, comm, t_mb, 8, 64)
+    unit = stage_aligned_ranks(16, 4, comm, t_mb, 8, 64,
+                               slack_seconds=[s * t_mb for s in range(4)])
+    assert base == unit
+
+
+def test_dac_set_overlap_validates():
+    dac = _dac()
+    with pytest.raises(ValueError):
+        dac.set_overlap([0.0, 1.0])                 # wrong stage count
+    with pytest.raises(ValueError):
+        dac.set_overlap([0.0, -1.0, 1.0, 2.0])      # negative slack
+    dac.set_overlap([0.0, 1e-4, 2e-4, 3e-4])
+    assert dac.slack_seconds == [0.0, 1e-4, 2e-4, 3e-4]
+
+
+def test_dac_feasibility_clamp_trades_rank_for_overlap():
+    free = _dac()
+    tight = _dac()
+    tight.set_overlap([0.0] * 4)        # no drain to hide behind at all
+    r_free = free.current_ranks()
+    r_tight = tight.current_ranks()
+    assert all(a <= b for a, b in zip(r_tight, r_free))
+    # zero slack leaves no room for a larger late-stage rank: every
+    # stage's comm must fit stage 1's window
+    t1 = tight.comm.t_com(r_tight[0])
+    assert all(tight.comm.t_com(r) <= t1 + 1e-12 or r == tight.r_min
+               for r in r_tight)
+    # generous slack changes nothing vs the analytic head start
+    loose = _dac()
+    loose.set_overlap([0.0, 1.0, 2.0, 3.0])
+    assert loose.current_ranks() == r_free
+
+
+# --------------------- overlapped executor vs flat trainer (fake devices)
+_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import jax
+
+    from repro.core import EDGCConfig, GDSConfig, bucketing
+    from repro.core.dac import DACConfig
+    from repro.data.pipeline import SyntheticLM
+    from repro.launch.mesh import make_host_mesh
+    from repro.models.model import ModelConfig, build_model
+    from repro.optim.adam import AdamConfig
+    from repro.pipeline import PipelineConfig
+    from repro.pipeline.sync import stage_wire_bytes
+    from repro.train.trainer import Trainer, TrainerConfig
+
+    S = 2
+    CFG = ModelConfig(name="ovl4", family="dense", num_layers=4,
+                      d_model=128, num_heads=4, num_kv_heads=2, d_ff=256,
+                      vocab_size=512, num_stages=S)
+
+    def trainer(mesh, overlap=False, stages=S):
+        model = build_model(CFG)
+        pcfg = PipelineConfig(num_stages=stages, schedule="1f1b",
+                              num_microbatches=4, overlap_sync=overlap,
+                              chunk_bytes=1 << 16)
+        edgc = EDGCConfig(policy="optimus", fixed_rank=8,
+                          total_iterations=6,
+                          gds=GDSConfig(alpha=1.0, beta=0.25),
+                          dac=DACConfig(window=5, adjust_limit=4),
+                          pipeline=pcfg)
+        tcfg = TrainerConfig(total_steps=6, log_every=1, pipeline=pcfg,
+                             adam=AdamConfig(lr=1e-3, warmup_steps=2,
+                                             total_steps=6))
+        return Trainer(model, mesh, edgc, tcfg, seed=0)
+
+    data = lambda: SyntheticLM(512, 32, 8, seed=3).batches()
+    to = trainer(make_host_mesh(pipe=S, data=2, model=1), overlap=True)
+    tf = trainer(make_host_mesh(data=2, model=1), stages=1)
+    lo = [h["loss"] for h in to.run(data())]
+    lf = [h["loss"] for h in tf.run(data())]
+    gap = max(abs(a - b) for a, b in zip(lo, lf))
+    print(f"overlap-vs-flat gap {gap:.2e}")
+    assert gap < 5e-3, (lo, lf)
+
+    # the executor really planned in-loop launches, and the DAC got the
+    # planner's slack
+    op = to.overlap_plan
+    assert op is not None and all(op.feasible), op
+    assert sum(len(ids) for s in range(S)
+               for _, ids in op.launches[s]) > 0, op
+    assert to.controller.dac.slack_seconds is not None
+
+    # wire ledger: the chunks the overlapped executor moves per stage,
+    # plus the shared leaves charged to that stage (embed/head move via
+    # sync_shared_grads, uncompressed), sum to the Algorithm-2 ledger's
+    # compressed bytes for the DAC's ranks — and each group chunk carries
+    # exactly its plan rank.
+    from repro.pipeline.partition import local_leaf_path
+    plan = to.controller.plan
+    ledger = stage_wire_bytes(to.leaves, plan, S, bytes_per_elem=4)
+    shared_b = [0] * S
+    for info in to.leaves:
+        if local_leaf_path(info.path) is None:
+            n = 1
+            for d in info.shape:
+                n *= d
+            shared_b[min(info.stage, S - 1)] += n * 4
+    for s in range(S):
+        sp = to._splans.stage_plans[s]
+        chunks = bucketing.sync_chunks(
+            to._splans.layouts[to._splans.d_of_stage[s]])
+        for c in chunks:
+            if c.kind == "group":
+                assert all(sp.rank_of(p) == c.group.rank
+                           for p in c.member_paths)
+        moved = sum(c.wire_bytes() for c in chunks)
+        assert moved + shared_b[s] == ledger[s][0], \
+            (s, moved, shared_b[s], ledger[s])
+    print("OVERLAP_4DEV_OK")
+""")
+
+
+@pytest.mark.slow
+def test_overlapped_1f1b_parity_subprocess():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    proc = subprocess.run([sys.executable, "-c", _SCRIPT], env=env,
+                          capture_output=True, text=True, timeout=900,
+                          cwd=os.path.dirname(os.path.dirname(__file__)))
+    assert "OVERLAP_4DEV_OK" in proc.stdout, \
+        proc.stdout[-2000:] + proc.stderr[-3000:]
