@@ -138,6 +138,7 @@ class EDGCController:
         self._window_h: list[float] = []
         self._history: list[tuple[int, float]] = []     # (step, entropy)
         self._rank_history: list[tuple[int, list[int]]] = []
+        self._fallback = False   # recovery: pin to uncompressed sync
         self._plan = self._initial_plan()
 
     # ------------------------------------------------------------------ plans
@@ -160,6 +161,24 @@ class EDGCController:
     @property
     def in_warmup(self) -> bool:
         return self.cfg.policy == "edgc" and not self.dac.warmed_up
+
+    @property
+    def in_fallback(self) -> bool:
+        return self._fallback
+
+    def force_fallback(self) -> bool:
+        """Recovery policy: pin the plan to uncompressed sync permanently.
+
+        Called by the trainer after repeated anomalies (non-finite steps,
+        loss spikes) — if aggressive compression is the suspected cause,
+        the safe terminal state is a plain all-reduce. Window ends stop
+        producing plans; the flag survives checkpoints. Returns True iff
+        the plan changed (the trainer then re-specializes its step).
+        """
+        self._fallback = True
+        changed = self._plan != NO_COMPRESSION
+        self._plan = NO_COMPRESSION
+        return changed
 
     def set_overlap_feedback(self, slack_seconds) -> None:
         """Feed the overlap planner's measured per-stage Eq. 4 slack.
@@ -189,6 +208,9 @@ class EDGCController:
 
     def on_window_end(self, step: int) -> bool:
         """Called every ``window`` steps. Returns True iff the plan changed."""
+        if self._fallback:
+            self._window_h.clear()
+            return False
         if self.cfg.policy != "edgc" or not self._window_h:
             self._window_h.clear()
             return False
@@ -239,6 +261,7 @@ class EDGCController:
             "rank_history": [[int(s), [int(r) for r in rs]]
                              for s, rs in self._rank_history],
             "plan": [[p, int(r)] for p, r in self._plan.ranks],
+            "fallback": bool(self._fallback),
         }
 
     def load_state_dict(self, sd: dict[str, Any]) -> None:
@@ -260,6 +283,7 @@ class EDGCController:
                               for s, rs in sd["rank_history"]]
         self._plan = CompressionPlan(
             ranks=tuple((p, int(r)) for p, r in sd["plan"]))
+        self._fallback = bool(sd.get("fallback", False))
 
     # ------------------------------------------------------------- reporting
     @property

@@ -112,7 +112,8 @@ def lower_one(arch: str, shape_name: str, mesh, policy: str = "edgc",
               rank: int = 64, verbose: bool = True,
               opt_dtype: str = "float32", stash: str = "replay",
               stash_every: int = 2, overlap: bool = False,
-              chunk_bytes: int = 0) -> dict:
+              chunk_bytes: int = 0, outer_k: int = 0,
+              outer_rank: int = 32, inject: bool = False) -> dict:
     """Lower+compile one (arch, shape, mesh); return the roofline record."""
     spec = INPUT_SHAPES[shape_name]
     kind = spec["kind"]
@@ -154,11 +155,20 @@ def lower_one(arch: str, shape_name: str, mesh, policy: str = "edgc",
                                      chunk_bytes=chunk_bytes)
     elif kind == "train":
         rec = _lower_train(arch, cfg, model, mesh, mode, params_shapes,
-                           pshard, shape_name, policy, rank, opt_dtype)
+                           pshard, shape_name, policy, rank, opt_dtype,
+                           inject=inject)
     elif kind == "prefill":
         rec = _lower_prefill(cfg, model, mesh, params_shapes, pshard, shape_name)
     else:
         rec = _lower_decode(cfg, model, mesh, params_shapes, pshard, shape_name)
+    if outer_k and kind == "train":
+        if "pod" in mesh.axis_names:
+            rec["outer_sync"] = _lower_outer_sync(cfg, mesh, params_shapes,
+                                                  outer_rank)
+            rec["outer_sync"]["outer_k"] = outer_k
+        else:
+            rec["outer_sync"] = {"skipped": True,
+                                 "reason": "outer loop needs --multi-pod"}
     rec.update({"arch": arch, "shape": shape_name, "mode": mode,
                 "mesh": "x".join(map(str, mesh.devices.shape)),
                 "compile_s": round(time.time() - t0, 1)})
@@ -195,8 +205,53 @@ def _record(compiled, hlo_text: str, pod_size: int = 0) -> dict:
     }
 
 
+def _lower_outer_sync(cfg, mesh, params_shapes, rank):
+    """Lower+compile the DiLoCo outer sync on the pod-lead sub-mesh.
+
+    The outer all-reduce runs on ONE lead device per pod over the cross-pod
+    links — exactly the topology ``make_pod_mesh`` gives the elastic
+    trainer. Deltas ship fp32 (parameter scale); the record carries the
+    compressed-vs-raw outer wire bytes the EDGC plan buys per round.
+    """
+    from repro.core.compressor import init_compressor_state, plan_wire_bytes
+    from repro.core.entropy import GDSConfig
+    from repro.optim.outer import make_outer_sync_step
+
+    n_pods = mesh.devices.shape[list(mesh.axis_names).index("pod")]
+    leads = mesh.devices.reshape(n_pods, -1)[:, 0]
+    omesh = jax.make_mesh((n_pods,), ("pod",), devices=list(leads))
+
+    leaves = classify_leaves(params_shapes, cfg.num_layers, 1, min_dim=128)
+    plan = make_plan("fixed", leaves, fixed_rank=rank, num_stages=1)
+    delta_shapes = jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32,
+                                       sharding=NamedSharding(omesh, P())),
+        params_shapes)
+    comp_shapes = jax.eval_shape(lambda: replicate_comp_state(
+        init_compressor_state(delta_shapes, plan, jax.random.PRNGKey(2)),
+        n_pods))
+    comp_shapes = jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype,
+                                       sharding=NamedSharding(omesh,
+                                                              P("pod"))),
+        comp_shapes)
+    step = make_outer_sync_step(omesh, plan, GDSConfig())
+    with omesh:
+        compiled = step.lower(delta_shapes, comp_shapes).compile()
+    # On the lead mesh every device IS a pod: pod_size=1 marks every
+    # collective byte as crossing the pod boundary.
+    rec = _record(compiled, compiled.as_text(), pod_size=1)
+    compressed, full = plan_wire_bytes(leaves, plan, 4)
+    rec.update({"n_pods": int(n_pods), "outer_rank": int(rank),
+                "compressed_leaves": len(plan.ranks),
+                "wire_bytes_compressed": int(compressed),
+                "wire_bytes_full": int(full)})
+    return rec
+
+
 def _lower_train(arch, cfg, model, mesh, mode, params_shapes, pshard,
-                 shape_name, policy, rank, opt_dtype="float32"):
+                 shape_name, policy, rank, opt_dtype="float32",
+                 inject=False):
     spec = INPUT_SHAPES[shape_name]
     B = spec["global_batch"]
     axes = dp_axes(mesh)
@@ -241,13 +296,18 @@ def _lower_train(arch, cfg, model, mesh, mode, params_shapes, pshard,
         sshard["opt_v"] = pshard
 
     batch = input_specs(cfg, shape_name)
+    if inject:
+        # the fault-injection channel rides in the batch (constant batch
+        # structure keeps one compiled variant; see train/faults.py)
+        batch["_inject"] = jax.ShapeDtypeStruct((B,), jnp.float32)
     bshard = {k: NamedSharding(mesh, batch_pspec(v.ndim, mesh, B))
               for k, v in batch.items()}
 
     scfg = TrainStepConfig(mode=mode if mode == "dp_tp" else "auto",
                            policy_plan=plan, measure_entropy=(mode == "dp_tp"),
                            bucketed=bucketed or None,
-                           remat=cfg.remat, adam=acfg)
+                           remat=cfg.remat, adam=acfg,
+                           guard_nonfinite=inject)
     step = make_train_step(model, mesh, scfg)
     jstep = jax.jit(step, in_shardings=(sshard, bshard),
                     out_shardings=(sshard, NamedSharding(mesh, P())),
@@ -259,6 +319,7 @@ def _lower_train(arch, cfg, model, mesh, mode, params_shapes, pshard,
     rec = _record(compiled, compiled.as_text(), pod_size=pod)
     rec["policy"] = policy if plan.ranks else "none"
     rec["compressed_leaves"] = len(plan.ranks)
+    rec["guarded"] = bool(inject)
     return rec
 
 
@@ -438,6 +499,15 @@ def main() -> None:
     ap.add_argument("--chunk-bytes", type=int, default=0,
                     help="with --overlap: max bytes per sync transfer "
                          "chunk (0 = one chunk per bucket)")
+    ap.add_argument("--outer-k", type=int, default=0,
+                    help="with --multi-pod: also lower the DiLoCo outer "
+                         "sync (EDGC-compressed outer-delta all-reduce on "
+                         "the pod-lead mesh); K = inner steps per round")
+    ap.add_argument("--outer-rank", type=int, default=32,
+                    help="PowerSGD rank for the outer-sync lowering")
+    ap.add_argument("--inject", action="store_true",
+                    help="lower the fault-guarded train step variant "
+                         "(non-finite guard + injection channel)")
     ap.add_argument("--out", default=None, help="write JSON records here")
     args = ap.parse_args()
 
@@ -455,7 +525,10 @@ def main() -> None:
                                 stash=args.stash,
                                 stash_every=args.stash_every,
                                 overlap=args.overlap,
-                                chunk_bytes=args.chunk_bytes)
+                                chunk_bytes=args.chunk_bytes,
+                                outer_k=args.outer_k,
+                                outer_rank=args.outer_rank,
+                                inject=args.inject)
                 if rec.get("skipped"):
                     print(f"SKIP {tag}: {rec['reason']}", flush=True)
                 else:
@@ -472,6 +545,15 @@ def main() -> None:
                             extra += (", overlap in-loop "
                                       f"{ov['in_loop_chunks']} residual "
                                       f"{ov['residual_chunks']}")
+                    if rec.get("guarded"):
+                        extra += ", guarded"
+                    osync = rec.get("outer_sync")
+                    if osync and not osync.get("skipped"):
+                        extra += (", outer-sync "
+                                  f"{osync['wire_bytes_compressed']/2**20:.1f}"
+                                  f"/{osync['wire_bytes_full']/2**20:.1f} MiB"
+                                  f" (K={osync['outer_k']}, "
+                                  f"r={osync['outer_rank']})")
                     print(f"OK   {tag}: {rec['flops_per_chip']:.3e} FLOP/chip, "
                           f"{rec['bytes_per_chip']:.3e} B/chip, "
                           f"coll {rec['collective_total']/2**20:.1f} MiB/chip, "

@@ -23,6 +23,7 @@ import jax
 __all__ = [
     "make_production_mesh",
     "make_host_mesh",
+    "make_pod_mesh",
     "dp_axes",
     "tp_axis",
     "pipe_size",
@@ -43,16 +44,35 @@ def make_production_mesh(*, multi_pod: bool = False, pipe: int = 0):
     return jax.make_mesh(shape, axes)
 
 
-def make_host_mesh(data: int = 1, model: int = 1, pod: int = 0, pipe: int = 0):
-    """Small mesh over however many (fake or real) devices exist — tests."""
+def make_host_mesh(data: int = 1, model: int = 1, pod: int = 0, pipe: int = 0,
+                   devices=None):
+    """Small mesh over however many (fake or real) devices exist — tests.
+
+    ``devices``: explicit device subset (elastic training builds one
+    pod-local mesh per pod over disjoint subsets; ``None`` = all devices).
+    """
+    kw = {} if devices is None else {"devices": devices}
     if pipe:
         if pod:
             return jax.make_mesh((pod, pipe, data, model),
-                                 ("pod", "pipe", "data", "model"))
-        return jax.make_mesh((pipe, data, model), ("pipe", "data", "model"))
+                                 ("pod", "pipe", "data", "model"), **kw)
+        return jax.make_mesh((pipe, data, model),
+                             ("pipe", "data", "model"), **kw)
     if pod:
-        return jax.make_mesh((pod, data, model), ("pod", "data", "model"))
-    return jax.make_mesh((data, model), ("data", "model"))
+        return jax.make_mesh((pod, data, model),
+                             ("pod", "data", "model"), **kw)
+    return jax.make_mesh((data, model), ("data", "model"), **kw)
+
+
+def make_pod_mesh(n_pods: int, devices=None):
+    """1-D ``pod`` mesh carrying ONLY the rare compressed outer syncs.
+
+    One device per pod (each pod's lead device); inner DP/TP traffic never
+    crosses it. This is the axis the DiLoCo outer optimizer all-reduces
+    the EDGC-compressed outer deltas over.
+    """
+    kw = {} if devices is None else {"devices": devices}
+    return jax.make_mesh((n_pods,), ("pod",), **kw)
 
 
 def dp_axes(mesh) -> tuple[str, ...]:

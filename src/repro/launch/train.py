@@ -16,6 +16,17 @@ mesh (total devices = pipe * data * model), rebuilds the model config with
 
   PYTHONPATH=src python -m repro.launch.train --arch gpt2 --pipe 1 \
       --micro 2 --policy edgc --steps 100
+
+Elastic outer loop: ``--outer-k K`` routes through the DiLoCo-style
+ElasticTrainer — ``--pods`` pod-local inner Trainers (one device each; set
+XLA_FLAGS=--xla_force_host_platform_device_count=N to simulate pods), K
+inner steps per outer round, EDGC-compressed outer-delta all-reduce.
+``--inject`` schedules faults; ``--recover`` arms the recovery policies:
+
+  XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+  PYTHONPATH=src python -m repro.launch.train --arch gpt2 --outer-k 20 \
+      --pods 2 --rounds 8 --recover \
+      --inject 'nan_grad@30,pod_drop:1@r3,pod_join@r5'
 """
 from __future__ import annotations
 
@@ -74,9 +85,57 @@ def main() -> None:
     ap.add_argument("--data-mesh", type=int, default=1)
     ap.add_argument("--model-mesh", type=int, default=1)
     ap.add_argument("--use-kernels", action="store_true")
+    # ---- fault injection + recovery -------------------------------------
+    ap.add_argument("--inject", default=None,
+                    help="comma-separated fault specs kind[:arg]@N (step) "
+                         "or kind[:arg]@rN (outer round); kinds: nan_grad, "
+                         "corrupt_payload, torn_ckpt, pod_drop, pod_join. "
+                         "e.g. 'nan_grad@40,pod_drop:1@r3'")
+    ap.add_argument("--recover", action="store_true",
+                    help="arm the recovery policies: non-finite step guard "
+                         "+ error-feedback reset, loss-spike rollback to "
+                         "the checkpoint ring, uncompressed-sync fallback "
+                         "after repeated anomalies")
+    ap.add_argument("--spike-factor", type=float, default=4.0,
+                    help="loss > factor * EMA counts as an anomaly")
+    ap.add_argument("--max-rollbacks", type=int, default=3)
+    ap.add_argument("--fallback-after", type=int, default=4,
+                    help="anomalies before pinning uncompressed sync")
+    ap.add_argument("--ckpt-every", type=int, default=0,
+                    help="checkpoint cadence in steps (rollback needs > 0)")
+    ap.add_argument("--ckpt-path", default="ckpt/state")
+    # ---- elastic DiLoCo outer loop --------------------------------------
+    ap.add_argument("--outer-k", type=int, default=0,
+                    help="> 0 routes through the elastic outer loop: K "
+                         "inner steps per pod per outer round")
+    ap.add_argument("--pods", type=int, default=2,
+                    help="initial pod count (needs that many devices)")
+    ap.add_argument("--rounds", type=int, default=10,
+                    help="outer rounds to run")
+    ap.add_argument("--outer-lr", type=float, default=0.7)
+    ap.add_argument("--outer-momentum", type=float, default=0.9)
+    ap.add_argument("--outer-policy", default="edgc",
+                    choices=["none", "fixed", "edgc"],
+                    help="outer-delta compression policy")
+    ap.add_argument("--outer-rank", type=int, default=32)
+    ap.add_argument("--outer-window", type=int, default=2,
+                    help="outer DAC window, counted in ROUNDS")
     ap.add_argument("--out", default=None)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+
+    from repro.train.faults import RecoveryConfig, parse_inject
+    faults = parse_inject(args.inject) if args.inject else None
+    recovery = RecoveryConfig(
+        spike_factor=args.spike_factor, max_rollbacks=args.max_rollbacks,
+        fallback_after=args.fallback_after) if args.recover else None
+    if args.outer_k and args.pipe:
+        raise SystemExit("--outer-k does not compose with --pipe: the outer "
+                         "loop wraps flat pod-local trainers")
+    if args.outer_k:
+        total_steps = args.outer_k * args.rounds
+    else:
+        total_steps = args.steps
 
     cfg = get_config(args.arch, args.variant)
     if args.pipe:
@@ -113,17 +172,62 @@ def main() -> None:
 
     edgc = EDGCConfig(
         policy=args.policy, fixed_rank=args.rank,
-        total_iterations=args.steps,
+        total_iterations=total_steps,
         gds=GDSConfig(alpha=0.5, beta=0.25),
         dac=DACConfig(window=args.window, adjust_limit=4),
         pipeline=pipe_cfg, sync=sync_cfg,
     )
     tcfg = TrainerConfig(
-        total_steps=args.steps, log_every=max(1, args.steps // 20),
+        total_steps=total_steps, log_every=max(1, total_steps // 20),
+        ckpt_every=args.ckpt_every, ckpt_path=args.ckpt_path,
+        recovery=recovery, faults=faults,
         pipeline=pipe_cfg, sync=sync_cfg,
-        adam=AdamConfig(lr=args.lr, warmup_steps=max(10, args.steps // 10),
-                        total_steps=args.steps),
+        adam=AdamConfig(lr=args.lr, warmup_steps=max(10, total_steps // 10),
+                        total_steps=total_steps),
     )
+
+    def pod_batches(pod: int):
+        data = SyntheticLM(vocab_size=cfg.vocab_size, seq_len=args.seq,
+                           batch_size=args.batch, seed=args.seed + 1000 * pod)
+        for b in data.batches():
+            yield add_modality_stubs(b, cfg.family,
+                                     audio_frames=cfg.audio_frames,
+                                     num_patches=cfg.num_patches,
+                                     d_model=cfg.d_model, seed=args.seed)
+
+    if args.outer_k:
+        from repro.optim.outer import OuterConfig
+        from repro.train.elastic import ElasticTrainer
+        ocfg = OuterConfig(outer_k=args.outer_k, lr=args.outer_lr,
+                           momentum=args.outer_momentum,
+                           policy=args.outer_policy,
+                           fixed_rank=args.outer_rank,
+                           window=args.outer_window,
+                           total_rounds=args.rounds)
+        et = ElasticTrainer(model, edgc, tcfg, ocfg, args.pods,
+                            pod_batches, seed=args.seed)
+        print(f"{cfg.name}: elastic outer loop, {args.pods} pods x "
+              f"K={args.outer_k} inner steps, outer policy="
+              f"{args.outer_policy}, {args.rounds} rounds"
+              + (f", inject={args.inject}" if args.inject else ""))
+        hist = et.run_rounds(args.rounds)
+        for h in hist:
+            ev = f" {h['membership_events']}" if h["membership_events"] else ""
+            losses = "/".join(f"{x:.3f}" for x in h["pod_losses"])
+            print(f"round {h['round']:4d} pods {h['n_pods']} "
+                  f"loss {losses} H {h['entropy']:+.3f} "
+                  f"outer-bytes {h['bytes_synced']}/{h['bytes_full']}{ev}")
+        print(f"outer comm savings vs raw fp32: {et.outer.comm_savings():.2%}")
+        if et.pods[0].recovery is not None:
+            print(f"recovery: {et.pods[0].recovery.as_dict()}")
+        if args.out:
+            with open(args.out, "w") as f:
+                json.dump({"history": hist, "arch": cfg.name,
+                           "outer": dataclasses.asdict(ocfg),
+                           "comm_savings": et.outer.comm_savings()},
+                          f, indent=1)
+        return
+
     trainer = Trainer(model, mesh, edgc, tcfg, seed=args.seed)
     pipe_tag = (f", pipe={args.pipe} ({args.schedule}, stash={args.stash}"
                 f"{', overlapped sync' if args.overlap else ''})"
@@ -147,6 +251,8 @@ def main() -> None:
               f"ranks {h['ranks']} comm-saved "
               f"{1 - h['bytes_synced']/max(1, h['bytes_full']):.1%}")
     print(f"final comm savings vs no-compression: {trainer.comm_savings():.2%}")
+    if trainer.recovery is not None:
+        print(f"recovery: {trainer.recovery.as_dict()}")
     if args.out:
         with open(args.out, "w") as f:
             json.dump({"history": hist, "arch": cfg.name,

@@ -1,0 +1,385 @@
+"""DiLoCo-style outer optimizer: EDGC-compressed outer-delta sync.
+
+EDGC's premise is that compression matters most where communication is
+scarcest, and nothing is scarcer than the cross-pod links. This module
+gives the ``pod`` mesh axis its algorithmic role (ROADMAP item 3): each pod
+runs K inner Trainer steps on its own data shard, then the pods all-reduce
+the OUTER DELTA (anchor params minus the pod's post-inner-loop params) over
+the ``pod`` axis — through the same PowerSGD + error-feedback machinery the
+inner loop uses — and a Nesterov-momentum outer update moves the shared
+anchor.
+
+The outer control plane is a second, independent EDGC stack: its own
+``EDGCController`` (CQM law + DAC window) adapts the OUTER rank from
+outer-delta entropy, with the window counted in outer rounds. Outer deltas
+are far smoother than per-step gradients (K steps of Adam average a lot of
+noise), so their entropy — and hence the DAC's rank — sits well below the
+inner loop's: the L-GreCo observation that signal-adapted compression
+tolerates much higher ratios on slowly-varying quantities.
+
+Execution: the outer sync runs as a ``shard_map`` manual over ("pod",) on a
+1-device-per-pod mesh (``make_pod_mesh``). Per-pod deltas are distinct
+values under a replicated PartitionSpec — each pod's lead device holds its
+own delta buffer — and the manual pmean inside the region averages them,
+exactly like the inner DP sync but over the scarce axis. The Nesterov
+update itself is host-side numpy: it runs once per K inner steps on
+anchor-sized trees, so it is never on the critical path.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core import (
+    EDGCConfig,
+    EDGCController,
+    classify_leaves,
+    init_compressor_state,
+    plan_wire_bytes,
+    sync_grads,
+)
+from repro.core.dac import DACConfig
+from repro.core.entropy import GDSConfig, grads_entropy
+from repro.core.powersgd import LowRankState, resize_rank
+from repro.dist.collectives import make_dp_pmean, shard_map_dp
+
+__all__ = ["OuterConfig", "OuterOptimizer", "make_outer_sync_step"]
+
+#: outer deltas ship in fp32 (they are parameter-scale, not gradient-scale)
+_OUTER_BYTES_PER_ELEM = 4
+
+
+def make_outer_sync_step(mesh, plan, gds: GDSConfig):
+    """The compressed outer all-reduce, jitted for one plan.
+
+    (delta, comp) -> (synced delta, new comp, entropy): per-leaf PowerSGD
+    factor pmeans + error feedback over the ``pod`` axis (plain pmeans for
+    uncompressed leaves), entropy measured on the synced delta — the
+    reading the outer DAC window consumes. ``delta`` enters with a
+    replicated spec whose per-pod shards hold each pod's OWN delta; ``comp``
+    carries the per-pod leading dim. Also used standalone by the dryrun to
+    lower the outer sync at frontier scale.
+    """
+    axes = ("pod",) if "pod" in mesh.axis_names else ()
+
+    def local(delta, comp):
+        if axes:
+            comp = jax.tree_util.tree_map(lambda a: a[0], comp)
+        pmean = make_dp_pmean(axes)
+        synced, comp = sync_grads(delta, comp, plan, pmean, bucketed=False)
+        h = grads_entropy(synced, gds)
+        if axes:
+            comp = jax.tree_util.tree_map(lambda a: a[None], comp)
+        return synced, comp, h
+
+    if axes:
+        fn = shard_map_dp(local, mesh,
+                          in_specs=(P(), P(("pod",))),
+                          out_specs=(P(), P(("pod",)), P()),
+                          manual_axes=axes)
+    else:
+        fn = local
+    return jax.jit(fn)
+
+
+@dataclasses.dataclass(frozen=True)
+class OuterConfig:
+    """DiLoCo outer loop configuration.
+
+    ``outer_k`` inner steps per round; the standard DiLoCo outer SGD uses
+    Nesterov momentum with lr around 0.7 / momentum 0.9. ``policy`` picks
+    the outer-delta compression: 'none' (plain fp32 all-reduce), 'fixed'
+    (static rank), or 'edgc' (the dedicated outer DAC window, counted in
+    rounds, adapting rank from outer-delta entropy).
+    """
+
+    outer_k: int = 30
+    lr: float = 0.7
+    momentum: float = 0.9
+    policy: str = "edgc"            # none | fixed | edgc
+    fixed_rank: int = 32
+    window: int = 2                 # outer DAC window, in ROUNDS
+    adjust_limit: int = 8
+    total_rounds: int = 100
+    min_compress_dim: int = 64
+    warmup_frac_min: float = 0.0    # rounds are scarce: allow early warm-up end
+
+
+class OuterOptimizer:
+    """Compressed outer-delta all-reduce + Nesterov outer update.
+
+    Owns: the outer EDGC control plane (controller/DAC/CQM over outer
+    rounds), the per-pod outer compressor state (warm-start Q + EF, leading
+    pod dim), the outer momentum tree, and the plan-keyed compile cache for
+    the outer sync step. Elastic membership changes go through
+    ``resize_pods`` — surviving pods keep their EF rows, joiners start with
+    the shared warm-start Q and zero EF.
+    """
+
+    def __init__(self, params: Any, cfg: OuterConfig, mesh,
+                 num_layers: int, seed: int = 0) -> None:
+        self.cfg = cfg
+        self.leaves = classify_leaves(params, num_layers, 1,
+                                      min_dim=cfg.min_compress_dim)
+        self._edgc = EDGCConfig(
+            policy=cfg.policy, fixed_rank=cfg.fixed_rank,
+            total_iterations=cfg.total_rounds,
+            gds=GDSConfig(alpha=1.0, beta=0.25),  # every round measured
+            dac=DACConfig(window=cfg.window, adjust_limit=cfg.adjust_limit,
+                          warmup_frac_min=cfg.warmup_frac_min),
+        )
+        self._key = jax.random.fold_in(jax.random.PRNGKey(seed), 777)
+        self.momentum = jax.tree_util.tree_map(
+            lambda a: np.zeros(a.shape, np.float32), jax.device_get(params))
+        self.round_index = 0
+        self.bytes_synced = 0
+        self.bytes_full = 0
+        self.entropy_log: list[tuple[int, float]] = []
+        self._sync_cache: dict[Any, Any] = {}
+        self._host_shapes = jax.tree_util.tree_map(
+            lambda a: tuple(a.shape), jax.device_get(params))
+        self.set_mesh(mesh)
+        self.controller = EDGCController(self._edgc, self.leaves,
+                                         world=max(2, self.n_pods))
+        self._comp_host = self._init_comp_host(params)
+        self._put_comp()
+
+    # ------------------------------------------------------------------ mesh
+    def set_mesh(self, mesh) -> None:
+        """(Re)bind to a pod mesh; invalidates the compiled sync cache."""
+        self.mesh = mesh
+        sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        self.n_pods = sizes.get("pod", 1)
+        self._axes = ("pod",) if "pod" in mesh.axis_names else ()
+        self._pod_devices = list(mesh.devices.flatten())
+        self._sync_cache.clear()
+
+    @property
+    def plan(self):
+        return self.controller.plan
+
+    # ------------------------------------------------------- compressor state
+    def _init_comp_host(self, params) -> dict[str, LowRankState]:
+        """Per-leaf outer compressor state, host-side, leading pod dim."""
+        per_leaf = jax.device_get(
+            init_compressor_state(params, self.controller.plan, self._key))
+        return {
+            path: LowRankState(
+                q=np.broadcast_to(np.asarray(st.q)[None],
+                                  (self.n_pods,) + st.q.shape).copy(),
+                err=np.zeros((self.n_pods,) + st.err.shape,
+                             np.asarray(st.err).dtype),
+            )
+            for path, st in per_leaf.items()
+        }
+
+    def _put_comp(self) -> None:
+        if self._axes:
+            sh = NamedSharding(self.mesh, P("pod"))
+            self._comp = jax.device_put(self._comp_host, sh)
+        else:
+            self._comp = jax.device_put(self._comp_host)
+
+    def _apply_plan_change(self, params_like) -> None:
+        """Re-shape the outer compressor state to the controller's new plan
+        (same per-leaf migration as the inner trainer: resized warm Q + EF
+        for surviving leaves, fresh state for newly-compressed ones)."""
+        plan = self.controller.plan
+        fresh = jax.device_get(
+            init_compressor_state(params_like, plan, self._key))
+        new_host: dict[str, LowRankState] = {}
+        for path, st in fresh.items():
+            if path in self._comp_host:
+                old = self._comp_host[path]
+                # the stored leading dim can lag n_pods (restore into a
+                # resized fleet): extra pods reuse row 0's warm Q, their
+                # EF rows start at zero (same rule as resize_pods joiners)
+                old_n = np.asarray(old.q).shape[0]
+                rows = [
+                    jax.device_get(resize_rank(
+                        LowRankState(
+                            q=jnp.asarray(old.q[i if i < old_n else 0]),
+                            err=jnp.asarray(old.err[i] if i < old_n
+                                            else np.zeros_like(old.err[0]))),
+                        plan.rank_of(path), self._key))
+                    for i in range(self.n_pods)
+                ]
+                new_host[path] = LowRankState(
+                    q=np.stack([np.asarray(r.q) for r in rows]),
+                    err=np.stack([np.asarray(r.err) for r in rows]))
+            else:
+                new_host[path] = LowRankState(
+                    q=np.broadcast_to(np.asarray(st.q)[None],
+                                      (self.n_pods,) + st.q.shape).copy(),
+                    err=np.zeros((self.n_pods,) + st.err.shape,
+                                 np.asarray(st.err).dtype))
+        self._comp_host = new_host
+        self._put_comp()
+        self._sync_cache.clear()
+
+    def resize_pods(self, mesh, survivors: list[int]) -> None:
+        """Elastic membership change: rebind to ``mesh`` (new pod count),
+        migrating EF state — survivors keep their rows, joiners get the
+        shared warm-start Q (row parity is a PowerSGD requirement) and a
+        zero EF residual.
+        """
+        self._comp_host = jax.device_get(self._comp)
+        old_n = self.n_pods
+        for i in survivors:
+            if not 0 <= i < old_n:
+                raise ValueError(f"survivor index {i} out of range for "
+                                 f"{old_n} pods")
+        self.set_mesh(mesh)
+        n_new = self.n_pods
+
+        def migrate(st: LowRankState) -> LowRankState:
+            q, err = np.asarray(st.q), np.asarray(st.err)
+            q_rows = [q[i] for i in survivors]
+            err_rows = [err[i] for i in survivors]
+            while len(q_rows) < n_new:       # joiners
+                q_rows.append(q_rows[0].copy())
+                err_rows.append(np.zeros_like(err_rows[0]))
+            return LowRankState(q=np.stack(q_rows[:n_new]),
+                                err=np.stack(err_rows[:n_new]))
+
+        self._comp_host = {p: migrate(st)
+                           for p, st in self._comp_host.items()}
+        self._put_comp()
+
+    # ------------------------------------------------------------- sync step
+    def _get_sync(self, plan):
+        if plan not in self._sync_cache:
+            self._sync_cache[plan] = make_outer_sync_step(
+                self.mesh, plan, self._edgc.gds)
+        return self._sync_cache[plan]
+
+    def _pod_array(self, per_pod: list[np.ndarray]):
+        """One logical array whose per-pod shards hold DIFFERENT values.
+
+        Replicated spec + explicit per-device buffers: inside the manual
+        shard_map region each pod sees its own delta, and the pmean over
+        'pod' averages them — the outer all-reduce.
+        """
+        a0 = np.asarray(per_pod[0], np.float32)
+        if not self._axes:
+            return jnp.asarray(a0)
+        sharding = NamedSharding(self.mesh, P())
+        bufs = [jax.device_put(np.asarray(a, np.float32), d)
+                for a, d in zip(per_pod, self._pod_devices)]
+        return jax.make_array_from_single_device_arrays(
+            a0.shape, sharding, bufs)
+
+    # ----------------------------------------------------------------- round
+    def round(self, anchor: Any, pod_deltas: list[Any]) -> tuple[Any, dict]:
+        """One outer round: compressed all-reduce of the per-pod deltas,
+        then the Nesterov outer update.
+
+        ``anchor``: host pytree of the shared params at the round start.
+        ``pod_deltas``: one host pytree per pod, ``anchor - pod_params``
+        (the outer pseudo-gradient). Returns (new anchor params as a host
+        pytree, round info dict).
+        """
+        if len(pod_deltas) != self.n_pods:
+            raise ValueError(f"{len(pod_deltas)} pod deltas for "
+                             f"{self.n_pods} pods")
+        plan = self.controller.plan
+        leaves_list = [jax.tree_util.tree_leaves(d) for d in pod_deltas]
+        treedef = jax.tree_util.tree_structure(pod_deltas[0])
+        delta = jax.tree_util.tree_unflatten(
+            treedef,
+            [self._pod_array([ls[i] for ls in leaves_list])
+             for i in range(len(leaves_list[0]))])
+
+        synced, self._comp, h = self._get_sync(plan)(delta, self._comp)
+        synced = jax.device_get(synced)
+        h = float(h)
+        self.entropy_log.append((self.round_index, h))
+        self.controller.on_entropy(self.round_index, h)
+
+        comp_b, full_b = plan_wire_bytes(self.leaves, plan,
+                                         _OUTER_BYTES_PER_ELEM)
+        self.bytes_synced += comp_b
+        self.bytes_full += full_b
+
+        # Nesterov outer SGD on the averaged pseudo-gradient.
+        mu, lr = self.cfg.momentum, self.cfg.lr
+        flat_a = jax.tree_util.tree_leaves(anchor)
+        flat_d = jax.tree_util.tree_leaves(synced)
+        flat_m = jax.tree_util.tree_leaves(self.momentum)
+        tdef = jax.tree_util.tree_structure(anchor)
+        new_p, new_m = [], []
+        for a, d, m in zip(flat_a, flat_d, flat_m):
+            a32 = np.asarray(a, np.float32)
+            d32 = np.asarray(d, np.float32)
+            m2 = mu * m + d32
+            new_m.append(m2)
+            new_p.append((a32 - lr * (d32 + mu * m2)).astype(
+                np.asarray(a).dtype))
+        self.momentum = jax.tree_util.tree_unflatten(tdef, new_m)
+        new_params = jax.tree_util.tree_unflatten(tdef, new_p)
+
+        self.round_index += 1
+        plan_changed = False
+        if self.round_index % self.cfg.window == 0:
+            if self.controller.on_window_end(self.round_index - 1):
+                self._apply_plan_change(anchor)
+                plan_changed = True
+        info = {
+            "round": self.round_index - 1,
+            "entropy": h,
+            "bytes_synced": comp_b,
+            "bytes_full": full_b,
+            "ranks": ([r for _, r in plan.ranks[:4]]),
+            "plan_changed": plan_changed,
+        }
+        return new_params, info
+
+    # --------------------------------------------------------- checkpointing
+    def state_dict(self) -> dict[str, Any]:
+        """JSON control-plane state (arrays ride the checkpoint pytree)."""
+        return {
+            "controller": self.controller.state_dict(),
+            "round_index": int(self.round_index),
+            "n_pods": int(self.n_pods),
+            "bytes_synced": int(self.bytes_synced),
+            "bytes_full": int(self.bytes_full),
+            "entropy_log": [[int(r), float(h)] for r, h in self.entropy_log],
+        }
+
+    def load_state_dict(self, sd: dict[str, Any], params_like: Any) -> None:
+        self.controller.load_state_dict(sd["controller"])
+        self.round_index = int(sd["round_index"])
+        self.bytes_synced = int(sd["bytes_synced"])
+        self.bytes_full = int(sd["bytes_full"])
+        self.entropy_log = [(int(r), float(h)) for r, h in sd["entropy_log"]]
+        # Re-shape the comp state to the restored plan (arrays get loaded
+        # into it afterwards — same order contract as the inner trainer).
+        self._apply_plan_change(params_like)
+        saved_n = int(sd.get("n_pods", self.n_pods))
+        if saved_n != self.n_pods:
+            # checkpoint written at a different pod count: the arrays will
+            # be loaded at saved_n rows, then migrated — handled by the
+            # caller via resize_pods after array restore.
+            pass
+
+    @property
+    def arrays(self) -> dict[str, Any]:
+        """The outer device/host arrays for the checkpoint state pytree."""
+        return {"outer_m": self.momentum,
+                "outer_comp": jax.device_get(self._comp)}
+
+    def load_arrays(self, arrs: dict[str, Any]) -> None:
+        self.momentum = jax.tree_util.tree_map(np.asarray, arrs["outer_m"])
+        self._comp_host = jax.tree_util.tree_map(np.asarray,
+                                                 arrs["outer_comp"])
+        self._put_comp()
+
+    def comm_savings(self) -> float:
+        if self.bytes_full == 0:
+            return 0.0
+        return 1.0 - self.bytes_synced / self.bytes_full

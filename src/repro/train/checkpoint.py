@@ -3,15 +3,34 @@
 No orbax offline, so checkpoints are ``.npz`` files plus a JSON manifest of
 the pytree structure. Works for any state pytree (params, opt, compressor),
 restores onto the host, and the trainer re-device_puts with its shardings.
+
+Crash safety: both files are written to temp paths and ``os.replace``d into
+place (atomic on POSIX), and the pair is tied together by a per-save nonce
+stored in both the archive and the manifest — a crash between the two
+renames, or a truncated archive, surfaces as a clean ``CheckpointError``
+("torn checkpoint") instead of a silent mix of two saves. The rollback
+recovery policy in the trainer depends on this: a torn newest checkpoint
+must *fail to restore* so the ring can fall through to an older intact one.
 """
 from __future__ import annotations
 
 import json
 import os
+import uuid
+import warnings
+import zipfile
 from typing import Any
 
 import jax
 import numpy as np
+
+__all__ = ["CheckpointError", "save", "read_extra", "restore"]
+
+_NONCE_KEY = "__manifest_nonce__"
+
+
+class CheckpointError(RuntimeError):
+    """A checkpoint pair is missing, torn, or structurally incompatible."""
 
 
 def _flatten(state: Any):
@@ -22,12 +41,47 @@ def _flatten(state: Any):
 
 
 def save(path: str, state: Any, extra: dict | None = None) -> None:
+    """Atomically write the ``path + '.npz'`` / ``path + '.json'`` pair.
+
+    Archive first, manifest last: an interrupted save leaves either the old
+    pair intact (crash before the first rename) or a nonce mismatch the
+    restore path rejects (crash between renames).
+    """
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
     names, arrays, _ = _flatten(state)
-    np.savez(path + ".npz", **{f"leaf_{i}": a for i, a in enumerate(arrays)})
-    manifest = {"names": names, "extra": extra or {}}
-    with open(path + ".json", "w") as f:
+    nonce = uuid.uuid4().hex
+
+    tmp_npz = f"{path}.npz.tmp.{nonce[:8]}"
+    with open(tmp_npz, "wb") as f:
+        np.savez(f, **{f"leaf_{i}": a for i, a in enumerate(arrays)},
+                 **{_NONCE_KEY: np.array(nonce)})
+    npz_bytes = os.path.getsize(tmp_npz)
+
+    manifest = {"names": names, "extra": extra or {},
+                "nonce": nonce, "npz_bytes": npz_bytes}
+    tmp_json = f"{path}.json.tmp.{nonce[:8]}"
+    with open(tmp_json, "w") as f:
         json.dump(manifest, f)
+
+    os.replace(tmp_npz, path + ".npz")
+    os.replace(tmp_json, path + ".json")
+
+
+def _load_manifest(path: str) -> dict:
+    mpath = path + ".json"
+    if not os.path.exists(mpath):
+        raise CheckpointError(f"no checkpoint manifest at {mpath}")
+    try:
+        with open(mpath) as f:
+            manifest = json.load(f)
+    except (json.JSONDecodeError, UnicodeDecodeError) as e:
+        raise CheckpointError(
+            f"corrupt checkpoint manifest {mpath}: {e}") from e
+    if "names" not in manifest or "extra" not in manifest:
+        raise CheckpointError(
+            f"checkpoint manifest {mpath} is missing required keys "
+            f"(has {sorted(manifest)})")
+    return manifest
 
 
 def read_extra(path: str) -> dict:
@@ -38,23 +92,92 @@ def read_extra(path: str) -> dict:
     the compressor-state arrays that ``restore`` will then be checked
     against.
     """
-    with open(path + ".json") as f:
-        return json.load(f)["extra"]
+    return _load_manifest(path)["extra"]
 
 
-def restore(path: str, like: Any) -> tuple[Any, dict]:
-    """Restore into the structure of ``like`` (shape/dtype checked)."""
-    with open(path + ".json") as f:
-        manifest = json.load(f)
-    data = np.load(path + ".npz")
+def _load_archive(path: str, manifest: dict):
+    apath = path + ".npz"
+    if not os.path.exists(apath):
+        raise CheckpointError(
+            f"torn checkpoint: manifest {path}.json exists but archive "
+            f"{apath} is missing")
+    expect = manifest.get("npz_bytes")
+    actual = os.path.getsize(apath)
+    if expect is not None and actual != expect:
+        raise CheckpointError(
+            f"torn checkpoint: archive {apath} is {actual} bytes, manifest "
+            f"recorded {expect} (truncated write or mixed save?)")
+    try:
+        data = np.load(apath, allow_pickle=False)
+        keys = set(data.files)
+    except (zipfile.BadZipFile, OSError, ValueError) as e:
+        raise CheckpointError(
+            f"torn checkpoint: archive {apath} is unreadable: {e}") from e
+    nonce = manifest.get("nonce")
+    if nonce is not None and _NONCE_KEY in keys:
+        if str(data[_NONCE_KEY]) != nonce:
+            raise CheckpointError(
+                f"torn checkpoint: archive {apath} and manifest {path}.json "
+                f"come from different saves (nonce mismatch)")
+    return data
+
+
+def _structure_mismatch_msg(want: list[str], have: list[str]) -> str:
+    missing = [n for n in want if n not in set(have)]
+    unexpected = [n for n in have if n not in set(want)]
+    parts = [f"checkpoint structure mismatch: expected {len(want)} leaves, "
+             f"archive has {len(have)}"]
+    if missing:
+        parts.append("first missing from checkpoint: "
+                     + ", ".join(missing[:3]))
+    if unexpected:
+        parts.append("first unexpected in checkpoint: "
+                     + ", ".join(unexpected[:3]))
+    if not missing and not unexpected:
+        # Same leaf set, different order/structure: name the first diff.
+        i = next(i for i, (a, b) in enumerate(zip(want, have)) if a != b)
+        parts.append(f"first differing leaf at index {i}: expected "
+                     f"{want[i]!r}, checkpoint has {have[i]!r}")
+    return "; ".join(parts)
+
+
+def restore(path: str, like: Any,
+            on_dtype_mismatch: str = "warn") -> tuple[Any, dict]:
+    """Restore into the structure of ``like`` (shape/dtype checked).
+
+    ``on_dtype_mismatch``: "warn" (coerce with a warning naming the leaf),
+    "raise" (CheckpointError), or "silent" (the pre-PR-7 behaviour).
+    """
+    if on_dtype_mismatch not in ("warn", "raise", "silent"):
+        raise ValueError(f"on_dtype_mismatch={on_dtype_mismatch!r} not in "
+                         "('warn', 'raise', 'silent')")
+    manifest = _load_manifest(path)
+    data = _load_archive(path, manifest)
     flat, treedef = jax.tree_util.tree_flatten_with_path(like)
     names = [jax.tree_util.keystr(kp) for kp, _ in flat]
     if names != manifest["names"]:
-        raise ValueError("checkpoint structure mismatch")
+        raise CheckpointError(
+            _structure_mismatch_msg(names, list(manifest["names"])))
     leaves = []
     for i, (_, ref) in enumerate(flat):
-        arr = data[f"leaf_{i}"]
+        try:
+            arr = data[f"leaf_{i}"]
+        except KeyError as e:
+            raise CheckpointError(
+                f"torn checkpoint: archive {path}.npz is missing leaf_{i} "
+                f"({names[i]})") from e
         if tuple(arr.shape) != tuple(ref.shape):
-            raise ValueError(f"shape mismatch for {names[i]}: {arr.shape} vs {ref.shape}")
-        leaves.append(arr.astype(np.asarray(ref).dtype))
+            raise CheckpointError(
+                f"shape mismatch for {names[i]}: checkpoint {arr.shape} vs "
+                f"expected {ref.shape}")
+        want_dtype = np.asarray(ref).dtype
+        if arr.dtype != want_dtype:
+            msg = (f"dtype mismatch for {names[i]}: checkpoint {arr.dtype} "
+                   f"vs expected {want_dtype}")
+            if on_dtype_mismatch == "raise":
+                raise CheckpointError(msg)
+            if on_dtype_mismatch == "warn":
+                warnings.warn(msg + " (coercing)", stacklevel=2)
+            arr = arr.astype(want_dtype)
+        leaves.append(arr)
     return jax.tree_util.tree_unflatten(treedef, leaves), manifest["extra"]

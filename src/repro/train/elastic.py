@@ -1,0 +1,220 @@
+"""Elastic multi-pod outer-loop training (DiLoCo-style local SGD).
+
+One ``ElasticTrainer`` owns N pod-local inner ``Trainer``s — each on its own
+disjoint device subset with its own data shard — plus an ``OuterOptimizer``
+over a 1-device-per-pod ``pod`` mesh. Per outer round: every pod runs K
+inner steps from the shared anchor, the anchor-minus-pod deltas all-reduce
+over the pod axis (EDGC-compressed, outer DAC window), and a Nesterov outer
+update moves the anchor; the new anchor is broadcast back into every pod.
+
+Elastic membership (pod drop/join between rounds) is a mesh resize driven
+through a checkpoint round-trip: the lead survivor's inner checkpoint
+(params/opt + DAC/CQM/controller state) seeds every rebuilt pod trainer,
+and the outer optimizer migrates its per-pod EF rows (survivors keep
+theirs, joiners get the shared warm-start Q + zero EF). Training continues
+degraded rather than aborting — the "unreliable pods" production story.
+
+Simulated-pod execution: pods run sequentially on the host process over
+fake/real local devices; the outer sync is a REAL collective over the pod
+mesh. On hardware the same program structure maps each inner Trainer onto
+its pod's slice.
+"""
+from __future__ import annotations
+
+import copy
+from typing import Any, Callable, Iterator
+
+import jax
+import numpy as np
+
+from repro.launch.mesh import make_host_mesh, make_pod_mesh
+from repro.optim.outer import OuterConfig, OuterOptimizer
+from repro.train import checkpoint as ckpt_mod
+from repro.train.faults import FaultPlan
+from repro.train.trainer import Trainer, TrainerConfig
+
+__all__ = ["ElasticTrainer"]
+
+
+class ElasticTrainer:
+    """N inner Trainers + one OuterOptimizer + elastic membership.
+
+    ``batch_fn(pod_index)`` must yield a fresh batch iterator for a pod —
+    pods train on DIFFERENT data shards (that is what the outer average
+    buys). Inner-step fault injection (``tcfg.faults``) targets pod 0;
+    round-scheduled events (``pod_drop``/``pod_join``) are handled here.
+    """
+
+    def __init__(self, model, edgc_cfg, tcfg: TrainerConfig,
+                 ocfg: OuterConfig, n_pods: int,
+                 batch_fn: Callable[[int], Iterator[dict]],
+                 seed: int = 0) -> None:
+        if ocfg.outer_k < 1:
+            raise ValueError("outer_k must be >= 1")
+        devices = jax.devices()
+        if len(devices) < n_pods:
+            raise ValueError(f"{n_pods} pods need {n_pods} devices, have "
+                             f"{len(devices)} (set "
+                             "XLA_FLAGS=--xla_force_host_platform_device_"
+                             "count=N for simulated pods)")
+        self.model = model
+        self.edgc_cfg = edgc_cfg
+        self.tcfg = tcfg
+        self.ocfg = ocfg
+        self.seed = seed
+        self.batch_fn = batch_fn
+        self.faults = tcfg.faults if tcfg.faults is not None else FaultPlan()
+        self._fired_round_faults: set[int] = set()
+        self.round_index = 0
+        self.history: list[dict] = []
+
+        self.pods: list[Trainer] = []
+        self._batches: list[Iterator[dict]] = []
+        self._build_pods(n_pods)
+        self.outer = OuterOptimizer(
+            self.pods[0].state["params"], ocfg, self.pod_mesh,
+            model.config.num_layers, seed=seed)
+        # All pods init from the same seed, so pod 0's params ARE the anchor.
+        self.anchor = jax.device_get(self.pods[0].state["params"])
+
+    # ------------------------------------------------------------------ pods
+    @property
+    def n_pods(self) -> int:
+        return len(self.pods)
+
+    def _pod_tcfg(self, pod: int) -> TrainerConfig:
+        t = copy.copy(self.tcfg)
+        t.ckpt_every = 0          # checkpoints are composed, at round level
+        t.total_steps = max(t.total_steps,
+                            self.ocfg.outer_k * self.ocfg.total_rounds)
+        if pod != 0:
+            t.faults = None       # inner-step fault injection hits pod 0
+        return t
+
+    def _build_pods(self, n_pods: int) -> None:
+        devices = jax.devices()[:n_pods]
+        self.pods = []
+        self._batches = []
+        for p in range(n_pods):
+            mesh = make_host_mesh(data=1, model=1, devices=[devices[p]])
+            tr = Trainer(self.model, mesh, self.edgc_cfg,
+                         self._pod_tcfg(p), seed=self.seed)
+            self.pods.append(tr)
+            self._batches.append(self.batch_fn(p))
+        self.pod_mesh = make_pod_mesh(n_pods, devices)
+
+    def _set_pod_params(self, params_host: Any) -> None:
+        for tr in self.pods:
+            tr.state = dict(tr.state)
+            tr.state["params"] = jax.tree_util.tree_map(
+                np.asarray, params_host)
+            tr._shard_state()
+
+    # ------------------------------------------------------------ membership
+    def resize(self, survivors: list[int], n_new: int,
+               ckpt_base: str | None = None) -> None:
+        """Membership change to ``n_new`` pods via a checkpoint round-trip.
+
+        ``survivors`` are OLD pod indices whose outer EF rows carry over
+        (order = new pod index for the first ``len(survivors)`` pods);
+        extra pods beyond that are joiners. The lead survivor's inner
+        checkpoint seeds every rebuilt pod (params/opt/controller/DAC/CQM
+        migrate through restore), so joiners resume mid-run instead of
+        restarting warm-up.
+        """
+        if not survivors:
+            raise ValueError("at least one pod must survive")
+        if len(survivors) > n_new:
+            raise ValueError(f"{len(survivors)} survivors > {n_new} pods")
+        base = ckpt_base or f"{self.tcfg.ckpt_path}_elastic_r{self.round_index}"
+        lead = self.pods[survivors[0]]
+        lead.save_checkpoint(f"{base}_inner",
+                             step=getattr(lead, "_global_step", 0))
+        self._build_pods(n_new)
+        for tr in self.pods:
+            tr.restore_checkpoint(f"{base}_inner")
+        self.outer.resize_pods(self.pod_mesh, survivors)
+        self.anchor = jax.device_get(self.pods[0].state["params"])
+
+    def _handle_round_faults(self) -> list[str]:
+        applied = []
+        for i, ev in enumerate(self.faults.events):
+            if (not ev.on_round or ev.at != self.round_index
+                    or i in self._fired_round_faults):
+                continue
+            self._fired_round_faults.add(i)
+            if ev.kind == "pod_drop":
+                if self.n_pods == 1:
+                    continue      # never drop the last pod
+                target = ev.arg if 0 <= ev.arg < self.n_pods \
+                    else self.n_pods - 1
+                survivors = [p for p in range(self.n_pods) if p != target]
+                self.resize(survivors, self.n_pods - 1)
+                applied.append(f"pod_drop:{target}")
+            elif ev.kind == "pod_join":
+                if self.n_pods >= len(jax.devices()):
+                    continue      # no device for the joiner
+                self.resize(list(range(self.n_pods)), self.n_pods + 1)
+                applied.append("pod_join")
+        return applied
+
+    # ----------------------------------------------------------------- round
+    def run_rounds(self, rounds: int) -> list[dict]:
+        for _ in range(rounds):
+            events = self._handle_round_faults()
+            for p, tr in enumerate(self.pods):
+                tr.run(self._batches[p], num_steps=self.ocfg.outer_k)
+            deltas = []
+            for tr in self.pods:
+                pod_params = jax.device_get(tr.state["params"])
+                deltas.append(jax.tree_util.tree_map(
+                    lambda a, b: np.asarray(a, np.float32)
+                    - np.asarray(b, np.float32),
+                    self.anchor, pod_params))
+            new_params, info = self.outer.round(self.anchor, deltas)
+            self._set_pod_params(new_params)
+            self.anchor = new_params
+            losses = [tr.history[-1]["loss"] if tr.history else float("nan")
+                      for tr in self.pods]
+            info.update({
+                "n_pods": self.n_pods,
+                "membership_events": events,
+                "pod_losses": losses,
+                "recovery": (self.pods[0].recovery.as_dict()
+                             if self.pods[0].recovery is not None else None),
+            })
+            self.history.append(info)
+            self.round_index += 1
+        return self.history
+
+    # --------------------------------------------------------- checkpointing
+    def save_checkpoint(self, path: str) -> None:
+        """Composed elastic checkpoint: lead pod's inner state + the outer
+        arrays/control-plane. Valid at round boundaries only (pod params ==
+        anchor there, so the anchor needs no separate copy)."""
+        self.pods[0].save_checkpoint(
+            f"{path}_inner", step=getattr(self.pods[0], "_global_step", 0))
+        ckpt_mod.save(f"{path}_outer", self.outer.arrays, extra={
+            "outer": self.outer.state_dict(),
+            "round": int(self.round_index),
+            "n_pods": int(self.n_pods),
+        })
+
+    def restore_checkpoint(self, path: str) -> int:
+        """Restore to the checkpoint's pod count (elastic resume): rebuilds
+        the pod fleet at the saved size, restores inner + outer state, and
+        returns the restored round index."""
+        extra = ckpt_mod.read_extra(f"{path}_outer")
+        n_saved = int(extra["n_pods"])
+        if n_saved != self.n_pods:
+            self._build_pods(n_saved)
+        for tr in self.pods:
+            tr.restore_checkpoint(f"{path}_inner")
+        self.outer.set_mesh(self.pod_mesh)
+        self.outer.load_state_dict(extra["outer"],
+                                   self.pods[0].state["params"])
+        arrs, _ = ckpt_mod.restore(f"{path}_outer", self.outer.arrays)
+        self.outer.load_arrays(arrs)
+        self.anchor = jax.device_get(self.pods[0].state["params"])
+        self.round_index = int(extra["round"])
+        return self.round_index

@@ -60,6 +60,7 @@ class TrainStepConfig:
     gds: GDSConfig = GDSConfig()
     measure_entropy: bool = True
     remat: bool = True             # activation checkpointing over blocks
+    guard_nonfinite: bool = False  # recovery: skip non-finite updates
     # Pipeline parallelism + sync-executor surfaces (resolved in __init__;
     # pipeline.num_stages > 1 routes make_train_step to the pipelined
     # builder — the mesh must carry a matching 'pipe' axis).
@@ -70,7 +71,8 @@ class TrainStepConfig:
     def __init__(self, mode: str = "dp_tp",
                  policy_plan: CompressionPlan = CompressionPlan(ranks=()),
                  gds: GDSConfig | None = None, measure_entropy: bool = True,
-                 remat: bool = True, pipeline=None, sync=None,
+                 remat: bool = True, guard_nonfinite: bool = False,
+                 pipeline=None, sync=None,
                  adam=None, **legacy) -> None:
         pipeline, sync = resolve_embedded(pipeline, sync, legacy,
                                           where="TrainStepConfig")
@@ -83,6 +85,7 @@ class TrainStepConfig:
         set_("gds", gds if gds is not None else GDSConfig())
         set_("measure_entropy", measure_entropy)
         set_("remat", remat)
+        set_("guard_nonfinite", guard_nonfinite)
         set_("pipeline", pipeline)
         set_("sync", sync)
         set_("adam", adam)
@@ -141,18 +144,50 @@ def make_train_step(model: Model, mesh, cfg: TrainStepConfig):
         if manual:
             comp_in = jax.tree_util.tree_map(lambda a: a[0], comp_in)
 
+        # Fault-injection channel: a (B,)-shaped flag array the trainer
+        # adds when a nan_grad fault is scheduled (batch-dim shaped so the
+        # uniform manual batch spec shards it like any other batch leaf).
+        batch = dict(batch)
+        inject = batch.pop("_inject", None)
+
         def lf(p):
             loss, mets = loss_fn(p, batch)
             return loss, mets
 
         (loss, mets), grads = jax.value_and_grad(lf, has_aux=True)(params)
+        if inject is not None:
+            bad = jnp.max(inject) > 0
+            grads = jax.tree_util.tree_map(
+                lambda g: jnp.where(bad, jnp.full_like(g, jnp.nan), g), grads)
         pmean = make_dp_pmean(axes) if manual else (lambda x: x)
         loss = pmean(loss)
         synced, comp = sync_exec.sync(grads, comp_in, pmean)
         entropy = (grads_entropy(synced, cfg.gds)
                    if cfg.measure_entropy else jnp.zeros((), jnp.float32))
         opt_state = adam.AdamState(state["opt_step"], state["opt_m"], state["opt_v"])
-        params, opt_state, opt_mets = adam.update(params, synced, opt_state, adam_cfg)
+        if cfg.guard_nonfinite:
+            # Recovery guard: a non-finite loss or synced-grad norm (NaN
+            # injection, corrupted compressor payload, divergence) must not
+            # reach the optimizer OR the compressor's warm-start/EF state.
+            # The whole update is computed and discarded leaf-wise — the
+            # host sees metrics['skipped'] == 1 and resets the EF state.
+            gnorm = adam.global_norm(synced)
+            ok = jnp.isfinite(loss) & jnp.isfinite(gnorm)
+            new_params, new_opt, opt_mets = adam.update(
+                params, synced, opt_state, adam_cfg, gnorm=gnorm)
+            keep = lambda new, old: jax.tree_util.tree_map(
+                lambda a, b: jnp.where(ok, a, b), new, old)
+            params = keep(new_params, params)
+            opt_state = adam.AdamState(
+                step=keep(new_opt.step, opt_state.step),
+                m=keep(new_opt.m, opt_state.m),
+                v=keep(new_opt.v, opt_state.v))
+            comp = keep(comp, comp_in)
+            skipped = 1.0 - ok.astype(jnp.float32)
+        else:
+            params, opt_state, opt_mets = adam.update(
+                params, synced, opt_state, adam_cfg)
+            skipped = None
         if manual:
             comp = jax.tree_util.tree_map(lambda a: a[None], comp)
         new_state = {
@@ -162,6 +197,8 @@ def make_train_step(model: Model, mesh, cfg: TrainStepConfig):
         }
         metrics = {"loss": loss, "entropy": entropy, **opt_mets,
                    **{k: pmean(v) for k, v in mets.items() if k != "loss"}}
+        if skipped is not None:
+            metrics["skipped"] = skipped
         return new_state, metrics
 
     if manual:

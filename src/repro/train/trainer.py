@@ -69,6 +69,8 @@ class TrainerConfig:
     min_compress_dim: int = 64
     measure_entropy: bool = True
     remat: bool = False
+    recovery: Any = None            # repro.train.faults.RecoveryConfig
+    faults: Any = None              # repro.train.faults.FaultPlan (injection)
     pipeline: Any = None            # repro.pipeline.PipelineConfig
     sync: Any = None                # repro.core.SyncConfig
     adam: adam.AdamConfig = dataclasses.field(default_factory=adam.AdamConfig)
@@ -76,7 +78,8 @@ class TrainerConfig:
     def __init__(self, total_steps: int = 1000, log_every: int = 50,
                  ckpt_every: int = 0, ckpt_path: str = "ckpt/state",
                  min_compress_dim: int = 64, measure_entropy: bool = True,
-                 remat: bool = False, pipeline=None, sync=None,
+                 remat: bool = False, recovery=None, faults=None,
+                 pipeline=None, sync=None,
                  adam=None, **legacy) -> None:
         pipeline, sync = resolve_embedded(pipeline, sync, legacy,
                                           where="TrainerConfig")
@@ -87,6 +90,8 @@ class TrainerConfig:
         self.min_compress_dim = min_compress_dim
         self.measure_entropy = measure_entropy
         self.remat = remat
+        self.recovery = recovery
+        self.faults = faults
         self.pipeline = pipeline
         self.sync = sync
         if adam is None:
@@ -207,6 +212,28 @@ class Trainer:
         self.bytes_full = 0             # what no-compression would have moved
         self._last_entropy = 0.0        # most recent alpha-gated reading
 
+        # ----- fault injection + recovery policy (PR 7) -------------------
+        from repro.train.faults import FaultPlan, RecoveryState
+        self.faults = tcfg.faults if tcfg.faults is not None else FaultPlan()
+        self.recovery = (RecoveryState() if tcfg.recovery is not None
+                         else None)
+        self._guard = bool(tcfg.recovery is not None
+                           and tcfg.recovery.guard_nonfinite
+                           and not self.pipelined)
+        if self.pipelined and (self.faults.has("nan_grad")
+                               or self.faults.has("corrupt_payload")):
+            raise ValueError("nan_grad/corrupt_payload fault injection "
+                             "requires the flat (non-pipelined) trainer: "
+                             "the pipelined step has no guard/injection "
+                             "channel yet")
+        self._ckpt_ring: list[tuple[str, int]] = []  # newest last
+        self._tear_next_ckpt = False                 # torn_ckpt fault armed
+        self._ema_seen = 0                           # spike-detector warmup
+        # Faults are one-shot (transient): a rollback that replays past a
+        # fired event's step must NOT re-inject it, or a deterministic
+        # fault would defeat every retry.
+        self._fired_faults: set[int] = set()
+
     def _init_pipelined_state(self, params, comp_key, acfg) -> None:
         from repro.pipeline import partition as ppart
         from repro.pipeline import sync as psync
@@ -262,6 +289,7 @@ class Trainer:
                 gds=self.edgc_cfg.gds,
                 measure_entropy=measure_entropy,
                 remat=self.tcfg.remat,
+                guard_nonfinite=self._guard,
                 pipeline=self.pipeline_cfg,
                 sync=self.sync_cfg,
                 adam=self.tcfg.adam,
@@ -332,8 +360,15 @@ class Trainer:
 
         Can be called repeatedly; the global step counter persists, so
         windows/warm-up continue correctly across calls.
+
+        With ``tcfg.recovery`` set, the loop additionally watches every
+        step's outcome: a guarded skip (non-finite update) triggers an EF
+        reset, a non-finite or spiking loss rolls back to the newest intact
+        checkpoint in the ring (bounded retries + re-arm backoff), and
+        repeated anomalies pin the controller to uncompressed sync.
         """
         tcfg, ctrl = self.tcfg, self.controller
+        rcfg, rs = tcfg.recovery, self.recovery
         comp_bytes, full_bytes = plan_wire_bytes(self.leaves, ctrl.plan)
         stage_b = self.stage_bytes()    # refreshed only at plan changes
         window = self.edgc_cfg.dac.window
@@ -341,9 +376,28 @@ class Trainer:
         start = getattr(self, "_global_step", 0)
         end = min(tcfg.total_steps, start + (num_steps if num_steps is not None
                                              else tcfg.total_steps - start))
-        for step_idx in range(start, end):
+        inject_nan_faults = self.faults.has("nan_grad")
+        step_idx = start
+        while step_idx < end:
             batch = next(batches)
             batch = {k: jnp.asarray(v) for k, v in batch.items()}
+            fired_now = [(i, ev) for i, ev in enumerate(self.faults.events)
+                         if not ev.on_round and ev.at == step_idx
+                         and i not in self._fired_faults]
+            self._fired_faults.update(i for i, _ in fired_now)
+            for _, ev in fired_now:
+                if ev.kind == "corrupt_payload":
+                    self._poison_comp_state()
+                elif ev.kind == "torn_ckpt":
+                    self._tear_next_ckpt = True
+            if inject_nan_faults:
+                # Constant batch structure (one compiled variant): the flag
+                # array is present on EVERY step once any nan_grad fault is
+                # scheduled, zero except at the scheduled steps.
+                flag = float(any(ev.kind == "nan_grad"
+                                 for _, ev in fired_now))
+                bsz = next(iter(batch.values())).shape[0]
+                batch["_inject"] = jnp.full((bsz,), flag, jnp.float32)
             # ISR (alpha) gate: off-iterations dispatch the entropy-off
             # step variant, so the skipped measurements never lower any
             # device work (§IV-B's "fraction of iterations" sampling).
@@ -354,7 +408,55 @@ class Trainer:
             self.bytes_synced += comp_bytes
             self.bytes_full += full_bytes
 
-            if measure:
+            step_ok = True
+            if rs is not None:
+                loss = float(mets["loss"])
+                skipped = float(mets.get("skipped", 0.0)) > 0.5
+                if skipped:
+                    # The compiled guard already refused the update; the
+                    # compressor warm-start/EF may still hold the garbage
+                    # that caused it (corrupted payload), so reset it.
+                    rs.skipped_steps += 1
+                    rs.anomalies += 1
+                    self._reset_comp_state()
+                    rs.ef_resets += 1
+                    step_ok = False
+                elif not np.isfinite(loss):
+                    rs.anomalies += 1
+                    step_ok = False
+                    rolled = self._maybe_rollback()
+                    if rolled is not None:
+                        self._maybe_fallback(ctrl)
+                        comp_bytes, full_bytes = plan_wire_bytes(
+                            self.leaves, ctrl.plan)
+                        stage_b = self.stage_bytes()
+                        step_idx = rolled
+                        continue
+                else:
+                    armed = (self._ema_seen >= rcfg.spike_warmup
+                             and step_idx >= rs.backoff_until)
+                    if (armed and rs.loss_ema is not None and rcfg.rollback
+                            and loss > rcfg.spike_factor
+                            * max(rs.loss_ema, 1e-8)):
+                        rs.anomalies += 1
+                        rolled = self._maybe_rollback()
+                        if rolled is not None:
+                            self._maybe_fallback(ctrl)
+                            comp_bytes, full_bytes = plan_wire_bytes(
+                                self.leaves, ctrl.plan)
+                            stage_b = self.stage_bytes()
+                            step_idx = rolled
+                            continue
+                    rs.loss_ema = (loss if rs.loss_ema is None else
+                                   rcfg.ema_decay * rs.loss_ema
+                                   + (1 - rcfg.ema_decay) * loss)
+                    self._ema_seen += 1
+                if self._maybe_fallback(ctrl):
+                    comp_bytes, full_bytes = plan_wire_bytes(self.leaves,
+                                                             ctrl.plan)
+                    stage_b = self.stage_bytes()
+
+            if measure and step_ok:
                 self._last_entropy = float(mets["entropy"])
                 ctrl.on_entropy(step_idx, self._last_entropy)
 
@@ -380,13 +482,91 @@ class Trainer:
                     "ranks": ctrl.dac.current_ranks() if not ctrl.in_warmup else [],
                     "wall_s": time.time() - t0,
                 }
+                if rs is not None:
+                    rec["recovery"] = rs.as_dict()
                 self.history.append(rec)
 
             if tcfg.ckpt_every and (step_idx + 1) % tcfg.ckpt_every == 0:
-                self.save_checkpoint(f"{tcfg.ckpt_path}_{step_idx+1}",
-                                     step=step_idx + 1)
+                path = f"{tcfg.ckpt_path}_{step_idx+1}"
+                self.save_checkpoint(path, step=step_idx + 1)
+                if self._tear_next_ckpt:
+                    # torn_ckpt fault: simulate a crash mid-write AFTER the
+                    # save completed — the atomic-rename path cannot tear,
+                    # so the injector truncates the archive in place.
+                    from repro.train.faults import truncate_file
+                    truncate_file(path + ".npz")
+                    self._tear_next_ckpt = False
+                self._ring_push(path, step_idx + 1)
+            step_idx += 1
         self._global_step = end
         return self.history
+
+    # ------------------------------------------------------------- recovery
+    def _ring_push(self, path: str, step: int) -> None:
+        keep = (self.tcfg.recovery.ckpt_ring
+                if self.tcfg.recovery is not None else 3)
+        self._ckpt_ring.append((path, step))
+        del self._ckpt_ring[:-keep]
+
+    def _maybe_rollback(self) -> int | None:
+        """Try the ring newest-to-oldest; returns the restored step or None.
+
+        A torn newest checkpoint (CheckpointError) falls through to the
+        next older one — the atomic-save + nonce machinery is what makes
+        this safe.
+        """
+        rcfg, rs = self.tcfg.recovery, self.recovery
+        if not (rcfg.rollback and rs.rollbacks < rcfg.max_rollbacks):
+            return None
+        while self._ckpt_ring:
+            path, _ = self._ckpt_ring[-1]
+            try:
+                restored = self.restore_checkpoint(path, load_recovery=False)
+            except ckpt_mod.CheckpointError:
+                self._ckpt_ring.pop()
+                continue
+            rs.rollbacks += 1
+            rs.backoff_until = restored + rcfg.backoff_steps
+            rs.loss_ema = None          # re-warm the spike detector
+            self._ema_seen = 0
+            return restored
+        return None
+
+    def _maybe_fallback(self, ctrl) -> bool:
+        """After ``fallback_after`` anomalies, pin to uncompressed sync."""
+        rcfg, rs = self.tcfg.recovery, self.recovery
+        if rs.fallback or rs.anomalies < rcfg.fallback_after:
+            return False
+        rs.fallback = True
+        if ctrl.force_fallback():
+            self._apply_plan_change()
+            return True
+        return False
+
+    def _reset_comp_state(self) -> None:
+        """Fresh compressor state under the current plan (EF reset).
+
+        Wholesale re-init rather than surgical repair: after a corrupted
+        payload there is no trustworthy row to keep, and the warm-start Q
+        must be identical across workers anyway.
+        """
+        if self.pipelined:
+            raise RuntimeError("EF reset requires the flat trainer")
+        fresh = init_compressor_state(self.state["params"],
+                                      self.controller.plan, self._comp_key,
+                                      layout=self._layout)
+        comp = replicate_comp_state(fresh, self.world)
+        self.state = dict(self.state)
+        self.state["comp"] = comp
+        self._shard_state()
+
+    def _poison_comp_state(self) -> None:
+        """corrupt_payload fault: NaN-poison the compressor state."""
+        from repro.train.faults import poison_lowrank_state
+        comp_host = jax.device_get(self.state["comp"])
+        self.state = dict(self.state)
+        self.state["comp"] = poison_lowrank_state(comp_host)
+        self._shard_state()
 
     # --------------------------------------------------------- checkpointing
     def save_checkpoint(self, path: str, step: int | None = None) -> None:
@@ -403,19 +583,27 @@ class Trainer:
             "bytes_full": int(self.bytes_full),
             "controller": self.controller.state_dict(),
         }
+        if self.recovery is not None:
+            extra["recovery"] = self.recovery.as_dict()
         ckpt_mod.save(path, self.state, extra=extra)
 
-    def restore_checkpoint(self, path: str) -> int:
+    def restore_checkpoint(self, path: str, load_recovery: bool = True) -> int:
         """Restore device tree + control plane; returns the global step.
 
         Order matters: the controller state (and with it the compression
         plan) is restored FIRST, the state template is re-shaped to that
         plan, and only then are the arrays loaded into it.
+
+        ``load_recovery=False`` keeps the live recovery counters (rollback
+        must not rewind its own retry budget).
         """
         extra = ckpt_mod.read_extra(path)
         if "controller" in extra:
             self.controller.load_state_dict(extra["controller"])
             self._apply_plan_change()     # reshape comp state to the plan
+        if load_recovery and self.recovery is not None and "recovery" in extra:
+            from repro.train.faults import RecoveryState
+            self.recovery = RecoveryState.from_dict(extra["recovery"])
         self.bytes_synced = int(extra.get("bytes_synced", 0))
         self.bytes_full = int(extra.get("bytes_full", 0))
         self._global_step = int(extra.get("step", 0))
