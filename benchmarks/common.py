@@ -10,6 +10,7 @@ from repro.core.dac import DACConfig
 from repro.data.pipeline import SyntheticLM
 from repro.launch.mesh import make_host_mesh
 from repro.models.model import build_model
+from repro.obs import MemorySink, MetricsRegistry
 from repro.optim.adam import AdamConfig
 from repro.train.trainer import Trainer, TrainerConfig
 
@@ -20,7 +21,7 @@ FIDELITY_BATCH = 8
 def fidelity_trainer(policy: str, steps: int, *, rank: int = 32,
                      window: int = 50, num_stages: int = 4, seed: int = 0,
                      cfg=None, alpha: float = 0.5, beta: float = 0.25,
-                     lr: float = 1e-3) -> Trainer:
+                     lr: float = 1e-3, metrics=None) -> Trainer:
     cfg = cfg or GPT2_FIDELITY
     model = build_model(cfg)
     mesh = make_host_mesh(data=1, model=1)
@@ -34,6 +35,7 @@ def fidelity_trainer(policy: str, steps: int, *, rank: int = 32,
         total_steps=steps, log_every=max(1, steps // 40),
         adam=AdamConfig(lr=lr, warmup_steps=max(10, steps // 10),
                         total_steps=steps),
+        metrics=metrics,
     )
     return Trainer(model, mesh, edgc, tcfg, seed=seed)
 
@@ -45,6 +47,12 @@ def fidelity_data(cfg=None, seed: int = 0) -> SyntheticLM:
 
 
 def run_policy(policy: str, steps: int, **kw):
+    # Benchmarks consume the trainer's own telemetry stream: an in-memory
+    # sink captures the structured records every run already emits, so the
+    # harness reads series (entropy, ranks, wire bytes) instead of poking
+    # trainer internals.
+    sink = MemorySink()
+    kw.setdefault("metrics", MetricsRegistry([sink]))
     tr = fidelity_trainer(policy, steps, **kw)
     data = fidelity_data(kw.get("cfg"), kw.get("seed", 0))
     t0 = time.time()
@@ -59,6 +67,7 @@ def run_policy(policy: str, steps: int, **kw):
         "comm_savings": tr.comm_savings(),
         "wall_s": wall,
         "trainer": tr,
+        "metrics": sink,
     }
 
 

@@ -8,21 +8,19 @@ Claims validated:
 """
 from __future__ import annotations
 
-import time
-
 import numpy as np
 
-from .common import csv_row, fidelity_data, fidelity_trainer
+from .common import csv_row, run_policy
 
 
 def run(steps: int = 700) -> list[str]:
-    t0 = time.time()
-    tr = fidelity_trainer("edgc", steps, window=50)
-    data = fidelity_data()
-    hist = tr.run(data.batches())
-    us = (time.time() - t0) * 1e6 / steps
+    res = run_policy("edgc", steps, window=50)
+    us = res["wall_s"] * 1e6 / steps
 
-    ent = np.array([h["entropy"] for h in hist])
+    # Thin sink consumer: the trajectories come from the trainer's own
+    # telemetry stream (MemorySink), not from poking trainer internals.
+    ent = np.array([v for _, v in res["metrics"].scalars("entropy")])
+    losses = [v for _, v in res["metrics"].scalars("loss")]
     n = len(ent)
     # Paper Fig. 2: an initial UNSTABLE phase (entropy rises from the random
     # init as LR warms up) followed by a steady decline. EDGC's own warm-up
@@ -34,7 +32,6 @@ def run(steps: int = 700) -> list[str]:
     post = smooth[peak:]
     early_post = float(np.mean(post[: max(1, len(post) // 4)]))
     late_post = float(np.mean(post[-max(1, len(post) // 4):]))
-    losses = [h["loss"] for h in hist]
     sig_early, sig_late = np.exp(early_post), np.exp(late_post)
 
     rows = [

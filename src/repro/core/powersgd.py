@@ -104,6 +104,22 @@ def init_leaf_state(
     return LowRankState(q=q, err=err)
 
 
+def ef_norm_sq(comp) -> jax.Array:
+    """Total squared error-feedback residual across a compressor pytree.
+
+    Skips non-LowRank leaves (flat buckets carry no EF); the caller takes
+    sqrt after its collective reduction, so this stays additive across
+    pipe stages and DP workers.
+    """
+    total = jnp.zeros((), jnp.float32)
+    leaves = jax.tree_util.tree_leaves(
+        comp, is_leaf=lambda x: isinstance(x, LowRankState))
+    for leaf in leaves:
+        if isinstance(leaf, LowRankState):
+            total = total + jnp.sum(jnp.square(leaf.err.astype(jnp.float32)))
+    return total
+
+
 def _compress_2d(
     grad: jax.Array,
     state: LowRankState,

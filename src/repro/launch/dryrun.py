@@ -475,6 +475,50 @@ def _lower_decode(cfg, model, mesh, params_shapes, pshard, shape_name):
 
 
 # ------------------------------------------------------------------- main
+def record_summary(rec: dict) -> dict:
+    """Machine-checkable summary of one lowering record — the structured
+    twin of the human OK/SKIP/FAIL line, emitted as a ``dryrun`` event so
+    CI can assert on lowerings instead of grepping stdout."""
+    out = {"arch": rec.get("arch"), "shape": rec.get("shape")}
+    if rec.get("skipped"):
+        out["status"] = "skipped"
+        out["reason"] = rec.get("reason")
+        return out
+    if "error" in rec:
+        out["status"] = "failed"
+        out["error"] = rec["error"]
+        return out
+    out["status"] = "ok"
+    for key in ("flops_per_chip", "bytes_per_chip", "collective_total",
+                "compile_s", "policy", "compressed_leaves", "guarded"):
+        if key in rec:
+            out[key] = rec[key]
+    mem = rec.get("memory")
+    if mem:
+        out["per_chip_bytes"] = int(mem.get("argument_bytes", 0)
+                                    + mem.get("temp_bytes", 0))
+    pipe = rec.get("pipeline")
+    if pipe:
+        out["pipeline"] = {
+            "num_stages": pipe.get("num_stages"),
+            "schedule": pipe.get("schedule"),
+            "stash_policy": pipe.get("stash_policy"),
+            "stage_bytes": pipe.get("stage_bytes"),
+            "peak_activation_bytes": pipe.get("peak_activation_bytes"),
+        }
+        if "overlap" in pipe:
+            out["pipeline"]["overlap"] = pipe["overlap"]
+    osync = rec.get("outer_sync")
+    if osync and not osync.get("skipped"):
+        out["outer_sync"] = {
+            "wire_bytes_compressed": osync.get("wire_bytes_compressed"),
+            "wire_bytes_full": osync.get("wire_bytes_full"),
+            "outer_k": osync.get("outer_k"),
+            "outer_rank": osync.get("outer_rank"),
+        }
+    return out
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None, help="one arch id (default: all)")
@@ -509,7 +553,18 @@ def main() -> None:
                     help="lower the fault-guarded train step variant "
                          "(non-finite guard + injection channel)")
     ap.add_argument("--out", default=None, help="write JSON records here")
+    ap.add_argument("--metrics-dir", default=None,
+                    help="also emit one structured 'dryrun' event per combo "
+                         "to DIR/metrics.jsonl (the telemetry sink format)")
     args = ap.parse_args()
+
+    registry = None
+    if args.metrics_dir:
+        import os
+
+        from repro.obs import JsonlSink, MetricsRegistry
+        registry = MetricsRegistry(
+            [JsonlSink(os.path.join(args.metrics_dir, "metrics.jsonl"))])
 
     mesh = make_production_mesh(multi_pod=args.multi_pod, pipe=args.pipe)
     archs = [args.arch] if args.arch else [a for a in ARCHS if a != "gpt2"]
@@ -564,6 +619,9 @@ def main() -> None:
                        "traceback": traceback.format_exc()}
                 print(f"FAIL {tag}: {e}", flush=True)
             records.append(rec)
+            if registry is not None:
+                registry.event("dryrun", **record_summary(rec))
+                registry.flush()
             if args.out:
                 with open(args.out, "w") as f:
                     json.dump(records, f, indent=1)
@@ -572,6 +630,10 @@ def main() -> None:
     n_skip = sum(1 for r in records if r.get("skipped"))
     n_fail = len(records) - n_ok - n_skip
     print(f"\ndone: {n_ok} ok, {n_skip} skipped, {n_fail} failed")
+    if registry is not None:
+        registry.event("dryrun_summary", ok=n_ok, skipped=n_skip,
+                       failed=n_fail)
+        registry.close()
     if n_fail:
         raise SystemExit(1)
 

@@ -120,6 +120,19 @@ def main() -> None:
     ap.add_argument("--outer-rank", type=int, default=32)
     ap.add_argument("--outer-window", type=int, default=2,
                     help="outer DAC window, counted in ROUNDS")
+    # ---- observability (repro.obs) --------------------------------------
+    ap.add_argument("--metrics-dir", default=None,
+                    help="write structured telemetry (scalars/series/events) "
+                         "as JSONL to <dir>/metrics.jsonl; read it back with "
+                         "python -m repro.launch.report <dir>")
+    ap.add_argument("--trace", default=None,
+                    help="emit a Chrome trace-event JSON of the pipeline "
+                         "schedule (Perfetto-loadable) to this path, with "
+                         "tick durations scaled to the measured mean step "
+                         "time (pipelined runs only)")
+    ap.add_argument("--profile", default=None, metavar="LOGDIR",
+                    help="wrap the run in a jax.profiler trace written to "
+                         "LOGDIR (view with TensorBoard/Perfetto)")
     ap.add_argument("--out", default=None)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
@@ -182,9 +195,11 @@ def main() -> None:
         ckpt_every=args.ckpt_every, ckpt_path=args.ckpt_path,
         recovery=recovery, faults=faults,
         pipeline=pipe_cfg, sync=sync_cfg,
+        metrics_dir=args.metrics_dir,
         adam=AdamConfig(lr=args.lr, warmup_steps=max(10, total_steps // 10),
                         total_steps=total_steps),
     )
+    from repro.obs import profiler_session
 
     def pod_batches(pod: int):
         data = SyntheticLM(vocab_size=cfg.vocab_size, seq_len=args.seq,
@@ -210,7 +225,9 @@ def main() -> None:
               f"K={args.outer_k} inner steps, outer policy="
               f"{args.outer_policy}, {args.rounds} rounds"
               + (f", inject={args.inject}" if args.inject else ""))
-        hist = et.run_rounds(args.rounds)
+        with profiler_session(bool(args.profile), args.profile or "profile"):
+            hist = et.run_rounds(args.rounds)
+        et.metrics.close()
         for h in hist:
             ev = f" {h['membership_events']}" if h["membership_events"] else ""
             losses = "/".join(f"{x:.3f}" for x in h["pod_losses"])
@@ -245,12 +262,44 @@ def main() -> None:
                                      num_patches=cfg.num_patches,
                                      d_model=cfg.d_model, seed=args.seed)
 
-    hist = trainer.run(batches())
+    with profiler_session(bool(args.profile), args.profile or "profile"):
+        hist = trainer.run(batches())
     for h in hist:
         print(f"step {h['step']:5d} loss {h['loss']:.4f} H {h['entropy']:+.3f} "
               f"ranks {h['ranks']} comm-saved "
               f"{1 - h['bytes_synced']/max(1, h['bytes_full']):.1%}")
     print(f"final comm savings vs no-compression: {trainer.comm_savings():.2%}")
+
+    if args.trace:
+        if not args.pipe:
+            raise SystemExit("--trace requires --pipe: the tick tracer "
+                             "renders the pipeline schedule")
+        from repro.obs import (load_trace, tick_trace_events, validate_trace,
+                               write_chrome_trace)
+        from repro.pipeline.schedule import simulate_schedule
+        S, M = args.pipe, (args.micro or args.pipe)
+        sim = simulate_schedule(args.schedule, S, M)
+        # Scale the unit-tick spans so the trace's makespan matches the
+        # measured mean step wall time (first->last history record).
+        if len(hist) >= 2 and hist[-1]["step"] > hist[0]["step"]:
+            mean_step_s = ((hist[-1]["wall_s"] - hist[0]["wall_s"])
+                           / (hist[-1]["step"] - hist[0]["step"]))
+        else:
+            mean_step_s = float(sim["makespan"])
+        scale = mean_step_s / float(sim["makespan"])
+        events = tick_trace_events(
+            args.schedule, S, M, t_f=scale, t_b=scale,
+            sync_plan=trainer.overlap_plan, stash_policy=args.stash,
+            n_units=trainer._part.num_units(), stash_every=args.stash_every,
+            time_unit_us=1e6)
+        write_chrome_trace(args.trace, events, metadata={
+            "arch": cfg.name, "schedule": args.schedule, "S": S, "M": M,
+            "mean_step_s": mean_step_s})
+        summary = validate_trace(load_trace(args.trace))
+        print(f"trace: {args.trace} — {summary['spans']} spans on "
+              f"{summary['tracks']} stage tracks, "
+              f"{summary['end_us']/1e6:.3f}s span horizon")
+    trainer.metrics.close()
     if trainer.recovery is not None:
         print(f"recovery: {trainer.recovery.as_dict()}")
     if args.out:

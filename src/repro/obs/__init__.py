@@ -1,0 +1,41 @@
+"""Unified telemetry: structured metrics, tick tracing, run reports.
+
+- ``repro.obs.metrics`` — :class:`MetricsRegistry` with typed
+  scalar/series/counter/event emitters and pluggable sinks (JSONL file,
+  in-memory for tests, CSV export). Device values are host-fetched in one
+  batched ``block_until_ready`` at flush boundaries only.
+- ``repro.obs.trace`` — pipeline tick tracer: tick tables + overlap plan
+  -> Chrome trace-event JSON (Perfetto), plus the ``--profile``
+  ``jax.profiler`` hook.
+- ``repro.launch.report`` — CLI rendering a run's JSONL telemetry as a
+  text summary and re-emitting the trace.
+"""
+from repro.obs.metrics import (  # noqa: F401
+    JsonlSink,
+    MemorySink,
+    MetricsRegistry,
+    read_jsonl,
+    write_csv,
+)
+from repro.obs.trace import (  # noqa: F401
+    expected_span_count,
+    load_trace,
+    profiler_session,
+    tick_trace_events,
+    validate_trace,
+    write_chrome_trace,
+)
+
+__all__ = [
+    "JsonlSink",
+    "MemorySink",
+    "MetricsRegistry",
+    "read_jsonl",
+    "write_csv",
+    "tick_trace_events",
+    "write_chrome_trace",
+    "load_trace",
+    "validate_trace",
+    "expected_span_count",
+    "profiler_session",
+]

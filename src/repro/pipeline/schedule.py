@@ -95,6 +95,7 @@ __all__ = [
     "plan_overlap",
     "stash_points",
     "stash_segments",
+    "tick_spans",
     "peak_activation_bytes",
     "policy_tick_cost",
     "boundary_nbytes",
@@ -377,6 +378,44 @@ def boundary_nbytes(part, mb: dict) -> int:
                for l in jax.tree_util.tree_leaves(spec))
 
 
+def tick_spans(name: str, S: int, M: int,
+               t_f: float = 1.0, t_b: float = 1.0) -> list[dict]:
+    """Per-action spans of the dependency-driven event simulation.
+
+    One dict per tick-table F/B entry::
+
+        {"stage": s, "tick": t, "kind": "F"|"B", "mb": j,
+         "start": seconds, "end": seconds}
+
+    This is the timing engine ``simulate_schedule`` aggregates over and
+    the obs tick tracer (``repro.obs.trace``) renders as Chrome
+    trace-event spans: each F(s, j) waits for F(s-1, j) and the rank's
+    previous op; each B(s, j) waits for B(s+1, j) (or its own F on the
+    last stage).
+    """
+    table = slot_table(name, S, M)
+    end_f: dict[tuple[int, int], float] = {}
+    end_b: dict[tuple[int, int], float] = {}
+    free = [0.0] * S
+    spans: list[dict] = []
+    for t in range(tick_count(name, S, M)):
+        for s in range(S):
+            for kind, j in table[s][t]:
+                if kind == "F":
+                    dep = end_f.get((s - 1, j), 0.0) if s > 0 else 0.0
+                    start = max(free[s], dep)
+                    end_f[(s, j)] = free[s] = start + t_f
+                else:
+                    dep = (end_b.get((s + 1, j), 0.0) if s < S - 1
+                           else end_f[(s, j)])
+                    dep = max(dep, end_f[(s, j)])
+                    start = max(free[s], dep)
+                    end_b[(s, j)] = free[s] = start + t_b
+                spans.append({"stage": s, "tick": t, "kind": kind,
+                              "mb": j, "start": start, "end": free[s]})
+    return spans
+
+
 def simulate_schedule(name: str, S: int, M: int,
                       t_f: float = 1.0, t_b: float = 1.0,
                       splans=None, comm=None) -> dict:
@@ -408,26 +447,12 @@ def simulate_schedule(name: str, S: int, M: int,
     Eq. 4 feasibility signal (chunk times from the fitted ``comm`` model
     when given).
     """
-    table = slot_table(name, S, M)
-    end_f: dict[tuple[int, int], float] = {}
-    end_b: dict[tuple[int, int], float] = {}
-    free = [0.0] * S
-    for t in range(tick_count(name, S, M)):
-        for s in range(S):
-            for kind, j in table[s][t]:
-                if kind == "F":
-                    dep = end_f.get((s - 1, j), 0.0) if s > 0 else 0.0
-                    start = max(free[s], dep)
-                    end_f[(s, j)] = free[s] = start + t_f
-                else:
-                    dep = (end_b.get((s + 1, j), 0.0) if s < S - 1
-                           else end_f[(s, j)])
-                    dep = max(dep, end_f[(s, j)])
-                    start = max(free[s], dep)
-                    end_b[(s, j)] = free[s] = start + t_b
-    makespan = max(free)
+    spans = tick_spans(name, S, M, t_f, t_b)
+    makespan = max(sp["end"] for sp in spans)
     busy = M * (t_f + t_b)
-    last_b = [max(end_b[(s, j)] for j in range(M)) for s in range(S)]
+    last_b = [max(sp["end"] for sp in spans
+                  if sp["stage"] == s and sp["kind"] == "B")
+              for s in range(S)]
     out = {
         "makespan": makespan,
         "bubble_fraction": 1.0 - busy / makespan,
@@ -761,11 +786,23 @@ def make_pipeline_train_step(model: Model, mesh, cfg):
                 n1, a1, a2 = n1 + kn, a1 + k1, a2 + k2
             n2, c1, c2 = sample_moments(synced_sh, cfg.gds)
             w = jnp.where(is_first, 1.0, 0.0)  # count shared leaves once
-            entropy = entropy_from_moments(
-                psum_pipe(n1 + w * n2), psum_pipe(a1 + w * c1),
-                psum_pipe(a2 + w * c2))
+            # Each rank scatters its pooled moments into its stage's slot
+            # and the (S,)-vectors psum over pipe: the SAME three Lemma-2
+            # collectives as the scalar pooling (the ISR-gate invariant —
+            # the off variant lowers exactly 3 fewer psums), but the slots
+            # now also yield the per-stage entropy series for free. Slot
+            # sums recover the pooled moments exactly: every other rank
+            # contributes zeros to a slot.
+            scatter = lambda v: jnp.zeros((S,), jnp.float32).at[s_idx].set(v)
+            n_vec = psum_pipe(scatter(n1 + w * n2))
+            s1_vec = psum_pipe(scatter(a1 + w * c1))
+            s2_vec = psum_pipe(scatter(a2 + w * c2))
+            entropy = entropy_from_moments(n_vec.sum(), s1_vec.sum(),
+                                           s2_vec.sum())
+            stage_entropy = entropy_from_moments(n_vec, s1_vec, s2_vec)
         else:
             entropy = jnp.zeros((), jnp.float32)
+            stage_entropy = jnp.zeros((S,), jnp.float32)
 
         sumsq = lambda t: sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
                               for l in jax.tree_util.tree_leaves(t))
@@ -792,7 +829,11 @@ def make_pipeline_train_step(model: Model, mesh, cfg):
             "opt_step": ost.step,
             "comp": tmap(lambda a: a[None, None], comp2),
         }
-        metrics = {"loss": loss, "entropy": entropy, **opt_mets}
+        from repro.core.powersgd import ef_norm_sq
+        ef_norm = jnp.sqrt(pmean_dp(psum_pipe(ef_norm_sq(comp2))))
+        metrics = {"loss": loss, "entropy": entropy,
+                   "stage_entropy": stage_entropy, "ef_norm": ef_norm,
+                   **opt_mets}
         return new_state, metrics
 
     dp = tuple(axes_dp)

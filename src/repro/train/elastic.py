@@ -68,6 +68,19 @@ class ElasticTrainer:
         self.round_index = 0
         self.history: list[dict] = []
 
+        # ONE registry for the fleet; each pod trainer writes through a
+        # pod-tagged view (a tcfg.metrics_dir here would otherwise open one
+        # JSONL appender per pod on the same file).
+        from repro.obs import JsonlSink, MetricsRegistry
+        if tcfg.metrics is not None:
+            self.metrics = tcfg.metrics
+        elif tcfg.metrics_dir:
+            import os
+            self.metrics = MetricsRegistry(
+                [JsonlSink(os.path.join(tcfg.metrics_dir, "metrics.jsonl"))])
+        else:
+            self.metrics = MetricsRegistry()
+
         self.pods: list[Trainer] = []
         self._batches: list[Iterator[dict]] = []
         self._build_pods(n_pods)
@@ -87,6 +100,8 @@ class ElasticTrainer:
         t.ckpt_every = 0          # checkpoints are composed, at round level
         t.total_steps = max(t.total_steps,
                             self.ocfg.outer_k * self.ocfg.total_rounds)
+        t.metrics = self.metrics.with_tags(pod=pod)
+        t.metrics_dir = None
         if pod != 0:
             t.faults = None       # inner-step fault injection hits pod 0
         return t
@@ -151,11 +166,15 @@ class ElasticTrainer:
                 survivors = [p for p in range(self.n_pods) if p != target]
                 self.resize(survivors, self.n_pods - 1)
                 applied.append(f"pod_drop:{target}")
+                self.metrics.event("pod_drop", round=self.round_index,
+                                   target=int(target), n_pods=self.n_pods)
             elif ev.kind == "pod_join":
                 if self.n_pods >= len(jax.devices()):
                     continue      # no device for the joiner
                 self.resize(list(range(self.n_pods)), self.n_pods + 1)
                 applied.append("pod_join")
+                self.metrics.event("pod_join", round=self.round_index,
+                                   n_pods=self.n_pods)
         return applied
 
     # ----------------------------------------------------------------- round
@@ -184,6 +203,13 @@ class ElasticTrainer:
                              if self.pods[0].recovery is not None else None),
             })
             self.history.append(info)
+            self.metrics.event(
+                "outer_round", round=self.round_index,
+                **{k: v for k, v in info.items()
+                   if k != "round"
+                   and isinstance(v, (int, float, str, bool, list, dict,
+                                      type(None)))})
+            self.metrics.flush()
             self.round_index += 1
         return self.history
 
@@ -210,6 +236,11 @@ class ElasticTrainer:
             self._build_pods(n_saved)
         for tr in self.pods:
             tr.restore_checkpoint(f"{path}_inner")
+        # Shared telemetry cursor restores once, at the fleet level (the
+        # per-pod restores write through tagged views and skip it).
+        inner_extra = ckpt_mod.read_extra(f"{path}_inner")
+        if "metrics" in inner_extra:
+            self.metrics.load_state_dict(inner_extra["metrics"])
         self.outer.set_mesh(self.pod_mesh)
         self.outer.load_state_dict(extra["outer"],
                                    self.pods[0].state["params"])

@@ -29,6 +29,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core.compressor import CompressionPlan
 from repro.core.config import SYNC_FIELDS, alias_property, resolve_embedded
+from repro.core import powersgd
 from repro.core.entropy import GDSConfig, grads_entropy
 from repro.core.sync_executor import SyncExecutor
 from repro.dist.collectives import make_dp_pmean, shard_map_dp
@@ -188,6 +189,9 @@ def make_train_step(model: Model, mesh, cfg: TrainStepConfig):
             params, opt_state, opt_mets = adam.update(
                 params, synced, opt_state, adam_cfg)
             skipped = None
+        # EF-residual norm on the per-worker comp state BEFORE the replica
+        # dim is restored — one scalar, fetched lazily by the obs flush.
+        ef_norm = jnp.sqrt(pmean(powersgd.ef_norm_sq(comp)))
         if manual:
             comp = jax.tree_util.tree_map(lambda a: a[None], comp)
         new_state = {
@@ -195,7 +199,8 @@ def make_train_step(model: Model, mesh, cfg: TrainStepConfig):
             "opt_m": opt_state.m, "opt_v": opt_state.v, "opt_step": opt_state.step,
             "comp": comp,
         }
-        metrics = {"loss": loss, "entropy": entropy, **opt_mets,
+        metrics = {"loss": loss, "entropy": entropy, "ef_norm": ef_norm,
+                   **opt_mets,
                    **{k: pmean(v) for k, v in mets.items() if k != "loss"}}
         if skipped is not None:
             metrics["skipped"] = skipped

@@ -73,13 +73,15 @@ class TrainerConfig:
     faults: Any = None              # repro.train.faults.FaultPlan (injection)
     pipeline: Any = None            # repro.pipeline.PipelineConfig
     sync: Any = None                # repro.core.SyncConfig
+    metrics: Any = None             # repro.obs.MetricsRegistry (or a view)
+    metrics_dir: str | None = None  # convenience: JSONL sink at <dir>/metrics.jsonl
     adam: adam.AdamConfig = dataclasses.field(default_factory=adam.AdamConfig)
 
     def __init__(self, total_steps: int = 1000, log_every: int = 50,
                  ckpt_every: int = 0, ckpt_path: str = "ckpt/state",
                  min_compress_dim: int = 64, measure_entropy: bool = True,
                  remat: bool = False, recovery=None, faults=None,
-                 pipeline=None, sync=None,
+                 pipeline=None, sync=None, metrics=None, metrics_dir=None,
                  adam=None, **legacy) -> None:
         pipeline, sync = resolve_embedded(pipeline, sync, legacy,
                                           where="TrainerConfig")
@@ -94,6 +96,8 @@ class TrainerConfig:
         self.faults = faults
         self.pipeline = pipeline
         self.sync = sync
+        self.metrics = metrics
+        self.metrics_dir = metrics_dir
         if adam is None:
             from repro.optim.adam import AdamConfig
             adam = AdamConfig()
@@ -211,6 +215,45 @@ class Trainer:
         self.bytes_synced = 0           # exact DP wire bytes so far
         self.bytes_full = 0             # what no-compression would have moved
         self._last_entropy = 0.0        # most recent alpha-gated reading
+        self._last_stage_entropy = None  # per-stage hold (pipelined only)
+
+        # ----- telemetry (repro.obs) --------------------------------------
+        # tcfg.metrics wins (shared registry / tagged elastic view); else
+        # metrics_dir attaches a JSONL sink; else a bare no-sink registry so
+        # the loop never needs a null check.
+        from repro.obs import JsonlSink, MetricsRegistry
+        if tcfg.metrics is not None:
+            self.metrics = tcfg.metrics
+        elif tcfg.metrics_dir:
+            import os
+            self.metrics = MetricsRegistry(
+                [JsonlSink(os.path.join(tcfg.metrics_dir, "metrics.jsonl"))])
+        else:
+            self.metrics = MetricsRegistry()
+        pcfg = self.pipeline_cfg
+        self.metrics.event(
+            "run_meta", step=0,
+            model=model.config.name, family=model.config.family,
+            policy=edgc_cfg.policy, n_params=int(self.n_params),
+            world=self.world, pipelined=self.pipelined,
+            num_stages=int(edgc_cfg.num_stages), schedule=pcfg.schedule,
+            num_microbatches=int(pcfg.num_microbatches or pcfg.num_stages),
+            stash_policy=pcfg.stash_policy, overlap_sync=pcfg.overlap_sync,
+            window=int(edgc_cfg.dac.window), log_every=int(tcfg.log_every),
+            total_steps=int(tcfg.total_steps))
+        if self.overlap_plan is not None:
+            op = self.overlap_plan
+            n_in = [sum(len(ids) for _, ids in op.launches[s])
+                    for s in range(op.num_stages)]
+            n_res = [len(op.residual[s]) for s in range(op.num_stages)]
+            total = sum(n_in) + sum(n_res)
+            self.metrics.event(
+                "overlap_plan", step=0,
+                in_loop=n_in, residual=n_res,
+                slack_seconds=list(op.slack_seconds),
+                est_sync_seconds=list(op.est_sync_seconds),
+                feasible=list(op.feasible),
+                slack_utilization=(sum(n_in) / total if total else 0.0))
 
         # ----- fault injection + recovery policy (PR 7) -------------------
         from repro.train.faults import FaultPlan, RecoveryState
@@ -228,6 +271,7 @@ class Trainer:
                              "channel yet")
         self._ckpt_ring: list[tuple[str, int]] = []  # newest last
         self._tear_next_ckpt = False                 # torn_ckpt fault armed
+        self._last_step_ok = True                    # recovered-event edge
         self._ema_seen = 0                           # spike-detector warmup
         # Faults are one-shot (transient): a rollback that replays past a
         # fired event's step must NOT re-inject it, or a deterministic
@@ -377,6 +421,12 @@ class Trainer:
         end = min(tcfg.total_steps, start + (num_steps if num_steps is not None
                                              else tcfg.total_steps - start))
         inject_nan_faults = self.faults.has("nan_grad")
+        # Deferred metric fetch: steps buffer their device metrics here and
+        # ONE batched block_until_ready runs at flush boundaries (log_every,
+        # window ends, checkpoints, run end) — the step loop itself never
+        # forces a device->host sync. The recovery guard is the documented
+        # exception: it must read each step's loss to decide skip/rollback.
+        pending: list[tuple] = []
         step_idx = start
         while step_idx < end:
             batch = next(batches)
@@ -386,6 +436,8 @@ class Trainer:
                          and i not in self._fired_faults]
             self._fired_faults.update(i for i, _ in fired_now)
             for _, ev in fired_now:
+                self.metrics.event("fault_injected", step=step_idx,
+                                   kind=ev.kind, at=int(ev.at))
                 if ev.kind == "corrupt_payload":
                     self._poison_comp_state()
                 elif ev.kind == "torn_ckpt":
@@ -418,14 +470,20 @@ class Trainer:
                     # that caused it (corrupted payload), so reset it.
                     rs.skipped_steps += 1
                     rs.anomalies += 1
+                    self.metrics.event("guard_skip", step=step_idx,
+                                       loss=loss)
                     self._reset_comp_state()
                     rs.ef_resets += 1
+                    self.metrics.counter("ef_resets", step=step_idx)
+                    self.metrics.event("ef_reset", step=step_idx)
                     step_ok = False
                 elif not np.isfinite(loss):
                     rs.anomalies += 1
                     step_ok = False
                     rolled = self._maybe_rollback()
                     if rolled is not None:
+                        self.metrics.event("rollback", step=step_idx,
+                                           restored_step=int(rolled))
                         self._maybe_fallback(ctrl)
                         comp_bytes, full_bytes = plan_wire_bytes(
                             self.leaves, ctrl.plan)
@@ -441,6 +499,9 @@ class Trainer:
                         rs.anomalies += 1
                         rolled = self._maybe_rollback()
                         if rolled is not None:
+                            self.metrics.event("rollback", step=step_idx,
+                                               restored_step=int(rolled),
+                                               spike_loss=loss)
                             self._maybe_fallback(ctrl)
                             comp_bytes, full_bytes = plan_wire_bytes(
                                 self.leaves, ctrl.plan)
@@ -455,40 +516,46 @@ class Trainer:
                     comp_bytes, full_bytes = plan_wire_bytes(self.leaves,
                                                              ctrl.plan)
                     stage_b = self.stage_bytes()
+                if step_ok and not self._last_step_ok:
+                    self.metrics.event("recovered", step=step_idx)
+                self._last_step_ok = step_ok
 
-            if measure and step_ok:
-                self._last_entropy = float(mets["entropy"])
-                ctrl.on_entropy(step_idx, self._last_entropy)
+            # Buffer this step's device metrics + host-side snapshots; the
+            # host reads (on_entropy, history, telemetry) happen in-order at
+            # the next flush boundary. Snapshots are taken NOW because the
+            # cumulative byte ledgers and rank plan advance under the buffer.
+            pending.append((
+                step_idx, measure and step_ok, mets,
+                self.bytes_synced, self.bytes_full, stage_b,
+                ctrl.dac.current_ranks() if not ctrl.in_warmup else [],
+                rs.as_dict() if rs is not None else None,
+                time.time() - t0,
+            ))
 
-            if (step_idx + 1) % window == 0:
+            at_window = (step_idx + 1) % window == 0
+            logged = (step_idx % tcfg.log_every == 0
+                      or step_idx == tcfg.total_steps - 1)
+            at_ckpt = bool(tcfg.ckpt_every
+                           and (step_idx + 1) % tcfg.ckpt_every == 0)
+            if at_window or logged or at_ckpt:
+                # Window ends flush BEFORE on_window_end so every gated
+                # entropy reading in the window reaches the DAC; records
+                # therefore snapshot the plan the step actually ran under.
+                self._flush_pending(pending, t0)
+
+            if at_window:
                 if ctrl.on_window_end(step_idx):
                     self._apply_plan_change()
                     comp_bytes, full_bytes = plan_wire_bytes(self.leaves, ctrl.plan)
                     stage_b = self.stage_bytes()
+                    self.metrics.event(
+                        "plan_change", step=step_idx,
+                        ranks=ctrl.dac.current_ranks())
 
-            if step_idx % tcfg.log_every == 0 or step_idx == tcfg.total_steps - 1:
-                rec = {
-                    "step": step_idx,
-                    "loss": float(mets["loss"]),
-                    # zero-order hold: off-gate steps report the most
-                    # recent alpha-gated reading, not the step's 0.0
-                    # placeholder (the sampled trajectory stays usable)
-                    "entropy": self._last_entropy,
-                    "grad_norm": float(mets["grad_norm"]),
-                    "lr": float(mets["lr"]),
-                    "bytes_synced": self.bytes_synced,
-                    "bytes_full": self.bytes_full,
-                    "stage_bytes": stage_b,
-                    "ranks": ctrl.dac.current_ranks() if not ctrl.in_warmup else [],
-                    "wall_s": time.time() - t0,
-                }
-                if rs is not None:
-                    rec["recovery"] = rs.as_dict()
-                self.history.append(rec)
-
-            if tcfg.ckpt_every and (step_idx + 1) % tcfg.ckpt_every == 0:
+            if at_ckpt:
                 path = f"{tcfg.ckpt_path}_{step_idx+1}"
                 self.save_checkpoint(path, step=step_idx + 1)
+                self.metrics.event("checkpoint", step=step_idx, path=path)
                 if self._tear_next_ckpt:
                     # torn_ckpt fault: simulate a crash mid-write AFTER the
                     # save completed — the atomic-rename path cannot tear,
@@ -498,8 +565,76 @@ class Trainer:
                     self._tear_next_ckpt = False
                 self._ring_push(path, step_idx + 1)
             step_idx += 1
+        self._flush_pending(pending, t0)
         self._global_step = end
         return self.history
+
+    def _flush_pending(self, pending: list[tuple], t0: float) -> None:
+        """Drain the deferred-metrics buffer: ONE batched device sync, then
+        in-order host processing (controller entropy feed, history records,
+        telemetry emission) and a registry flush."""
+        if pending:
+            jax.block_until_ready([m["loss"] for (_, _, m, *_rest) in pending])
+        tcfg, ctrl = self.tcfg, self.controller
+        for (s_i, meas, m, b_syn, b_full, st_b, ranks, rec_rs,
+             wall) in pending:
+            if meas:
+                self._last_entropy = float(m["entropy"])
+                if "stage_entropy" in m:
+                    self._last_stage_entropy = [
+                        float(h) for h in np.asarray(m["stage_entropy"])]
+                ctrl.on_entropy(s_i, self._last_entropy)
+            if s_i % tcfg.log_every == 0 or s_i == tcfg.total_steps - 1:
+                rec = {
+                    "step": s_i,
+                    "loss": float(m["loss"]),
+                    # zero-order hold: off-gate steps report the most
+                    # recent alpha-gated reading, not the step's 0.0
+                    # placeholder (the sampled trajectory stays usable)
+                    "entropy": self._last_entropy,
+                    "grad_norm": float(m["grad_norm"]),
+                    "lr": float(m["lr"]),
+                    "bytes_synced": b_syn,
+                    "bytes_full": b_full,
+                    "stage_bytes": st_b,
+                    "ranks": ranks,
+                    "wall_s": wall,
+                }
+                if rec_rs is not None:
+                    rec["recovery"] = rec_rs
+                self.history.append(rec)
+                self._emit_step_telemetry(s_i, m, b_syn, b_full, st_b,
+                                          ranks, wall)
+        pending.clear()
+        self.metrics.flush()
+
+    def _emit_step_telemetry(self, s_i: int, m: dict, b_syn: int,
+                             b_full: int, st_b, ranks, wall: float) -> None:
+        """One logged step's structured records (values already on host)."""
+        reg = self.metrics
+        reg.scalar("loss", float(m["loss"]), s_i)
+        reg.scalar("entropy", self._last_entropy, s_i)
+        reg.scalar("grad_norm", float(m["grad_norm"]), s_i)
+        reg.scalar("lr", float(m["lr"]), s_i)
+        if "ef_norm" in m:
+            reg.scalar("ef_norm", float(m["ef_norm"]), s_i)
+        reg.scalar("bytes_synced", int(b_syn), s_i)
+        reg.scalar("bytes_full", int(b_full), s_i)
+        if b_syn:
+            reg.scalar("compression_ratio", b_full / b_syn, s_i)
+        reg.scalar("wall_s", wall, s_i)
+        reg.series("stage_wire_bytes", [int(c) for c, _ in st_b], s_i)
+        reg.series("stage_wire_bytes_full", [int(f) for _, f in st_b], s_i)
+        if ranks:
+            reg.series("dac_applied_ranks", [int(r) for r in ranks], s_i)
+            cqm = self.controller.cqm
+            if cqm.anchored:
+                reg.series("cqm_error",
+                           [float(cqm.error_at(int(r))) for r in ranks], s_i)
+        if self._last_stage_entropy is not None:
+            # same zero-order hold as the pooled reading: off-gate steps
+            # report the most recent measured per-stage vector
+            reg.series("stage_entropy", list(self._last_stage_entropy), s_i)
 
     # ------------------------------------------------------------- recovery
     def _ring_push(self, path: str, step: int) -> None:
@@ -582,6 +717,7 @@ class Trainer:
             "bytes_synced": int(self.bytes_synced),
             "bytes_full": int(self.bytes_full),
             "controller": self.controller.state_dict(),
+            "metrics": self.metrics.state_dict(),
         }
         if self.recovery is not None:
             extra["recovery"] = self.recovery.as_dict()
@@ -604,6 +740,16 @@ class Trainer:
         if load_recovery and self.recovery is not None and "recovery" in extra:
             from repro.train.faults import RecoveryState
             self.recovery = RecoveryState.from_dict(extra["recovery"])
+        from repro.obs.metrics import MetricsRegistry as _Registry
+        if (load_recovery and "metrics" in extra
+                and isinstance(self.metrics, _Registry)):
+            # Telemetry cursor: a resumed run appends to its series instead
+            # of restarting at step 0. In-run rollback (load_recovery=False)
+            # keeps the LIVE registry — the telemetry already written is
+            # real history, not state to rewind. Tagged pod views skip the
+            # load too: the fleet owner (ElasticTrainer) restores the shared
+            # cursor exactly once.
+            self.metrics.load_state_dict(extra["metrics"])
         self.bytes_synced = int(extra.get("bytes_synced", 0))
         self.bytes_full = int(extra.get("bytes_full", 0))
         self._global_step = int(extra.get("step", 0))
