@@ -8,8 +8,11 @@ for the gpt2 fidelity config (52 leaves, 24 compressed at rank 8).
   PYTHONPATH=src python benchmarks/sync_bucketing.py --smoke    # CI gate
 
 ``--smoke`` asserts the bucketed path lowers to <= 25% of the per-leaf
-path's collective ops and exits nonzero otherwise (wired into CI). The full
-run also times both executors and writes ``BENCH_sync.json``.
+path's collective ops, that the wire pack/unpack kernels round-trip
+bit-exactly, and that the quant8 coded payload is <= 0.5x the raw fp32
+payload — exiting nonzero otherwise (wired into CI). The full run also
+times both executors plus each wire mode and writes ``BENCH_sync.json``
+(including the ``wire`` section: coded bytes + sync time per mode).
 
 Standalone only (not part of benchmarks.run): it must force the fake
 device count before jax initializes.
@@ -58,17 +61,19 @@ def _setup():
     return params, leaves, plan, mesh, gstack
 
 
-def _build_sync(params, leaves, plan, mesh, bucketed):
+def _build_sync(params, leaves, plan, mesh, bucketed, codec=None):
     axes = dp_axes(mesh)
     layout = bucketing.make_bucket_layout(leaves, plan)
     comp = init_compressor_state(params, plan, jax.random.PRNGKey(1),
-                                 layout=layout if bucketed else None)
+                                 layout=layout if bucketed else None,
+                                 wire_ef=codec is not None)
     comp = replicate_comp_state(comp, WORLD)
 
     def local(gs, cs):
         squeeze = lambda t: jax.tree_util.tree_map(lambda a: a[0], t)
         synced, c2 = sync_grads(squeeze(gs), squeeze(cs), plan,
-                                make_dp_pmean(axes), bucketed=bucketed)
+                                make_dp_pmean(axes), bucketed=bucketed,
+                                codec=codec)
         return synced, jax.tree_util.tree_map(lambda a: a[None], c2)
 
     fn = shard_map_dp(local, mesh, in_specs=(P(("data",)), P(("data",))),
@@ -100,6 +105,55 @@ def _time_round(compiled, gstack, st, iters):
         synced, st = compiled(gstack, st)
     jax.block_until_ready(st)
     return (time.perf_counter() - t0) / iters, st
+
+
+def _wire_section(params, leaves, plan, mesh, gstack, smoke: bool) -> dict:
+    """Coded bytes (+ sync wall time, full runs) per wire mode.
+
+    The byte numbers are the exact planned payload (packed words + scales)
+    vs the same sync priced at raw fp32; the smoke path additionally
+    asserts the pack/unpack kernels round-trip bit-exactly.
+    """
+    from repro.core import plan_wire_bytes, wire
+    from repro.kernels import ops as kops
+
+    rng = np.random.default_rng(1)
+    for bits in (4, 8):
+        codes = jnp.asarray(
+            rng.integers(0, 1 << bits, size=20000), jnp.int32)
+        back = kops.unpack_bits(kops.pack_bits(codes, bits), bits,
+                                codes.shape[0])
+        np.testing.assert_array_equal(np.asarray(back), np.asarray(codes))
+    print("wire_pack_roundtrip,0.000,bits=4/8 bit-exact")
+
+    raw_fp32 = plan_wire_bytes(leaves, plan, 4)[0]
+    section = {"raw_fp32_bytes": raw_fp32}
+    for mode in ("raw", "quant8", "quant4"):
+        codec = wire.resolve_codec(mode)
+        coded = plan_wire_bytes(leaves, plan, 4, codec=codec)[0]
+        entry = {"coded_bytes": coded,
+                 "reduction_vs_raw_fp32": coded / raw_fp32}
+        if not smoke and codec is not None:
+            jfn, comp, _ = _build_sync(params, leaves, plan, mesh, True,
+                                       codec=codec)
+            compiled = jfn.lower(gstack, comp).compile()
+            _, st = compiled(gstack, comp)          # warm-up
+            best = float("inf")
+            for _ in range(3):
+                dt, st = _time_round(compiled, gstack, st, iters=6)
+                best = min(best, dt)
+            entry["us_per_sync"] = best * 1e6
+        section[mode] = entry
+        us = f"{entry.get('us_per_sync', 0.0):.3f}"
+        print(f"wire_{mode},{us},coded_bytes={coded} "
+              f"({entry['reduction_vs_raw_fp32']:.3f}x raw fp32)")
+
+    assert section["quant8"]["coded_bytes"] < raw_fp32, "coded must beat raw"
+    assert section["quant8"]["coded_bytes"] <= 0.5 * raw_fp32, (
+        "quant8 payload must be <= 0.5x the raw fp32 payload")
+    assert (section["quant4"]["coded_bytes"]
+            < section["quant8"]["coded_bytes"])
+    return section
 
 
 def run(smoke: bool = False, out: str = "BENCH_sync.json"):
@@ -147,6 +201,8 @@ def run(smoke: bool = False, out: str = "BENCH_sync.json"):
         f"bucketed sync lowers to {ratio:.0%} of per-leaf collectives; "
         f"must be <= 25%")
 
+    wire_section = _wire_section(params, leaves, plan, mesh, gstack, smoke)
+
     if not smoke:
         payload = {
             "config": GPT2_FIDELITY.name,
@@ -156,6 +212,7 @@ def run(smoke: bool = False, out: str = "BENCH_sync.json"):
             "results": results,
             "collective_ratio": ratio,
             "sync_speedup": speedup,
+            "wire": wire_section,
         }
         with open(out, "w") as f:
             json.dump(payload, f, indent=2)

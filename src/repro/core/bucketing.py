@@ -43,6 +43,7 @@ from typing import Any, Callable, Iterable
 import jax
 import jax.numpy as jnp
 
+from . import wire as _wire
 from .powersgd import LowRankState, compress_leaf, init_leaf_state, resize_rank
 
 __all__ = [
@@ -55,6 +56,7 @@ __all__ = [
     "layout_for_tree",
     "sync_chunks",
     "is_stacked_state",
+    "init_flat_ef",
     "stack_state",
     "unstack_state",
     "resize_stacked_state",
@@ -66,6 +68,7 @@ PsumFn = Callable[[jax.Array], jax.Array]
 
 DEFAULT_BUCKET_BYTES = 32 << 20     # 32 MiB of fp32 per flat bucket
 GROUP_PREFIX = "group:"             # stacked-state dict keys start with this
+EF_PREFIX = "ef:"                   # flat-bucket wire-EF state keys
 
 Member = tuple[str, tuple[int, ...]]    # (leaf path, original leaf shape)
 
@@ -95,9 +98,17 @@ class ShapeGroup:
 
 @dataclasses.dataclass(frozen=True)
 class FlatBucket:
-    """Uncompressed leaves packed into one flat fp32 all-reduce."""
+    """Uncompressed leaves packed into one flat all-reduce.
+
+    ``itemsizes`` parallels ``members``: the byte width of each member's
+    dtype (4 when the layout was derived from shapes alone). The bucket
+    moves in the widest member dtype (``_sync_flat``), so its raw wire
+    bytes are ``num_elements * max(itemsizes)`` — not the fp32 assumption
+    the ledger used to make.
+    """
 
     members: tuple[Member, ...]
+    itemsizes: tuple[int, ...] = ()
 
     @property
     def num_elements(self) -> int:
@@ -140,17 +151,36 @@ class SyncChunk:
     kind: str                           # "group" | "bucket"
     group: ShapeGroup | None = None
     members: tuple[Member, ...] = ()    # kind="bucket": the packed run
+    itemsizes: tuple[int, ...] = ()     # kind="bucket": member dtype widths
 
     @property
     def member_paths(self) -> tuple[str, ...]:
         src = self.group.members if self.kind == "group" else self.members
         return tuple(path for path, _ in src)
 
-    def wire_bytes(self, bytes_per_elem: int = 4) -> int:
-        """Estimated collective payload (factor psums / packed bucket)."""
+    def wire_bytes(self, bytes_per_elem: int | None = None,
+                   codec: "_wire.ChunkCodec | None" = None) -> int:
+        """Collective payload bytes (factor psums / packed bucket).
+
+        Raw: group chunks move fp32 factors (4 B/elem); bucket chunks move
+        the widest member dtype from the layout's ``itemsizes`` (4 B/elem
+        when the layout carries no dtype info). An explicit
+        ``bytes_per_elem`` overrides both. With ``codec``, returns the
+        entropy-coded size (packed words + scales, per member for buckets
+        since quantization groups never span members).
+        """
         if self.kind == "group":
             g = self.group
-            return (g.m + g.n) * g.rank * g.stack_size * bytes_per_elem
+            n_elems = (g.m + g.n) * g.rank * g.stack_size
+            if codec is not None:
+                return _wire.coded_bytes(n_elems, codec)
+            return n_elems * (4 if bytes_per_elem is None else bytes_per_elem)
+        if codec is not None:
+            return sum(_wire.coded_bytes(math.prod(shape) if shape else 1,
+                                         codec)
+                       for _, shape in self.members)
+        if bytes_per_elem is None:
+            bytes_per_elem = max(self.itemsizes) if self.itemsizes else 4
         return sum(math.prod(shape) if shape else 1
                    for _, shape in self.members) * bytes_per_elem
 
@@ -166,20 +196,26 @@ def sync_chunks(layout: BucketLayout) -> tuple[SyncChunk, ...]:
     chunks = [SyncChunk(kind="group", group=g) for g in layout.groups]
     cap_elems = max(1, layout.chunk_bytes // 4) if layout.chunk_bytes > 0 else 0
     for bucket in layout.buckets:
+        sizes = bucket.itemsizes or (4,) * len(bucket.members)
         if cap_elems <= 0:
-            chunks.append(SyncChunk(kind="bucket", members=bucket.members))
+            chunks.append(SyncChunk(kind="bucket", members=bucket.members,
+                                    itemsizes=tuple(sizes)))
             continue
         run: list[Member] = []
+        run_sizes: list[int] = []
         run_elems = 0
-        for path, shape in bucket.members:
+        for (path, shape), isz in zip(bucket.members, sizes):
             nelem = math.prod(shape) if shape else 1
             if run and run_elems + nelem > cap_elems:
-                chunks.append(SyncChunk(kind="bucket", members=tuple(run)))
-                run, run_elems = [], 0
+                chunks.append(SyncChunk(kind="bucket", members=tuple(run),
+                                        itemsizes=tuple(run_sizes)))
+                run, run_sizes, run_elems = [], [], 0
             run.append((path, shape))
+            run_sizes.append(isz)
             run_elems += nelem
         if run:
-            chunks.append(SyncChunk(kind="bucket", members=tuple(run)))
+            chunks.append(SyncChunk(kind="bucket", members=tuple(run),
+                                    itemsizes=tuple(run_sizes)))
     return tuple(chunks)
 
 
@@ -191,18 +227,25 @@ def make_bucket_layout(
 ) -> BucketLayout:
     """Derive the bucketed sync schedule from leaf shapes and a plan.
 
-    ``leaves`` is a sequence of ``LeafInfo`` (``.path``/``.shape``) or plain
-    ``(path, shape)`` pairs, in pytree-flatten order — the order fixes both
-    the stack order inside each group and the bucket packing, so host-side
-    and trace-time derivations agree exactly.
+    ``leaves`` is a sequence of ``LeafInfo`` (``.path``/``.shape``), plain
+    ``(path, shape)`` pairs, or ``(path, shape, itemsize)`` triples, in
+    pytree-flatten order — the order fixes both the stack order inside each
+    group and the bucket packing, so host-side and trace-time derivations
+    agree exactly. The dtype itemsize (when the leaf carries one; default 4)
+    feeds the flat buckets' wire-byte accounting only — the packing itself
+    stays a pure function of (shapes, plan, cap).
     """
     pairs: list[Member] = []
+    size_of: dict[str, int] = {}
     for leaf in leaves:
         if isinstance(leaf, tuple):
-            path, shape = leaf
+            path, shape = leaf[0], leaf[1]
+            isz = leaf[2] if len(leaf) > 2 else None
         else:
             path, shape = leaf.path, leaf.shape
+            isz = getattr(leaf, "itemsize", None)
         pairs.append((path, tuple(shape)))
+        size_of[path] = int(isz) if isz else 4
 
     rank_by_path = plan.as_dict()
     grouped: dict[tuple[int, int, int], list[Member]] = {}
@@ -211,6 +254,10 @@ def make_bucket_layout(
     pending_elems = 0
     cap_elems = max(1, bucket_bytes // 4)   # cap assumes 4 B/elem (widest)
 
+    def _flush(run: list[Member]) -> FlatBucket:
+        return FlatBucket(members=tuple(run),
+                          itemsizes=tuple(size_of[p] for p, _ in run))
+
     for path, shape in pairs:
         if path in rank_by_path:
             m, n = shape[-2:]
@@ -218,12 +265,12 @@ def make_bucket_layout(
         else:
             nelem = math.prod(shape) if shape else 1
             if pending and pending_elems + nelem > cap_elems:
-                buckets.append(FlatBucket(members=tuple(pending)))
+                buckets.append(_flush(pending))
                 pending, pending_elems = [], 0
             pending.append((path, shape))
             pending_elems += nelem
     if pending:
-        buckets.append(FlatBucket(members=tuple(pending)))
+        buckets.append(_flush(pending))
 
     groups = tuple(
         ShapeGroup(m=m, n=n, rank=r, members=tuple(members))
@@ -239,14 +286,32 @@ def layout_for_tree(tree: Any, plan,
     """Layout from a (gradient/param) pytree — shapes are static at trace."""
     flat = jax.tree_util.tree_flatten_with_path(tree)[0]
     return make_bucket_layout(
-        [(jax.tree_util.keystr(kp), tuple(leaf.shape)) for kp, leaf in flat],
+        [(jax.tree_util.keystr(kp), tuple(leaf.shape),
+          jnp.dtype(leaf.dtype).itemsize) for kp, leaf in flat],
         plan, bucket_bytes, chunk_bytes,
     )
 
 
 def is_stacked_state(state: dict) -> bool:
-    """True iff ``state`` is keyed by shape groups rather than leaf paths."""
-    return any(k.startswith(GROUP_PREFIX) for k in state)
+    """True iff ``state`` is keyed by shape groups rather than leaf paths.
+
+    Wire-EF entries (``ef:<path>``, see :func:`init_flat_ef`) only exist in
+    bucketed-format state, so they count too — a coded layout with zero
+    shape groups still infers as bucketed.
+    """
+    return any(k.startswith((GROUP_PREFIX, EF_PREFIX)) for k in state)
+
+
+def init_flat_ef(layout: BucketLayout) -> dict[str, jax.Array]:
+    """Zero error-feedback residuals for every flat-bucket member.
+
+    Coded flat buckets need explicit EF (shape groups get theirs for free
+    through PowerSGD's residual): each member's quantization error is
+    carried under ``ef:<path>`` in the compressor state, fp32, and added
+    back into the next step's payload before re-quantizing.
+    """
+    return {EF_PREFIX + path: jnp.zeros(shape, jnp.float32)
+            for bucket in layout.buckets for path, shape in bucket.members}
 
 
 def bucketing_supported(mesh) -> bool:
@@ -308,6 +373,11 @@ def resize_stacked_state(
     Previously-compressed leaves keep their warm-start Q (leading columns on
     shrink, fresh random tail columns on grow) and their EF residual; leaves
     entering compression get a fresh ``init_leaf_state``.
+
+    Wire-EF entries migrate self-describingly: if the old state carries any
+    ``ef:`` keys, the new state gets one per new-layout bucket member —
+    preserved where the member stayed flat, fresh zeros where it left a
+    shape group (its PowerSGD residual is dropped with the group slot).
     """
     per_leaf = unstack_state(stacked, old_layout)
     new_per_leaf: dict[str, LowRankState] = {}
@@ -321,7 +391,11 @@ def resize_stacked_state(
             else:
                 new_per_leaf[path] = init_leaf_state(shape, group.rank, subkey,
                                                      jnp.float32)
-    return stack_state(new_per_leaf, new_layout)
+    new_state: dict[str, Any] = stack_state(new_per_leaf, new_layout)
+    if any(k.startswith(EF_PREFIX) for k in stacked):
+        for k, zeros in init_flat_ef(new_layout).items():
+            new_state[k] = stacked.get(k, zeros)
+    return new_state
 
 
 # ------------------------------------------------------------- sync executor
@@ -331,14 +405,21 @@ def _sync_group(
     state: LowRankState,
     psum_mean: PsumFn,
     use_kernels: bool = False,
+    codec: "_wire.ChunkCodec | None" = None,
 ) -> tuple[dict[str, jax.Array], LowRankState]:
-    """One shape group: concat -> stacked PowerSGD (2 psums) -> slice back."""
+    """One shape group: concat -> stacked PowerSGD (2 psums) -> slice back.
+
+    With a codec the factor collectives are wrapped (``wire.coded_psum``)
+    so each worker ships quantized P/Q; the resulting reconstruction error
+    lands in PowerSGD's own EF residual — no extra state.
+    """
     stack = jnp.concatenate(
         [by_path[path].astype(jnp.float32).reshape(-1, group.m, group.n)
          for path, _ in group.members],
         axis=0,
     )
-    g_hat, st = compress_leaf(stack, state, psum_mean, use_kernels=use_kernels)
+    g_hat, st = compress_leaf(stack, state, _wire.coded_psum(psum_mean, codec),
+                              use_kernels=use_kernels)
     out: dict[str, jax.Array] = {}
     offset = 0
     for path, shape in group.members:
@@ -353,20 +434,43 @@ def _sync_flat(
     by_path: dict[str, jax.Array],
     members: tuple[Member, ...],
     psum_mean: PsumFn,
-) -> dict[str, jax.Array]:
-    """One flat member run: pack -> psum-mean -> slice back.
+    codec: "_wire.ChunkCodec | None" = None,
+    comp_state: dict | None = None,
+) -> tuple[dict[str, jax.Array], dict[str, jax.Array]]:
+    """One flat member run: [code ->] pack -> psum-mean -> slice back.
 
     The psum is elementwise, so syncing a bucket's member runs separately
     is bit-identical to syncing the packed whole bucket — chunked and
     monolithic flat transfers reassemble to the same values. (The widest
     member dtype is computed per RUN: sub-runs of a mixed-dtype bucket may
     move narrower than the whole bucket would; uniform trees are exact.)
+
+    With a codec, each member is quantized through the wire round trip
+    *independently* (own scales and padding — quantization groups never
+    span members, so the chunked-vs-monolithic equality holds at the coded
+    payload too) with its error-feedback residual (``ef:<path>`` in
+    ``comp_state``) added before and updated after coding. Returns
+    ``(synced leaves, EF-state updates)`` — the latter empty in raw mode
+    or for members whose state carries no EF entry (those code EF-less).
     """
     wire_dtype = jnp.result_type(*[by_path[path].dtype for path, _ in members])
-    packed = jnp.concatenate(
-        [by_path[path].astype(wire_dtype).reshape(-1) for path, _ in members]
-    )
-    packed = psum_mean(packed)
+    parts: list[jax.Array] = []
+    ef_out: dict[str, jax.Array] = {}
+    for path, shape in members:
+        g = by_path[path]
+        if codec is None:
+            parts.append(g.astype(wire_dtype).reshape(-1))
+            continue
+        v = g.astype(jnp.float32).reshape(-1)
+        ef = (comp_state or {}).get(EF_PREFIX + path)
+        if ef is not None:
+            v = v + ef.astype(jnp.float32).reshape(-1)
+        sent = _wire.roundtrip(v, codec).astype(wire_dtype)
+        if ef is not None:
+            ef_out[EF_PREFIX + path] = (v - sent.astype(jnp.float32)
+                                        ).reshape(g.shape)
+        parts.append(sent)
+    packed = psum_mean(jnp.concatenate(parts))
     out: dict[str, jax.Array] = {}
     offset = 0
     for path, shape in members:
@@ -374,7 +478,7 @@ def _sync_flat(
         out[path] = (packed[offset:offset + nelem]
                      .reshape(shape).astype(by_path[path].dtype))
         offset += nelem
-    return out
+    return out, ef_out
 
 
 def bucketed_sync_grads(
@@ -383,11 +487,13 @@ def bucketed_sync_grads(
     layout: BucketLayout,
     psum_mean: PsumFn,
     use_kernels: bool = False,
+    codec: "_wire.ChunkCodec | None" = None,
 ) -> tuple[Any, dict[str, LowRankState]]:
     """Execute the bucketed schedule: 2 psums per group, 1 per flat bucket.
 
     Numerically matches the per-leaf loop to fp32 tolerance (same PowerSGD
-    math, batched; flat buckets are an elementwise-identical mean).
+    math, batched; flat buckets are an elementwise-identical mean). With a
+    codec every collective payload moves entropy-coded (core/wire.py).
     """
     flat, treedef = jax.tree_util.tree_flatten_with_path(grads)
     by_path = {jax.tree_util.keystr(kp): g for kp, g in flat}
@@ -396,12 +502,15 @@ def bucketed_sync_grads(
 
     for group in layout.groups:
         upd, st = _sync_group(by_path, group, comp_state[group.key],
-                              psum_mean, use_kernels=use_kernels)
+                              psum_mean, use_kernels=use_kernels, codec=codec)
         out.update(upd)
         new_state[group.key] = st
 
     for bucket in layout.buckets:
-        out.update(_sync_flat(by_path, bucket.members, psum_mean))
+        upd, ef_upd = _sync_flat(by_path, bucket.members, psum_mean,
+                                 codec=codec, comp_state=comp_state)
+        out.update(upd)
+        new_state.update(ef_upd)
 
     out_leaves = [out[jax.tree_util.keystr(kp)] for kp, _ in flat]
     return jax.tree_util.tree_unflatten(treedef, out_leaves), new_state
@@ -413,18 +522,22 @@ def sync_chunk_grads(
     chunk: SyncChunk,
     psum_mean: PsumFn,
     use_kernels: bool = False,
+    codec: "_wire.ChunkCodec | None" = None,
 ) -> tuple[dict[str, jax.Array], dict[str, LowRankState]]:
     """Execute ONE chunk of a layout's schedule (the overlap primitive).
 
     ``grads_by_path`` only needs the chunk's own members. Returns the
     synced leaves (by path) and the state entries the chunk touched
-    ({group key: new state} for a group chunk, {} for a flat run) — the
-    same helpers ``bucketed_sync_grads`` runs, so executing every chunk of
-    a layout in any order reproduces the monolithic schedule exactly.
+    ({group key: new state} for a group chunk, the coded run's ``ef:``
+    updates for a flat run) — the same helpers ``bucketed_sync_grads``
+    runs, and per-member coding partitions the EF exactly, so executing
+    every chunk of a layout in any order reproduces the monolithic
+    schedule exactly, coded or raw.
     """
     if chunk.kind == "group":
         upd, st = _sync_group(grads_by_path, chunk.group,
                               comp_state[chunk.group.key], psum_mean,
-                              use_kernels=use_kernels)
+                              use_kernels=use_kernels, codec=codec)
         return upd, {chunk.group.key: st}
-    return _sync_flat(grads_by_path, chunk.members, psum_mean), {}
+    return _sync_flat(grads_by_path, chunk.members, psum_mean,
+                      codec=codec, comp_state=comp_state)

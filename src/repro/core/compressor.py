@@ -69,6 +69,13 @@ class LeafInfo:
     shape: tuple[int, ...]
     stage: int          # pipeline stage (0-based) this leaf belongs to
     eligible: bool      # structurally compressible (>=2-D, big enough)
+    dtype: str | None = None   # param dtype name (None: unknown, assume fp32)
+
+    @property
+    def itemsize(self) -> int:
+        """Bytes per element on the raw wire (4 when dtype is unknown)."""
+        import numpy as np
+        return int(np.dtype(self.dtype).itemsize) if self.dtype else 4
 
 
 # Non-block leaves are pinned to the pipeline boundary stages explicitly:
@@ -153,6 +160,7 @@ def classify_leaves(
                 shape=shape,
                 stage=_layer_stage(path, num_layers, num_stages, param_stages),
                 eligible=eligible,
+                dtype=str(leaf.dtype) if hasattr(leaf, "dtype") else None,
             )
         )
     return infos
@@ -234,6 +242,7 @@ def _leaves_by_path(tree: Any) -> dict[str, jax.Array]:
 def init_compressor_state(
     params: Any, plan: CompressionPlan, key: jax.Array, *,
     layout: BucketLayout | None = None,
+    wire_ef: bool = False,
 ) -> dict[str, LowRankState]:
     """Compressor state for a plan.
 
@@ -241,7 +250,9 @@ def init_compressor_state(
     per-leaf parity oracle). With a ``layout``, the same per-leaf warm starts
     are stacked into one fp32 state per shape group, keyed by group — the
     format the bucketed executor consumes. Identical Q values either way, so
-    the two formats start bit-equivalent.
+    the two formats start bit-equivalent. ``wire_ef`` (coded wire modes)
+    additionally seeds a zero error-feedback residual per flat-bucket member
+    (``ef:<path>``), which the coded ``_sync_flat`` reads and updates.
     """
     by_path = _leaves_by_path(params)
     state: dict[str, LowRankState] = {}
@@ -252,7 +263,10 @@ def init_compressor_state(
         )
     if layout is None:
         return state
-    return bucketing.stack_state(state, layout)
+    state = bucketing.stack_state(state, layout)
+    if wire_ef:
+        state.update(bucketing.init_flat_ef(layout))
+    return state
 
 
 def resize_compressor_state(
@@ -287,6 +301,7 @@ def sync_grads(
     use_kernels: bool = False,
     bucketed: bool | None = None,
     bucket_bytes: int = bucketing.DEFAULT_BUCKET_BYTES,
+    codec=None,
 ) -> tuple[Any, dict[str, LowRankState]]:
     """Data-parallel gradient synchronization under a compression plan.
 
@@ -302,15 +317,21 @@ def sync_grads(
         (group-keyed) ``comp_state``; the layout is re-derived here from the
         static leaf shapes + plan, so it always matches the state's packing.
 
-    ``bucketed=None`` infers the executor from the state format. Returns
-    (synced grads, new compressor state).
+    ``bucketed=None`` infers the executor from the state format. ``codec``
+    (wire.ChunkCodec) entropy-codes every collective payload — bucketed
+    executor only; the per-leaf loop stays the uncoded parity oracle.
+    Returns (synced grads, new compressor state).
     """
     if bucketed is None:
         bucketed = bucketing.is_stacked_state(comp_state)
+    if codec is not None and not bucketed:
+        raise ValueError("wire coding (codec) requires the bucketed executor; "
+                         "the per-leaf path is the raw parity oracle")
     if bucketed:
         layout = bucketing.layout_for_tree(grads, plan, bucket_bytes)
         return bucketing.bucketed_sync_grads(grads, comp_state, layout,
-                                             psum_mean, use_kernels=use_kernels)
+                                             psum_mean, use_kernels=use_kernels,
+                                             codec=codec)
     rank_by_path = plan.as_dict()
     flat, treedef = jax.tree_util.tree_flatten_with_path(grads)
     out_leaves = []
@@ -330,12 +351,19 @@ def sync_grads(
 
 
 def plan_wire_bytes(
-    leaves: list[LeafInfo], plan: CompressionPlan, bytes_per_elem: int = 2
+    leaves: list[LeafInfo], plan: CompressionPlan, bytes_per_elem: int = 2,
+    codec=None,
 ) -> tuple[int, int]:
     """(compressed_bytes, full_bytes) moved per step by the DP sync.
 
     Exact byte accounting — this feeds comm_model, Fig. 9, Tables III/VI.
+    With a ``codec`` (wire.ChunkCodec), ``compressed_bytes`` is the
+    entropy-coded payload (packed words + scales for the PowerSGD factor
+    elements and each uncompressed leaf); ``full_bytes`` stays the raw
+    uncoded baseline either way, so the pair reads as coded-vs-raw.
     """
+    from . import wire as _wire
+
     rank_by_path = plan.as_dict()
     comp = 0
     full = 0
@@ -345,7 +373,14 @@ def plan_wire_bytes(
             nelem *= d
         full += nelem * bytes_per_elem
         if info.path in rank_by_path:
-            comp += compressed_bytes(info.shape, rank_by_path[info.path], bytes_per_elem)
+            rank = rank_by_path[info.path]
+            if codec is not None:
+                comp += _wire.coded_bytes(
+                    compressed_bytes(info.shape, rank, 1), codec)
+            else:
+                comp += compressed_bytes(info.shape, rank, bytes_per_elem)
+        elif codec is not None:
+            comp += _wire.coded_bytes(nelem, codec)
         else:
             comp += nelem * bytes_per_elem
     return comp, full

@@ -41,6 +41,16 @@ class SyncConfig:
     bucketed: bool | None = None
     use_kernels: bool = False      # route matmuls through Pallas ops
     bucket_bytes: int = DEFAULT_BUCKET_BYTES
+    #: Wire format under the collectives (core/wire.py WIRE_MODES):
+    #: raw | quant8 | quant4 | entropy. Anything but raw requires the
+    #: bucketed executor (the per-leaf path stays the uncoded parity
+    #: oracle).
+    wire: str = "raw"
+    #: Resolved static quantizer (wire.ChunkCodec) — filled in by the
+    #: trainer / outer optimizer from ``wire`` + the controller's entropy
+    #: reading; carried here so it reaches the executor and keys the step
+    #: compile cache. Leave None to have it resolved from ``wire``.
+    codec: object | None = None
 
 
 SYNC_FIELDS = tuple(f.name for f in dataclasses.fields(SyncConfig))

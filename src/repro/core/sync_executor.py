@@ -28,7 +28,7 @@ from __future__ import annotations
 
 from typing import Any, Callable
 
-from . import bucketing
+from . import bucketing, wire
 from .compressor import CompressionPlan, sync_grads
 from .config import COMM_MODES, SyncConfig
 
@@ -55,6 +55,18 @@ class SyncExecutor:
         if mode != "flat" and splans is None:
             raise ValueError(f"mode={mode!r} requires StagePlans")
         self.cfg = cfg or SyncConfig()
+        if self.cfg.wire not in wire.WIRE_MODES:
+            raise ValueError(f"unknown wire mode {self.cfg.wire!r} "
+                             f"(want one of {wire.WIRE_MODES})")
+        # The trainer/outer optimizer resolve the codec (entropy mode needs
+        # the controller's reading); a bare quant mode resolves here so
+        # direct SyncExecutor construction works too.
+        self.codec = self.cfg.codec
+        if self.codec is None and self.cfg.wire != "raw":
+            self.codec = wire.resolve_codec(self.cfg.wire)
+        if self.codec is not None and mode == "flat" and self.cfg.bucketed is False:
+            raise ValueError("wire coding requires the bucketed executor "
+                             "(SyncConfig.bucketed must not be False)")
         self.mode = mode
         self.plan = plan
         self.splans = splans
@@ -73,11 +85,13 @@ class SyncExecutor:
             return sync_grads(grads, comp_state, self.plan, psum_mean,
                               use_kernels=self.cfg.use_kernels,
                               bucketed=self.cfg.bucketed,
-                              bucket_bytes=self.cfg.bucket_bytes)
+                              bucket_bytes=self.cfg.bucket_bytes,
+                              codec=self.codec)
         from repro.pipeline.sync import stage_sync_grads
         return stage_sync_grads(grads, shared_grads, comp_state, self.splans,
                                 psum_mean, my_stage,
-                                use_kernels=self.cfg.use_kernels)
+                                use_kernels=self.cfg.use_kernels,
+                                codec=self.codec)
 
     # ------------------------------------------------------------- overlapped
     def chunks(self, d: int) -> tuple[bucketing.SyncChunk, ...]:
@@ -96,7 +110,8 @@ class SyncExecutor:
         from repro.pipeline.sync import stage_sync_chunks
         return stage_sync_chunks(grads_by_path, comp_state, self.splans, d,
                                  chunk_ids, psum_mean,
-                                 use_kernels=self.cfg.use_kernels)
+                                 use_kernels=self.cfg.use_kernels,
+                                 codec=self.codec)
 
     def sync_shared(self, shared_grads: Any, psum_mean: PsumFn):
         """Flat-bucket sync of the pipe-replicated shared leaves."""

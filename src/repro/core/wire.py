@@ -1,0 +1,223 @@
+"""Entropy-coded wire format: lossless second stage under the lossy sync.
+
+EDGC's control plane estimates gradient entropy every gated step (Lemma 2)
+to pick per-stage PowerSGD ranks — but the factors and flat buckets then
+ship as raw fp32/bf16. Following ZipCCL's hybrid lossy+lossless design
+(PAPERS.md), this module adds the lossless stage: symmetric per-group
+scaled quantization to b-bit codes (b in {4, 8}) that are bit-packed into
+uint32 words by the Pallas pack/unpack kernels (kernels/pack.py), with the
+bit-width chosen from the *measured* entropy the controller already holds
+— the rank-selection estimate doubles as the codec model, a fusion neither
+ZipCCL nor EDGC does.
+
+Training math is unchanged: every coded payload passes through the
+existing error-feedback loops. PowerSGD factors are coded by wrapping the
+injected ``psum_mean`` (``coded_psum``) — the P/Q quantization error lands
+in ``m_mat - p_hat @ q_new.T`` and is absorbed by the per-leaf EF residual
+with zero new state. Flat-bucket members get an explicit EF entry
+(``ef:<path>`` in the compressor state, core/bucketing.py).
+
+Chunk invariance: quantization groups never span members — each member is
+coded independently (own scales, own padding) — so a member's coded value
+is identical whether it syncs inside a monolithic bucket or a split
+SyncChunk, preserving PR 6's chunked-vs-monolithic bit-equality at the
+coded-payload level.
+
+The collective itself runs on locally-dequantized values (codes from
+different workers are not summable); the coded representation is what a
+real transport would put on the wire, and ``coded_bytes`` is the ledger
+model for it: packed words + one fp32 scale per group.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "WIRE_MODES",
+    "ChunkCodec",
+    "resolve_codec",
+    "select_bits",
+    "quantize",
+    "dequantize",
+    "roundtrip",
+    "roundtrip_arr",
+    "coded_psum",
+    "coded_bytes",
+    "predicted_code_bits",
+]
+
+F32 = jnp.float32
+
+#: SyncConfig.wire knob values. ``raw`` ships uncoded payloads (seed
+#: behaviour); ``quant8``/``quant4`` fix the bit-width; ``entropy`` picks
+#: it per window from the measured gradient entropy (falling back to
+#: quant8 until the first reading lands).
+WIRE_MODES = ("raw", "quant8", "quant4", "entropy")
+
+_LN2 = math.log(2.0)
+
+
+@dataclass(frozen=True)
+class ChunkCodec:
+    """Static quantizer parameters for one sync payload.
+
+    Frozen/hashable so it can ride in SyncConfig and key the trainer's
+    step compile cache — a codec change (entropy mode moving the
+    bit-width at a window boundary) recompiles exactly like a plan change.
+    """
+
+    bits: int = 8    # code width; 32 % bits == 0 (4 or 8 in practice)
+    group: int = 1024  # elements per quantization scale
+
+    def __post_init__(self):
+        if 32 % self.bits != 0 or not (2 <= self.bits <= 16):
+            raise ValueError(f"bits must divide 32 (got {self.bits})")
+        if self.group < 1:
+            raise ValueError(f"group must be >= 1 (got {self.group})")
+
+    @property
+    def qmax(self) -> int:
+        return (1 << (self.bits - 1)) - 1
+
+
+def select_bits(entropy_nats: float, ref_nats: float) -> int:
+    """Map a measured entropy reading to a code width, anchored at 8 bits.
+
+    The first reading of the run (``ref_nats``) gets 8 bits; each full nat
+    the entropy drops below it sheds ~1.44 bits. The continuous value then
+    snaps to the nearest width the pack kernels support ({4, 8} — widths
+    must divide 32), so the wire narrows to 4 bits once entropy has fallen
+    ~2 nats below the run start (the paper's Fig. 2 observation).
+    """
+    bits = 8 + (entropy_nats - ref_nats) / _LN2
+    return 8 if bits >= 6 else 4
+
+
+def resolve_codec(wire: str, entropy_nats: float | None = None,
+                  ref_nats: float | None = None) -> ChunkCodec | None:
+    """Static codec for a wire mode (None = raw/uncoded).
+
+    ``entropy`` mode needs a measured reading and its run-start reference;
+    with neither available yet it falls back to quant8.
+    """
+    if wire not in WIRE_MODES:
+        raise ValueError(f"wire must be one of {WIRE_MODES}, got {wire!r}")
+    if wire == "raw":
+        return None
+    if wire == "quant4":
+        bits = 4
+    elif wire == "quant8" or entropy_nats is None or ref_nats is None:
+        bits = 8
+    else:
+        bits = select_bits(entropy_nats, ref_nats)
+    # Narrower codes get finer scale granularity to hold reconstruction
+    # error (and the EF residual) down; scales are a small fraction of the
+    # payload either way (coded_bytes accounts for them).
+    return ChunkCodec(bits=bits, group=256 if bits <= 4 else 1024)
+
+
+# --------------------------------------------------------------- numerics
+
+def quantize(x: jax.Array, codec: ChunkCodec) -> tuple[jax.Array, jax.Array]:
+    """Flat fp32 (n,) -> (unsigned int32 codes (n,), per-group scales).
+
+    Symmetric per-group quantization: scale = max|x| / qmax over each
+    contiguous ``codec.group`` slice (zero-max groups guarded to scale 1),
+    codes offset by +qmax into [0, 2*qmax] so they pack unsigned.
+    """
+    n = x.shape[0]
+    g = codec.group
+    pad = (-n) % g
+    xf = x.astype(F32)
+    if pad:
+        xf = jnp.pad(xf, (0, pad))
+    grouped = xf.reshape(-1, g)
+    amax = jnp.max(jnp.abs(grouped), axis=1, keepdims=True)
+    scale = jnp.where(amax > 0, amax / codec.qmax, 1.0)
+    q = jnp.clip(jnp.round(grouped / scale), -codec.qmax, codec.qmax)
+    codes = (q + codec.qmax).astype(jnp.int32).reshape(-1)[:n]
+    return codes, scale[:, 0]
+
+
+def dequantize(codes: jax.Array, scales: jax.Array,
+               codec: ChunkCodec) -> jax.Array:
+    """Inverse of quantize: codes (n,) + per-group scales -> fp32 (n,)."""
+    n = codes.shape[0]
+    g = codec.group
+    pad = (-n) % g
+    q = codes.astype(F32) - codec.qmax
+    if pad:
+        q = jnp.pad(q, (0, pad))
+    x = q.reshape(-1, g) * scales[:, None]
+    return x.reshape(-1)[:n]
+
+
+def roundtrip(x: jax.Array, codec: ChunkCodec) -> jax.Array:
+    """quantize -> pack -> unpack -> dequantize one flat fp32 vector.
+
+    The pack/unpack leg is a bit-exact identity, so numerically this
+    equals quantize∘dequantize — but it runs the actual wire kernels, so
+    the sync path exercises exactly what a transport would ship.
+    """
+    from repro.kernels import ops as kops
+
+    codes, scales = quantize(x, codec)
+    words = kops.pack_bits(codes, codec.bits)
+    back = kops.unpack_bits(words, codec.bits, int(x.shape[0]))
+    return dequantize(back, scales, codec)
+
+
+def roundtrip_arr(x: jax.Array, codec: ChunkCodec | None) -> jax.Array:
+    """roundtrip for an arbitrary-shape array, preserving shape and dtype."""
+    if codec is None:
+        return x
+    flat = x.astype(F32).reshape(-1)
+    return roundtrip(flat, codec).reshape(x.shape).astype(x.dtype)
+
+
+def coded_psum(psum_mean, codec: ChunkCodec | None):
+    """Wrap a psum-mean collective so each worker's contribution is coded.
+
+    Every worker quantizes its local payload through the wire round trip
+    before the mean; the caller's error feedback sees the dequantized
+    value, so the quantization error is absorbed, not accumulated.
+    """
+    if codec is None:
+        return psum_mean
+    return lambda a: psum_mean(roundtrip_arr(a, codec))
+
+
+# ------------------------------------------------------------- accounting
+
+def coded_bytes(n_elems: int, codec: ChunkCodec | None,
+                raw_bytes_per_elem: int = 4) -> int:
+    """Wire bytes for n payload elements: packed words + fp32 scales.
+
+    With codec None this is the raw ledger (n * raw_bytes_per_elem), so
+    call sites can thread one accounting function for both modes.
+    """
+    if n_elems <= 0:
+        return 0
+    if codec is None:
+        return n_elems * raw_bytes_per_elem
+    epw = 32 // codec.bits
+    nwords = -(-n_elems // epw)
+    ngroups = -(-n_elems // codec.group)
+    return nwords * 4 + ngroups * 4
+
+
+def predicted_code_bits(entropy_nats: float, step: float) -> float:
+    """Model code entropy (bits/elem) of a quantized continuous source.
+
+    Standard high-resolution quantization result: H(Q(X)) ~ h(X) - log2(Δ)
+    for differential entropy h and step Δ. The property tests check the
+    achieved empirical code entropy against this using the sampled-entropy
+    estimate the controller computed — the codec-model fusion in one line.
+    """
+    if step <= 0:
+        return 0.0
+    return max(0.0, (entropy_nats - math.log(step)) / _LN2)

@@ -14,6 +14,7 @@ import jax.numpy as jnp
 
 from . import entropy_hist as _hist
 from . import lowrank as _lr
+from . import pack as _pack
 from . import ref
 
 F32 = jnp.float32
@@ -107,6 +108,44 @@ def lowrank_matmul(m_mat, q):
     if not _tileable(mm, nn):
         return m_mat.astype(F32) @ q.astype(F32)
     return _lr.ef_lowrank_p(m_mat, zeros, q, interpret=_interpret())
+
+
+# ------------------------------------------------ wire-format bit packing
+# b-bit code <-> uint32 word packing for core/wire.py. Small payloads (under
+# one 512-word panel) route to the ref oracle — the padding would dominate —
+# larger ones run the Pallas kernels (interpret on CPU, as above).
+
+_PACK_BW = 512
+
+
+@partial(jax.jit, static_argnames=("bits",))
+def pack_bits(codes, bits: int):
+    """Flat unsigned codes (n,) -> uint32 words (ceil(n / (32 // bits)),)."""
+    epw = 32 // bits
+    n = codes.shape[0]
+    nwords = -(-n // epw)
+    if nwords < _PACK_BW:
+        return ref.pack_bits(codes, bits)
+    nw_p = -(-nwords // _PACK_BW) * _PACK_BW
+    c = jnp.pad(codes.astype(jnp.uint32), (0, nw_p * epw - n))
+    slots = c.reshape(nw_p, epw).T            # row j = bit-slot j of each word
+    words = _pack.pack_words(slots, bits=bits, bw=_PACK_BW,
+                             interpret=_interpret())
+    return words[:nwords]
+
+
+@partial(jax.jit, static_argnames=("bits", "n"))
+def unpack_bits(words, bits: int, n: int):
+    """Inverse of pack_bits: uint32 words -> first n int32 codes."""
+    epw = 32 // bits
+    nwords = words.shape[0]
+    if nwords < _PACK_BW:
+        return ref.unpack_bits(words, bits, n)
+    nw_p = -(-nwords // _PACK_BW) * _PACK_BW
+    w = jnp.pad(words, (0, nw_p - nwords))
+    slots = _pack.unpack_words(w, bits=bits, bw=_PACK_BW,
+                               interpret=_interpret())
+    return slots.T.reshape(-1)[:n]
 
 
 @partial(jax.jit, static_argnames=("num_bins", "range_sigmas"))

@@ -66,6 +66,34 @@ def sampled_entropy_hist(x: jax.Array, num_bins: int = 256,
     return -jnp.sum(plogp) + jnp.log(width + eps)
 
 
+def pack_bits(codes: jax.Array, bits: int) -> jax.Array:
+    """Bit-pack unsigned int codes in [0, 2**bits) into uint32 words.
+
+    codes: flat (n,) integer array; bits must divide 32 (4 or 8 in
+    practice). Returns (ceil(n / (32 // bits)),) uint32 where word w holds
+    codes[w*epw : (w+1)*epw] in its low-to-high bit fields. The tail word
+    is zero-padded, so pack -> unpack is a bit-exact identity on the first
+    n elements.
+    """
+    epw = 32 // bits
+    n = codes.shape[0]
+    pad = (-n) % epw
+    c = jnp.pad(codes.astype(jnp.uint32), (0, pad)).reshape(-1, epw)
+    word = c[:, 0]
+    for j in range(1, epw):
+        word = word | (c[:, j] << jnp.uint32(j * bits))
+    return word
+
+
+def unpack_bits(words: jax.Array, bits: int, n: int) -> jax.Array:
+    """Inverse of pack_bits: uint32 words -> first n int32 codes."""
+    epw = 32 // bits
+    mask = jnp.uint32((1 << bits) - 1)
+    cols = [(words >> jnp.uint32(j * bits)) & mask for j in range(epw)]
+    codes = jnp.stack(cols, axis=1).reshape(-1)
+    return codes[:n].astype(jnp.int32)
+
+
 def flash_reference(q, k, v, causal: bool = True):
     """Plain full-materialization GQA attention (flash kernel's oracle)."""
     import math

@@ -107,6 +107,16 @@ def build_report(records: list[dict]) -> list[str]:
         lines.append(f"wire bytes: {b_syn / 2**20:.1f} MiB compressed vs "
                      f"{b_full / 2**20:.1f} MiB raw "
                      f"({saved / 2**20:.1f} MiB saved, {ratio:.1f}x)")
+    coded = _scalars(records, "wire_bytes_coded")
+    raw = _scalars(records, "wire_bytes_raw")
+    if coded and raw:
+        b_c, b_r = coded[-1][1], raw[-1][1]
+        bits = _scalars(records, "wire_bits")
+        tag = (f", {int(bits[-1][1])}-bit last" if bits else "")
+        lines.append(f"wire coding: {b_c / 2**20:.1f} MiB coded vs "
+                     f"{b_r / 2**20:.1f} MiB uncoded payload "
+                     f"({b_c / b_r:.2f}x raw{tag})" if b_r else
+                     "wire coding: active (no payload bytes recorded)")
     swb = _series(records, "stage_wire_bytes")
     if swb:
         lines.append("per-stage wire bytes (last): "

@@ -85,6 +85,13 @@ def main() -> None:
     ap.add_argument("--data-mesh", type=int, default=1)
     ap.add_argument("--model-mesh", type=int, default=1)
     ap.add_argument("--use-kernels", action="store_true")
+    ap.add_argument("--wire", default="raw",
+                    choices=["raw", "quant8", "quant4", "entropy"],
+                    help="lossless-training wire coding of the DP sync "
+                         "payloads: scaled int8/int4 quantization + bit "
+                         "packing with error feedback; 'entropy' picks the "
+                         "bit width per window from the controller's "
+                         "entropy reading (quant8 until the first one)")
     # ---- fault injection + recovery -------------------------------------
     ap.add_argument("--inject", default=None,
                     help="comma-separated fault specs kind[:arg]@N (step) "
@@ -181,7 +188,7 @@ def main() -> None:
         stash_every=args.stash_every, overlap_sync=args.overlap,
         chunk_bytes=args.chunk_bytes,
     )
-    sync_cfg = SyncConfig(use_kernels=args.use_kernels)
+    sync_cfg = SyncConfig(use_kernels=args.use_kernels, wire=args.wire)
 
     edgc = EDGCConfig(
         policy=args.policy, fixed_rank=args.rank,
@@ -269,6 +276,10 @@ def main() -> None:
               f"ranks {h['ranks']} comm-saved "
               f"{1 - h['bytes_synced']/max(1, h['bytes_full']):.1%}")
     print(f"final comm savings vs no-compression: {trainer.comm_savings():.2%}")
+    if args.wire != "raw" and trainer.bytes_wire_raw:
+        print(f"wire coding ({args.wire}): {trainer.bytes_synced}/"
+              f"{trainer.bytes_wire_raw} coded/raw payload bytes "
+              f"({trainer.bytes_synced / trainer.bytes_wire_raw:.2%})")
 
     if args.trace:
         if not args.pipe:

@@ -5,7 +5,8 @@ ranks, wire bytes, EF norms, overlap placement, fault/recovery actions)
 and, before this module, threw them away after an ad-hoc ``print``. The
 :class:`MetricsRegistry` makes them first-class records:
 
-  scalar   one float per step           (loss, pooled entropy, lr, ...)
+  scalar   one float per step           (loss, pooled entropy, lr, coded
+                                         vs raw wire-format bytes, ...)
   series   one list per step            (per-stage ranks, wire bytes, ...)
   counter  monotone cumulative count    (ef_resets, rollbacks, ...)
   event    structured occurrence        (fault_injected, plan_change,

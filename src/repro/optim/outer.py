@@ -43,6 +43,7 @@ from repro.core import (
     plan_wire_bytes,
     sync_grads,
 )
+from repro.core import wire
 from repro.core.dac import DACConfig
 from repro.core.entropy import GDSConfig, grads_entropy
 from repro.core.powersgd import LowRankState, resize_rank
@@ -54,7 +55,7 @@ __all__ = ["OuterConfig", "OuterOptimizer", "make_outer_sync_step"]
 _OUTER_BYTES_PER_ELEM = 4
 
 
-def make_outer_sync_step(mesh, plan, gds: GDSConfig):
+def make_outer_sync_step(mesh, plan, gds: GDSConfig, codec=None):
     """The compressed outer all-reduce, jitted for one plan.
 
     (delta, comp) -> (synced delta, new comp, entropy): per-leaf PowerSGD
@@ -64,13 +65,18 @@ def make_outer_sync_step(mesh, plan, gds: GDSConfig):
     replicated spec whose per-pod shards hold each pod's OWN delta; ``comp``
     carries the per-pod leading dim. Also used standalone by the dryrun to
     lower the outer sync at frontier scale.
+
+    ``codec`` (a :class:`~repro.core.wire.ChunkCodec`) wraps the pod-axis
+    pmean so every payload crosses the scarce link quantized+bit-packed:
+    PowerSGD factor error is EF-absorbed; uncompressed leaves see error
+    bounded by half a quantization step per round.
     """
     axes = ("pod",) if "pod" in mesh.axis_names else ()
 
     def local(delta, comp):
         if axes:
             comp = jax.tree_util.tree_map(lambda a: a[0], comp)
-        pmean = make_dp_pmean(axes)
+        pmean = wire.coded_psum(make_dp_pmean(axes), codec)
         synced, comp = sync_grads(delta, comp, plan, pmean, bucketed=False)
         h = grads_entropy(synced, gds)
         if axes:
@@ -103,6 +109,10 @@ class OuterConfig:
     momentum: float = 0.9
     policy: str = "edgc"            # none | fixed | edgc
     fixed_rank: int = 32
+    # Wire coding of the outer all-reduce (repro.core.wire). Cross-pod
+    # links are the scarcest, so deltas ship coded BY DEFAULT; 'entropy'
+    # re-picks the bit width per window from outer-delta entropy.
+    wire: str = "quant8"            # raw | quant8 | quant4 | entropy
     window: int = 2                 # outer DAC window, in ROUNDS
     adjust_limit: int = 8
     total_rounds: int = 100
@@ -138,8 +148,12 @@ class OuterOptimizer:
             lambda a: np.zeros(a.shape, np.float32), jax.device_get(params))
         self.round_index = 0
         self.bytes_synced = 0
+        self.bytes_wire_raw = 0      # same payloads priced uncoded
         self.bytes_full = 0
         self.entropy_log: list[tuple[int, float]] = []
+        # entropy mode starts at its quant8 fallback until the first
+        # round's reading sets the reference distribution
+        self._codec = wire.resolve_codec(cfg.wire)
         self._sync_cache: dict[Any, Any] = {}
         self._host_shapes = jax.tree_util.tree_map(
             lambda a: tuple(a.shape), jax.device_get(params))
@@ -253,10 +267,21 @@ class OuterOptimizer:
 
     # ------------------------------------------------------------- sync step
     def _get_sync(self, plan):
-        if plan not in self._sync_cache:
-            self._sync_cache[plan] = make_outer_sync_step(
-                self.mesh, plan, self._edgc.gds)
-        return self._sync_cache[plan]
+        key = (plan, self._codec)
+        if key not in self._sync_cache:
+            self._sync_cache[key] = make_outer_sync_step(
+                self.mesh, plan, self._edgc.gds, codec=self._codec)
+        return self._sync_cache[key]
+
+    def _refresh_codec(self) -> None:
+        """Entropy-mode wire coding: bit width from the latest outer-delta
+        reading vs the first round's reference. Window-boundary cadence,
+        like the rank plan — the (plan, codec) sync cache re-specializes."""
+        if self.cfg.wire != "entropy" or not self.entropy_log:
+            return
+        self._codec = wire.resolve_codec(
+            "entropy", entropy_nats=self.entropy_log[-1][1],
+            ref_nats=self.entropy_log[0][1])
 
     def _pod_array(self, per_pod: list[np.ndarray]):
         """One logical array whose per-pod shards hold DIFFERENT values.
@@ -302,8 +327,13 @@ class OuterOptimizer:
         self.controller.on_entropy(self.round_index, h)
 
         comp_b, full_b = plan_wire_bytes(self.leaves, plan,
-                                         _OUTER_BYTES_PER_ELEM)
+                                         _OUTER_BYTES_PER_ELEM,
+                                         codec=self._codec)
+        raw_b = (plan_wire_bytes(self.leaves, plan,
+                                 _OUTER_BYTES_PER_ELEM)[0]
+                 if self._codec is not None else comp_b)
         self.bytes_synced += comp_b
+        self.bytes_wire_raw += raw_b
         self.bytes_full += full_b
 
         # Nesterov outer SGD on the averaged pseudo-gradient.
@@ -329,6 +359,7 @@ class OuterOptimizer:
             if self.controller.on_window_end(self.round_index - 1):
                 self._apply_plan_change(anchor)
                 plan_changed = True
+            self._refresh_codec()
         info = {
             "round": self.round_index - 1,
             "entropy": h,
@@ -337,6 +368,9 @@ class OuterOptimizer:
             "ranks": ([r for _, r in plan.ranks[:4]]),
             "plan_changed": plan_changed,
         }
+        if self._codec is not None:
+            info["bytes_wire_raw"] = raw_b
+            info["wire_bits"] = int(self._codec.bits)
         return new_params, info
 
     # --------------------------------------------------------- checkpointing
@@ -347,6 +381,7 @@ class OuterOptimizer:
             "round_index": int(self.round_index),
             "n_pods": int(self.n_pods),
             "bytes_synced": int(self.bytes_synced),
+            "bytes_wire_raw": int(self.bytes_wire_raw),
             "bytes_full": int(self.bytes_full),
             "entropy_log": [[int(r), float(h)] for r, h in self.entropy_log],
         }
@@ -355,8 +390,10 @@ class OuterOptimizer:
         self.controller.load_state_dict(sd["controller"])
         self.round_index = int(sd["round_index"])
         self.bytes_synced = int(sd["bytes_synced"])
+        self.bytes_wire_raw = int(sd.get("bytes_wire_raw", 0))
         self.bytes_full = int(sd["bytes_full"])
         self.entropy_log = [(int(r), float(h)) for r, h in sd["entropy_log"]]
+        self._refresh_codec()   # entropy mode: codec from restored log
         # Re-shape the comp state to the restored plan (arrays get loaded
         # into it afterwards — same order contract as the inner trainer).
         self._apply_plan_change(params_like)

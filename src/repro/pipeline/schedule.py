@@ -249,7 +249,7 @@ class OverlapPlan:
 
 def plan_overlap(name: str, S: int, M: int, splans, *,
                  t_f: float = 1.0, t_b: float = 1.0,
-                 comm=None) -> OverlapPlan:
+                 comm=None, codec=None) -> OverlapPlan:
     """Plan which sync chunks launch at which drain ticks (the planner).
 
     Greedy per stage: walk the stage's eligible drain ticks front-to-back
@@ -272,7 +272,11 @@ def plan_overlap(name: str, S: int, M: int, splans, *,
         d = splans.d_of_stage[s]
         chunks = bucketing.sync_chunks(splans.layouts[d])
         if comm is not None:
-            times = [ring_allreduce_seconds(c.wire_bytes(), comm.world,
+            # wire_bytes: itemsize-aware raw sizes, or the entropy-coded
+            # payload when the sync runs under a codec — transfer placement
+            # should plan for the bytes that actually move.
+            times = [ring_allreduce_seconds(c.wire_bytes(codec=codec),
+                                            comm.world,
                                             comm.hw.ici_bw) for c in chunks]
         else:
             times = [t_b] * len(chunks)

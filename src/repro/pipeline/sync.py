@@ -76,18 +76,19 @@ class StagePlans:
         return f"p{d}:{group_key}"
 
 
-def local_leaves_of(tree: Any) -> list[tuple[str, tuple[int, ...]]]:
-    """(path, shape) pairs of a stage-local tree, in flatten order."""
+def local_leaves_of(tree: Any) -> list[tuple]:
+    """(path, shape, itemsize) triples of a stage-local tree, flatten order."""
     flat = jax.tree_util.tree_flatten_with_path(tree)[0]
-    return [(jax.tree_util.keystr(kp), tuple(leaf.shape)) for kp, leaf in flat]
+    return [(jax.tree_util.keystr(kp), tuple(leaf.shape),
+             jnp.dtype(leaf.dtype).itemsize) for kp, leaf in flat]
 
 
-def stage_local_leaves(stacked_tree: Any) -> list[tuple[str, tuple[int, ...]]]:
-    """Local (path, shape) pairs of a STAGE-STACKED tree (leading S dim
-    stripped) — what one pipe rank's gradient tree looks like."""
+def stage_local_leaves(stacked_tree: Any) -> list[tuple]:
+    """Local (path, shape, itemsize) triples of a STAGE-STACKED tree (leading
+    S dim stripped) — what one pipe rank's gradient tree looks like."""
     flat = jax.tree_util.tree_flatten_with_path(stacked_tree)[0]
-    return [(jax.tree_util.keystr(kp), tuple(leaf.shape)[1:])
-            for kp, leaf in flat]
+    return [(jax.tree_util.keystr(kp), tuple(leaf.shape)[1:],
+             jnp.dtype(leaf.dtype).itemsize) for kp, leaf in flat]
 
 
 def make_stage_plans(
@@ -160,12 +161,16 @@ def stage_sync_grads(
     psum_mean: PsumFn,
     my_stage: jax.Array,
     use_kernels: bool = False,
+    codec=None,
 ) -> tuple[Any, Any, dict[str, LowRankState]]:
     """Sync one rank's stage grads (+ the pipe-summed shared grads) over DP.
 
     ``my_stage`` is the rank's pipe index (traced inside shard_map, or a
     concrete int in unit tests). Runs every distinct schedule; keeps the one
-    covering ``my_stage``. Returns (synced_stage, synced_shared, new_state).
+    covering ``my_stage``. With a ``codec`` every stage collective moves
+    entropy-coded (the pipe-shared leaves stay raw — they move once per
+    step and carry the boundary-sensitive embedding/head signal). Returns
+    (synced_stage, synced_shared, new_state).
     """
     new_state = dict(comp_state)
 
@@ -176,7 +181,7 @@ def stage_sync_grads(
         prefix = f"p{d}:"
         synced_d, st_d = bucketing.bucketed_sync_grads(
             stage_grads, _sub_state(comp_state, prefix), splans.layouts[d],
-            psum_mean, use_kernels=use_kernels,
+            psum_mean, use_kernels=use_kernels, codec=codec,
         )
         for k, v in st_d.items():
             new_state[prefix + k] = v
@@ -210,6 +215,7 @@ def stage_sync_chunks(
     chunk_ids,
     psum_mean: PsumFn,
     use_kernels: bool = False,
+    codec=None,
 ) -> tuple[dict[str, jax.Array], dict[str, LowRankState]]:
     """Run a subset of distinct schedule ``d``'s chunks (overlap primitive).
 
@@ -229,7 +235,7 @@ def stage_sync_chunks(
     for ci in chunk_ids:
         upd, st = bucketing.sync_chunk_grads(
             grads_by_path, sub, chunks[ci], psum_mean,
-            use_kernels=use_kernels)
+            use_kernels=use_kernels, codec=codec)
         updates.update(upd)
         for k, v in st.items():
             new_state[prefix + k] = v
@@ -242,13 +248,18 @@ def stage_wire_bytes(
     plan: CompressionPlan,
     num_stages: int,
     bytes_per_elem: int = 2,
+    codec=None,
 ) -> list[tuple[int, int]]:
     """Per-stage (compressed, full) DP-sync bytes — Algorithm 2's ledger.
 
     Stage s's DP ring moves exactly its own leaves' bytes (stage params are
     disjoint across ranks; shared leaves are charged to their owning
-    boundary stage, consistent with ``_layer_stage`` pinning).
+    boundary stage, consistent with ``_layer_stage`` pinning). With a
+    ``codec`` the compressed column reports entropy-coded payloads
+    (core/wire.py) — full stays the raw baseline, like ``plan_wire_bytes``.
     """
+    from repro.core import wire as _wire
+
     rank_by_path = plan.as_dict()
     out = [[0, 0] for _ in range(num_stages)]
     for info in leaves:
@@ -258,8 +269,14 @@ def stage_wire_bytes(
             nelem *= d
         out[s][1] += nelem * bytes_per_elem
         if info.path in rank_by_path:
-            out[s][0] += compressed_bytes(
-                info.shape, rank_by_path[info.path], bytes_per_elem)
+            rank = rank_by_path[info.path]
+            if codec is not None:
+                out[s][0] += _wire.coded_bytes(
+                    compressed_bytes(info.shape, rank, 1), codec)
+            else:
+                out[s][0] += compressed_bytes(info.shape, rank, bytes_per_elem)
+        elif codec is not None:
+            out[s][0] += _wire.coded_bytes(nelem, codec)
         else:
             out[s][0] += nelem * bytes_per_elem
     return [tuple(x) for x in out]
@@ -271,6 +288,7 @@ def init_pipeline_comp_state(
     plan: CompressionPlan,
     key: jax.Array,
     splans: StagePlans,
+    wire_ef: bool = False,
 ) -> dict[str, LowRankState]:
     """Host-side compressor state for the pipelined executor.
 
@@ -285,9 +303,17 @@ def init_pipeline_comp_state(
     the live slices). Leaves: (S, ...) stacked — uncovered (masked-off)
     stage slices are filled with the first covered stage's values, which
     keeps every slice finite and every rank's program shape-uniform.
+
+    ``wire_ef`` (coded wire modes) adds zero flat-bucket EF residuals under
+    ``p{d}:ef:{local path}``, stacked (S, ...) like the group state.
     """
     flat_index = {path: i for i, (path, _) in enumerate(plan.ranks)}
     state: dict[str, LowRankState] = {}
+    if wire_ef:
+        for d in range(len(splans.distinct)):
+            for k, zeros in bucketing.init_flat_ef(splans.layouts[d]).items():
+                state[splans.state_key(d, k)] = jnp.broadcast_to(
+                    zeros, (splans.num_stages,) + zeros.shape)
     for d, (plan_d, stages_d) in enumerate(splans.distinct):
         if not plan_d.ranks:
             continue
@@ -335,12 +361,19 @@ def resize_pipeline_comp_state(
     """
     S = new_splans.num_stages
     per_stage_local: list[dict[str, LowRankState]] = []
+    per_stage_ef: list[dict[str, jax.Array]] = []
     for s in range(S):
         d_old = old_splans.d_of_stage[s] if s < old_splans.num_stages else 0
         prefix = f"p{d_old}:"
+        ef_prefix = prefix + bucketing.EF_PREFIX
+        per_stage_ef.append({
+            k[len(ef_prefix):]: v[s, 0]
+            for k, v in state.items() if k.startswith(ef_prefix)
+        })
         old_sub = {
             k[len(prefix):]: LowRankState(q=v.q[s, 0], err=v.err[s, 0])
-            for k, v in state.items() if k.startswith(prefix)
+            for k, v in state.items()
+            if k.startswith(prefix) and not k.startswith(ef_prefix)
         }
         per_leaf = (bucketing.unstack_state(old_sub,
                                             old_splans.layouts[d_old])
@@ -373,4 +406,21 @@ def resize_pipeline_comp_state(
                 q=jnp.stack([st[gk].q for st in stacks]),
                 err=jnp.stack([st[gk].err for st in stacks]),
             )
+
+    # Wire-EF entries migrate self-describingly (cf. resize_stacked_state):
+    # preserved where the member stayed in a flat bucket at the same local
+    # shape, fresh zeros where it entered/left compression or was resized.
+    if any(bucketing.EF_PREFIX in k for k in state):
+        for d, (plan_d, stages_d) in enumerate(new_splans.distinct):
+            for bucket in new_splans.layouts[d].buckets:
+                for lp, shp in bucket.members:
+                    slices = []
+                    for s in range(S):
+                        src = s if s in stages_d else stages_d[0]
+                        old = per_stage_ef[src].get(lp)
+                        if old is None or tuple(old.shape) != tuple(shp):
+                            old = jnp.zeros(shp, jnp.float32)
+                        slices.append(old)
+                    out[new_splans.state_key(d, bucketing.EF_PREFIX + lp)] = (
+                        jnp.stack(slices))
     return out

@@ -30,6 +30,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.core.compressor import CompressionPlan
 from repro.core.config import SYNC_FIELDS, alias_property, resolve_embedded
 from repro.core import powersgd
+from repro.core.powersgd import LowRankState
 from repro.core.entropy import GDSConfig, grads_entropy
 from repro.core.sync_executor import SyncExecutor
 from repro.dist.collectives import make_dp_pmean, shard_map_dp
@@ -269,6 +270,11 @@ def state_shardings(state, model: Model, mesh, fsdp: bool = False):
 
     comp_shardings = {}
     for path, st in state["comp"].items():
+        if not isinstance(st, LowRankState):
+            # Raw-array entries (flat-bucket wire-EF residuals, ef:<path>):
+            # bucketed-only, hence TP=1 — replicate the trailing dims.
+            comp_shardings[path] = NamedSharding(mesh, P(*lead))
+            continue
         pspec = pspecs_flat.get(path, P())
         comp_shardings[path] = type(st)(
             q=NamedSharding(mesh, P(*lead)),

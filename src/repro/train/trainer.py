@@ -30,6 +30,7 @@ from repro.core import (
     plan_wire_bytes,
     resize_compressor_state,
 )
+from repro.core import wire
 from repro.core.bucketing import bucketing_supported, make_bucket_layout
 from repro.core.config import SYNC_FIELDS, SyncConfig, alias_property, \
     resolve_embedded
@@ -173,6 +174,25 @@ class Trainer:
             self.sync_cfg = dataclasses.replace(tcfg.sync,
                                                 bucketed=self._bucketed)
 
+        # ----- wire coding (PR 9) ----------------------------------------
+        # The lossless-training wire format rides on the bucketed executor
+        # (per-member quantize+pack happens inside the flat-bucket sync);
+        # the per-leaf TP fallback has no coded path.
+        if self.sync_cfg.wire != "raw" and not self.pipelined \
+                and not self._bucketed:
+            raise ValueError(
+                f"wire={self.sync_cfg.wire!r} requires the bucketed sync "
+                "executor (unsupported mesh or SyncConfig.bucketed=False)")
+        # entropy mode re-resolves the codec at window boundaries against
+        # the first measured entropy (the reference distribution); until a
+        # reading exists it falls back to quant8 inside resolve_codec.
+        self._wire_ref_entropy: float | None = None
+        codec = self.sync_cfg.codec
+        if codec is None and self.sync_cfg.wire != "raw":
+            codec = wire.resolve_codec(self.sync_cfg.wire)
+            self.sync_cfg = dataclasses.replace(self.sync_cfg, codec=codec)
+        self._codec = codec
+
         self._comp_key = jax.random.fold_in(key, 123)
         if self.pipelined:
             self._init_pipelined_state(params, jax.random.fold_in(key, 99),
@@ -189,7 +209,8 @@ class Trainer:
                             if self._bucketed else None)
             comp = init_compressor_state(params, self.controller.plan,
                                          jax.random.fold_in(key, 99),
-                                         layout=self._layout)
+                                         layout=self._layout,
+                                         wire_ef=self._codec is not None)
             comp = replicate_comp_state(comp, self.world)
             self.state = {"params": params, "opt_m": ost.m, "opt_v": ost.v,
                           "opt_step": ost.step, "comp": comp}
@@ -212,7 +233,8 @@ class Trainer:
         self._step_cache: dict[Any, Any] = {}
         self.step_configs: dict[Any, TrainStepConfig] = {}
         self.history: list[dict] = []
-        self.bytes_synced = 0           # exact DP wire bytes so far
+        self.bytes_synced = 0           # exact DP wire bytes so far (coded)
+        self.bytes_wire_raw = 0         # same payloads priced uncoded
         self.bytes_full = 0             # what no-compression would have moved
         self._last_entropy = 0.0        # most recent alpha-gated reading
         self._last_stage_entropy = None  # per-stage hold (pipelined only)
@@ -298,7 +320,8 @@ class Trainer:
             chunk_bytes=self.pipeline_cfg.chunk_bytes,
             local_path=self._part.local_leaf_path)
         comp = psync.init_pipeline_comp_state(
-            params, self.controller.plan, comp_key, self._splans)
+            params, self.controller.plan, comp_key, self._splans,
+            wire_ef=self._codec is not None)
         comp = psync.replicate_pipeline_comp_state(comp, self.world)
         self.state = {
             "stage_params": stage_p, "shared_params": shared_p,
@@ -323,7 +346,9 @@ class Trainer:
         if measure_entropy is None:
             measure_entropy = self.tcfg.measure_entropy
         plan = self.controller.plan
-        key = (plan, measure_entropy)
+        # sync_cfg is part of the key: entropy-mode wire coding swaps the
+        # codec at window boundaries, which must re-specialize the step.
+        key = (plan, measure_entropy, self.sync_cfg)
         if key not in self._step_cache:
             # The step builder sees the trainer's canonical embedded
             # configs BY IDENTITY (no field copying): one source of truth
@@ -347,6 +372,40 @@ class Trainer:
                 donate_argnums=0,
             )
         return self._step_cache[key]
+
+    def _refresh_codec(self) -> bool:
+        """Entropy-mode wire coding: re-pick the bit width from the most
+        recent pooled entropy reading (reference = the run's first
+        measurement). Returns True when the codec changed, i.e. the byte
+        ledger must re-price. Called at window boundaries only, so the
+        step re-specialization it triggers rides the existing
+        plan-change recompile cadence."""
+        if self.sync_cfg.wire != "entropy":
+            return False
+        hist = self.controller.entropy_history
+        if not hist:
+            return False
+        if self._wire_ref_entropy is None:
+            self._wire_ref_entropy = float(hist[0][1])
+        new = wire.resolve_codec("entropy",
+                                 entropy_nats=self._last_entropy,
+                                 ref_nats=self._wire_ref_entropy)
+        if new == self._codec:
+            return False
+        self._codec = new
+        self.sync_cfg = dataclasses.replace(self.sync_cfg, codec=new)
+        return True
+
+    def _price_plan(self) -> tuple[int, int, int]:
+        """(coded, raw-payload, no-compression) bytes per step under the
+        current plan. ``coded == raw`` when wire coding is off; ``raw`` is
+        the same sync payload priced at its uncoded wire dtype, so
+        coded/raw is the measured wire-format reduction."""
+        comp, full = plan_wire_bytes(self.leaves, self.controller.plan,
+                                     codec=self._codec)
+        raw = (plan_wire_bytes(self.leaves, self.controller.plan)[0]
+               if self._codec is not None else comp)
+        return comp, raw, full
 
     def _apply_plan_change(self) -> None:
         """Resize/extend compressor state to the new plan (host-side).
@@ -413,7 +472,7 @@ class Trainer:
         """
         tcfg, ctrl = self.tcfg, self.controller
         rcfg, rs = tcfg.recovery, self.recovery
-        comp_bytes, full_bytes = plan_wire_bytes(self.leaves, ctrl.plan)
+        comp_bytes, raw_bytes, full_bytes = self._price_plan()
         stage_b = self.stage_bytes()    # refreshed only at plan changes
         window = self.edgc_cfg.dac.window
         t0 = time.time()
@@ -458,6 +517,7 @@ class Trainer:
             self.state, mets = step_fn(self.state, batch)
 
             self.bytes_synced += comp_bytes
+            self.bytes_wire_raw += raw_bytes
             self.bytes_full += full_bytes
 
             step_ok = True
@@ -485,8 +545,7 @@ class Trainer:
                         self.metrics.event("rollback", step=step_idx,
                                            restored_step=int(rolled))
                         self._maybe_fallback(ctrl)
-                        comp_bytes, full_bytes = plan_wire_bytes(
-                            self.leaves, ctrl.plan)
+                        comp_bytes, raw_bytes, full_bytes = self._price_plan()
                         stage_b = self.stage_bytes()
                         step_idx = rolled
                         continue
@@ -503,8 +562,8 @@ class Trainer:
                                                restored_step=int(rolled),
                                                spike_loss=loss)
                             self._maybe_fallback(ctrl)
-                            comp_bytes, full_bytes = plan_wire_bytes(
-                                self.leaves, ctrl.plan)
+                            comp_bytes, raw_bytes, full_bytes = \
+                                self._price_plan()
                             stage_b = self.stage_bytes()
                             step_idx = rolled
                             continue
@@ -513,8 +572,7 @@ class Trainer:
                                    + (1 - rcfg.ema_decay) * loss)
                     self._ema_seen += 1
                 if self._maybe_fallback(ctrl):
-                    comp_bytes, full_bytes = plan_wire_bytes(self.leaves,
-                                                             ctrl.plan)
+                    comp_bytes, raw_bytes, full_bytes = self._price_plan()
                     stage_b = self.stage_bytes()
                 if step_ok and not self._last_step_ok:
                     self.metrics.event("recovered", step=step_idx)
@@ -526,7 +584,8 @@ class Trainer:
             # cumulative byte ledgers and rank plan advance under the buffer.
             pending.append((
                 step_idx, measure and step_ok, mets,
-                self.bytes_synced, self.bytes_full, stage_b,
+                self.bytes_synced, self.bytes_wire_raw, self.bytes_full,
+                stage_b,
                 ctrl.dac.current_ranks() if not ctrl.in_warmup else [],
                 rs.as_dict() if rs is not None else None,
                 time.time() - t0,
@@ -544,13 +603,24 @@ class Trainer:
                 self._flush_pending(pending, t0)
 
             if at_window:
-                if ctrl.on_window_end(step_idx):
+                plan_changed = ctrl.on_window_end(step_idx)
+                if plan_changed:
                     self._apply_plan_change()
-                    comp_bytes, full_bytes = plan_wire_bytes(self.leaves, ctrl.plan)
-                    stage_b = self.stage_bytes()
                     self.metrics.event(
                         "plan_change", step=step_idx,
                         ranks=ctrl.dac.current_ranks())
+                # entropy-mode wire coding re-picks its bit width here,
+                # on the same cadence as plan changes (one recompile max
+                # per window)
+                if self._refresh_codec():
+                    plan_changed = True
+                    self.metrics.event(
+                        "wire_codec", step=step_idx,
+                        bits=int(self._codec.bits),
+                        entropy=self._last_entropy)
+                if plan_changed:
+                    comp_bytes, raw_bytes, full_bytes = self._price_plan()
+                    stage_b = self.stage_bytes()
 
             if at_ckpt:
                 path = f"{tcfg.ckpt_path}_{step_idx+1}"
@@ -576,7 +646,7 @@ class Trainer:
         if pending:
             jax.block_until_ready([m["loss"] for (_, _, m, *_rest) in pending])
         tcfg, ctrl = self.tcfg, self.controller
-        for (s_i, meas, m, b_syn, b_full, st_b, ranks, rec_rs,
+        for (s_i, meas, m, b_syn, b_raw, b_full, st_b, ranks, rec_rs,
              wall) in pending:
             if meas:
                 self._last_entropy = float(m["entropy"])
@@ -600,16 +670,19 @@ class Trainer:
                     "ranks": ranks,
                     "wall_s": wall,
                 }
+                if b_raw != b_syn:      # wire coding active
+                    rec["bytes_wire_raw"] = b_raw
                 if rec_rs is not None:
                     rec["recovery"] = rec_rs
                 self.history.append(rec)
-                self._emit_step_telemetry(s_i, m, b_syn, b_full, st_b,
-                                          ranks, wall)
+                self._emit_step_telemetry(s_i, m, b_syn, b_raw, b_full,
+                                          st_b, ranks, wall)
         pending.clear()
         self.metrics.flush()
 
     def _emit_step_telemetry(self, s_i: int, m: dict, b_syn: int,
-                             b_full: int, st_b, ranks, wall: float) -> None:
+                             b_raw: int, b_full: int, st_b, ranks,
+                             wall: float) -> None:
         """One logged step's structured records (values already on host)."""
         reg = self.metrics
         reg.scalar("loss", float(m["loss"]), s_i)
@@ -622,6 +695,15 @@ class Trainer:
         reg.scalar("bytes_full", int(b_full), s_i)
         if b_syn:
             reg.scalar("compression_ratio", b_full / b_syn, s_i)
+        if self.sync_cfg.wire != "raw":
+            # coded vs raw payload bytes: the measured wire-format
+            # reduction, orthogonal to the rank-compression ratio above
+            reg.scalar("wire_bytes_coded", int(b_syn), s_i)
+            reg.scalar("wire_bytes_raw", int(b_raw), s_i)
+            if b_raw:
+                reg.scalar("wire_reduction", b_syn / b_raw, s_i)
+            if self._codec is not None:
+                reg.scalar("wire_bits", int(self._codec.bits), s_i)
         reg.scalar("wall_s", wall, s_i)
         reg.series("stage_wire_bytes", [int(c) for c, _ in st_b], s_i)
         reg.series("stage_wire_bytes_full", [int(f) for _, f in st_b], s_i)
@@ -689,7 +771,8 @@ class Trainer:
             raise RuntimeError("EF reset requires the flat trainer")
         fresh = init_compressor_state(self.state["params"],
                                       self.controller.plan, self._comp_key,
-                                      layout=self._layout)
+                                      layout=self._layout,
+                                      wire_ef=self._codec is not None)
         comp = replicate_comp_state(fresh, self.world)
         self.state = dict(self.state)
         self.state["comp"] = comp
@@ -715,6 +798,7 @@ class Trainer:
             "step": int(step if step is not None
                         else getattr(self, "_global_step", 0)),
             "bytes_synced": int(self.bytes_synced),
+            "bytes_wire_raw": int(self.bytes_wire_raw),
             "bytes_full": int(self.bytes_full),
             "controller": self.controller.state_dict(),
             "metrics": self.metrics.state_dict(),
@@ -751,12 +835,17 @@ class Trainer:
             # cursor exactly once.
             self.metrics.load_state_dict(extra["metrics"])
         self.bytes_synced = int(extra.get("bytes_synced", 0))
+        self.bytes_wire_raw = int(extra.get("bytes_wire_raw", 0))
         self.bytes_full = int(extra.get("bytes_full", 0))
         self._global_step = int(extra.get("step", 0))
         # re-seed the zero-order hold so post-resume off-gate history
         # records carry the last real reading, not the 0.0 init
         hist = self.controller.entropy_history
         self._last_entropy = float(hist[-1][1]) if hist else 0.0
+        # entropy-mode wire coding re-derives its reference (the run's
+        # first reading) and current bit width from the restored history
+        self._wire_ref_entropy = None
+        self._refresh_codec()
         restored, _ = ckpt_mod.restore(path, jax.device_get(self.state))
         self.state = restored
         self._shard_state()
@@ -768,7 +857,8 @@ class Trainer:
         — the Algorithm-2 ledger (sums to ``plan_wire_bytes``)."""
         from repro.pipeline.sync import stage_wire_bytes
         return stage_wire_bytes(self.leaves, self.controller.plan,
-                                max(1, self.edgc_cfg.num_stages))
+                                max(1, self.edgc_cfg.num_stages),
+                                codec=self._codec)
 
     def comm_savings(self) -> float:
         """Fraction of DP-sync bytes saved vs no compression (Table III)."""
