@@ -1,0 +1,83 @@
+"""Collective-safety auditor: static analysis over traced train steps.
+
+Four passes, all operating on ``jax.make_jaxpr`` output (pure abstract
+tracing — no FLOPs, works on ShapeDtypeStruct trees at any model scale)
+or on Python source (the AST lint):
+
+  * collective parity (`parity`) — SPMD deadlock freedom for every
+    ``lax.switch``/``cond`` in a compiled step,
+  * psum budgets (`budget`) — predicted vs traced collective counts,
+  * host-sync & recompile audit (`hostcalls`),
+  * repo-specific AST lint rules (`lint`).
+
+CLI entry point: ``python -m repro.launch.audit``.
+"""
+from .jaxpr_walk import (
+    COLLECTIVE_PRIMS,
+    HOST_CALLBACK_PRIMS,
+    CollectiveCall,
+    as_jaxpr,
+    collective_signature,
+    count_collectives,
+    shard_map_contexts,
+    subjaxprs,
+    uniform_env,
+    walk,
+)
+from .parity import (
+    Violation,
+    check_collective_parity,
+    check_switch_budgets,
+    switch_collective_counts,
+)
+from .budget import (
+    ENTROPY_PSUMS,
+    CollectiveSpy,
+    check_entropy_gate,
+    check_overlap_branches,
+    check_sync_spy,
+    spy_sync,
+)
+from .hostcalls import (
+    audit_recompiles,
+    check_host_transfers,
+    check_step_cache,
+)
+from .lint import (
+    HOT_PATH_SUFFIXES,
+    LintFinding,
+    RULES,
+    lint_source,
+    run_lint,
+)
+
+__all__ = [
+    "COLLECTIVE_PRIMS",
+    "HOST_CALLBACK_PRIMS",
+    "CollectiveCall",
+    "as_jaxpr",
+    "collective_signature",
+    "count_collectives",
+    "shard_map_contexts",
+    "subjaxprs",
+    "uniform_env",
+    "walk",
+    "Violation",
+    "check_collective_parity",
+    "check_switch_budgets",
+    "switch_collective_counts",
+    "ENTROPY_PSUMS",
+    "CollectiveSpy",
+    "check_entropy_gate",
+    "check_overlap_branches",
+    "check_sync_spy",
+    "spy_sync",
+    "audit_recompiles",
+    "check_host_transfers",
+    "check_step_cache",
+    "HOT_PATH_SUFFIXES",
+    "LintFinding",
+    "RULES",
+    "lint_source",
+    "run_lint",
+]

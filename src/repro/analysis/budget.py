@@ -1,0 +1,149 @@
+"""Psum-budget checker: predicted vs traced collective counts.
+
+The bucketed sync executor has an exact, statically-derivable collective
+bill — 2 factor psums per stacked PowerSGD shape group, 1 psum per flat
+bucket chunk (``BucketLayout.num_collectives`` / ``SyncChunk.
+num_collectives``), summed over a pipeline's distinct stage schedules
+(``StagePlans.predicted_collectives``), plus EXACTLY the three Lemma-2
+moment psums (n, s1, s2) that the GDS ISR alpha gate removes wholesale
+on entropy-off steps.  This module turns those predictions into checks:
+
+  * :class:`CollectiveSpy` — the one reusable psum-hook spy the test
+    suite's ad-hoc ``calls = []`` closures grew into: pass it wherever a
+    ``psum_mean`` hook goes, then assert against the layout.
+  * :func:`check_sync_spy` — spy vs ``BucketLayout`` (count, factor/flat
+    split, per-group ranks, wire dtypes).
+  * :func:`check_entropy_gate` — entropy-on minus entropy-off traced
+    psums == 3 for the pipelined step (the ISR invariant; the flat step
+    measures entropy on already-synced grads, so its delta is 0).
+  * :func:`check_overlap_branches` — the overlapped executor's switch
+    branches vs the declared ``overlap_branch_psums`` launch metadata
+    (delegates to ``parity.check_switch_budgets``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Sequence
+
+import jax
+
+from .jaxpr_walk import count_collectives
+from .parity import Violation, check_switch_budgets
+
+__all__ = [
+    "ENTROPY_PSUMS",
+    "CollectiveSpy",
+    "spy_sync",
+    "check_sync_spy",
+    "check_entropy_gate",
+    "check_overlap_branches",
+]
+
+# The Lemma-2 sufficient-statistic psums (n, s1, s2) the ISR gate elides.
+ENTROPY_PSUMS = 3
+
+
+class CollectiveSpy:
+    """Recording stand-in for the executors' ``psum_mean`` hook.
+
+    Passes values through unchanged while recording (shape, dtype) of
+    every launch — works under tracing (``jax.eval_shape``) and eager
+    alike.  Factor psums are the 3-D stacked PowerSGD launches; flat
+    psums are the 1-D packed buckets/chunks.
+    """
+
+    def __init__(self) -> None:
+        self.calls: list[tuple[tuple[int, ...], Any]] = []
+
+    def __call__(self, x):
+        self.calls.append((tuple(x.shape), x.dtype))
+        return x
+
+    def __len__(self) -> int:
+        return len(self.calls)
+
+    @property
+    def factor_calls(self) -> list[tuple[tuple[int, ...], Any]]:
+        return [c for c in self.calls if len(c[0]) == 3]
+
+    @property
+    def flat_calls(self) -> list[tuple[tuple[int, ...], Any]]:
+        return [c for c in self.calls if len(c[0]) == 1]
+
+    def factor_ranks(self) -> list[int]:
+        """Distinct trailing dims of the stacked factor psums — the DAC
+        ranks the executor actually applied on the wire."""
+        return sorted({shape[-1] for shape, _ in self.factor_calls})
+
+
+def spy_sync(fn, *args) -> CollectiveSpy:
+    """Run ``fn(*args, spy)`` under abstract evaluation, return the spy.
+
+    ``fn`` takes the psum hook as its last argument (the executors'
+    convention).  ``jax.eval_shape`` keeps this shape-only — no FLOPs,
+    works on ShapeDtypeStruct trees at any model scale.
+    """
+    spy = CollectiveSpy()
+    jax.eval_shape(lambda *a: fn(*a, spy), *args)
+    return spy
+
+
+def check_sync_spy(spy: CollectiveSpy, layout, where: str = "sync",
+                   ) -> list[Violation]:
+    """Spy record vs a ``BucketLayout``'s predicted collective bill."""
+    out: list[Violation] = []
+    want = layout.num_collectives()
+    if len(spy) != want:
+        out.append(Violation(
+            rule="psum-budget", path=where,
+            message=(f"executor launched {len(spy)} collectives, layout "
+                     f"predicts {want} (2 per group x {len(layout.groups)} "
+                     f"+ 1 per bucket x {len(layout.buckets)})")))
+    nf = len(spy.factor_calls)
+    if nf != 2 * len(layout.groups):
+        out.append(Violation(
+            rule="psum-budget", path=where,
+            message=(f"{nf} stacked-factor psums, expected "
+                     f"{2 * len(layout.groups)} (2 per shape group)")))
+    want_ranks = sorted({g.rank for g in layout.groups})
+    got_ranks = spy.factor_ranks()
+    if got_ranks != want_ranks:
+        out.append(Violation(
+            rule="psum-budget", path=where,
+            message=(f"factor psums carry ranks {got_ranks}, plan ranks "
+                     f"are {want_ranks} — DAC ranks not applied on the "
+                     f"wire")))
+    return out
+
+
+def check_entropy_gate(traced_on: Any, traced_off: Any,
+                       expected_delta: int = ENTROPY_PSUMS,
+                       where: str = "step") -> list[Violation]:
+    """ISR invariant: the entropy-off variant traces exactly
+    ``expected_delta`` fewer psums (3 moment psums for the pipelined
+    step, 0 for the flat step) and never MORE work than entropy-on."""
+    on = count_collectives(traced_on, "psum")
+    off = count_collectives(traced_off, "psum")
+    if on - off != expected_delta:
+        return [Violation(
+            rule="entropy-gate", path=where,
+            message=(f"entropy-on traces {on} psums, entropy-off {off}: "
+                     f"delta {on - off}, ISR invariant requires exactly "
+                     f"{expected_delta}"))]
+    return []
+
+
+def check_overlap_branches(traced: Any, oplan, splans) -> list[Violation]:
+    """Overlapped-step switches vs the planner's declared launch schedule.
+
+    ``oplan``/``splans`` are the step's ``OverlapPlan``/``StagePlans``;
+    the declared per-switch budgets come from
+    ``pipeline.schedule.overlap_branch_psums`` (in-loop launch ticks in
+    order, then the post-flush residual switch).
+    """
+    from repro.pipeline.schedule import overlap_branch_psums
+
+    in_loop, residual = overlap_branch_psums(oplan, splans)
+    expected: list[tuple[int, ...]] = [c for _, c in in_loop]
+    expected.append(residual)
+    return check_switch_budgets(traced, expected, "psum")

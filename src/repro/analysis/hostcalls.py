@@ -1,0 +1,106 @@
+"""Host-sync & recompile audit.
+
+Two ways a "compiled" train step silently stops being compiled:
+
+  * **Host round-trips inside the step.**  A ``pure_callback`` /
+    ``io_callback`` / ``debug_callback`` traced into the jaxpr forces a
+    device->host sync every step (the PR 8 telemetry work exists
+    precisely to batch those at flush boundaries OUTSIDE the step).
+    :func:`check_host_transfers` walks the traced step and flags every
+    callback primitive, path-qualified.
+
+  * **Unbounded recompilation.**  The trainer's ``_get_step`` cache is
+    keyed ``(CompressionPlan, measure_entropy, SyncConfig)``; plans only
+    change at DAC window boundaries and codecs only at window
+    boundaries, so after N steps the cache must hold at most
+    ``(N // window + 1)`` plans x 2 entropy variants x the codecs seen.
+    :func:`check_step_cache` proves the enumerated keys are hashable and
+    inside that bound; :func:`audit_recompiles` derives the bound from a
+    live trainer (``Trainer.step_cache_keys``).
+"""
+from __future__ import annotations
+
+from typing import Any, Iterable
+
+from .jaxpr_walk import HOST_CALLBACK_PRIMS, walk
+from .parity import Violation
+
+__all__ = [
+    "check_host_transfers",
+    "check_step_cache",
+    "audit_recompiles",
+]
+
+
+def check_host_transfers(traced: Any, allow: Iterable[str] = (),
+                         ) -> list[Violation]:
+    """Flag device->host callbacks traced into a compiled step.
+
+    ``allow`` lists primitive names that are intentionally present (e.g.
+    a debugging build); anything else in
+    :data:`~repro.analysis.jaxpr_walk.HOST_CALLBACK_PRIMS` is a
+    violation with the jaxpr path of the offending equation.
+    """
+    allowed = frozenset(allow)
+    out: list[Violation] = []
+    for eqn, path in walk(traced):
+        name = eqn.primitive.name
+        if name in HOST_CALLBACK_PRIMS and name not in allowed:
+            cb = eqn.params.get("callback")
+            what = getattr(cb, "__name__", None) or repr(cb) if cb else name
+            out.append(Violation(
+                rule="host-sync", path=path,
+                message=(f"{name} ({what}) inside a compiled step — every "
+                         f"invocation is a device->host round-trip")))
+    return out
+
+
+def check_step_cache(keys: Iterable[Any], steps: int, window: int,
+                     entropy_variants: int = 2,
+                     codecs_seen: int | None = None) -> list[Violation]:
+    """Prove the step-cache keys are hashable and window-bounded.
+
+    ``keys`` are the trainer's ``_get_step`` cache keys (tuples of
+    ``(plan, measure_entropy, sync_cfg)``); ``steps``/``window`` bound
+    the number of distinct plans at ``steps // window + 1`` (the DAC
+    re-plans only at window boundaries).
+    """
+    out: list[Violation] = []
+    keys = list(keys)
+    for k in keys:
+        try:
+            hash(k)
+        except TypeError:
+            out.append(Violation(
+                rule="recompile", path=repr(k),
+                message="unhashable step-cache key — every lookup would "
+                        "miss and recompile"))
+            return out
+    plans = {k[0] for k in keys if isinstance(k, tuple) and k}
+    if codecs_seen is None:
+        codecs_seen = len({k[2] for k in keys
+                           if isinstance(k, tuple) and len(k) > 2}) or 1
+    plan_bound = max(1, steps) // max(1, window) + 1
+    if len(plans) > plan_bound:
+        out.append(Violation(
+            rule="recompile", path="_step_cache",
+            message=(f"{len(plans)} distinct plans after {steps} steps "
+                     f"with window={window}: plans must only change at "
+                     f"window boundaries (bound {plan_bound})")))
+    key_bound = plan_bound * entropy_variants * max(1, codecs_seen)
+    if len(keys) > key_bound:
+        out.append(Violation(
+            rule="recompile", path="_step_cache",
+            message=(f"{len(keys)} compiled step variants after {steps} "
+                     f"steps (bound {key_bound} = {plan_bound} plans x "
+                     f"{entropy_variants} entropy variants x "
+                     f"{codecs_seen} codecs) — recompiles are not "
+                     f"window-bounded")))
+    return out
+
+
+def audit_recompiles(trainer) -> list[Violation]:
+    """Window-bounded-recompile audit of a live Trainer."""
+    steps = len(trainer.history)
+    window = int(trainer.edgc_cfg.dac.window)
+    return check_step_cache(trainer.step_cache_keys(), steps, window)

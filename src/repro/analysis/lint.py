@@ -1,0 +1,235 @@
+"""Repo-specific AST lint rules for the collective-safety auditor.
+
+These are invariants ruff cannot express — they encode how THIS codebase
+keeps its compiled step compiled and its collectives well-formed:
+
+  ``dup-dict-key``           duplicate literal keys in a dict display:
+                             the later entry silently wins (the
+                             ``DTYPE_BYTES`` ``"s64"`` bug this rule was
+                             born from).  Checked repo-wide.
+  ``host-call-in-hot-path``  ``float()`` / ``np.*`` / ``.block_until_
+                             ready()`` in modules that run inside jit —
+                             on a traced value each is a trace error or
+                             a silent host sync.  Checked in the
+                             HOT_PATH module list only; host-side
+                             planner code inside those modules carries
+                             an inline allow.
+  ``collective-axis-name``   ``lax.psum(x)``-style collective calls
+                             without an explicit axis name: under
+                             shard_map the axis context is ambient and a
+                             missing name reduces over nothing (or
+                             raises late); every call must say which
+                             mesh axis it reduces over.
+  ``unhashable-cache-key``   a list/dict/set display used directly as a
+                             ``*_cache`` subscript: unhashable keys turn
+                             a compile cache into a per-step recompile.
+
+Allowlist format: an inline ``# lint: allow(<rule-id>)`` comment on the
+offending line suppresses that rule there (add a reason after the
+closing paren); ``run_lint(..., allow={rule: [path-substring, ...]})``
+suppresses a rule for whole files.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import os
+import re
+from typing import Iterable
+
+__all__ = ["LintFinding", "RULES", "HOT_PATH_SUFFIXES", "lint_source",
+           "run_lint", "iter_py_files"]
+
+RULES = {
+    "dup-dict-key": "duplicate literal key in a dict display",
+    "host-call-in-hot-path": "float()/np.*/.block_until_ready() in a "
+                             "jit hot-path module",
+    "collective-axis-name": "collective call without an explicit axis name",
+    "unhashable-cache-key": "unhashable literal used as a cache key",
+}
+
+# Modules whose function bodies run inside jit (traced): host-call
+# patterns there operate on tracers.  Mixed modules that also hold
+# host-side planners (schedule.py) use inline allows for those lines.
+HOT_PATH_SUFFIXES = (
+    "core/powersgd.py", "core/bucketing.py", "core/wire.py",
+    "core/entropy.py", "pipeline/sync.py", "pipeline/schedule.py",
+    "dist/collectives.py", "train/step.py", "optim/adam.py",
+    "kernels/", "models/",
+)
+
+# lax.* collectives that take the axis name as 2nd positional / kwarg.
+_COLLECTIVE_FNS = frozenset({
+    "psum", "pmean", "pmax", "pmin", "ppermute", "pbroadcast",
+    "all_gather", "all_to_all", "psum_scatter",
+})
+_AXIS_KWARGS = frozenset({"axis_name", "axes"})
+
+_ALLOW_RE = re.compile(r"#\s*lint:\s*allow\(([\w\-, ]+)\)")
+
+
+@dataclasses.dataclass(frozen=True)
+class LintFinding:
+    file: str
+    line: int
+    rule: str
+    message: str
+
+    def __str__(self) -> str:
+        return f"{self.file}:{self.line}: [{self.rule}] {self.message}"
+
+
+def _allowed_rules(line_text: str) -> frozenset[str]:
+    m = _ALLOW_RE.search(line_text)
+    if not m:
+        return frozenset()
+    return frozenset(x.strip() for x in m.group(1).split(","))
+
+
+def is_hot_path(filename: str) -> bool:
+    norm = filename.replace(os.sep, "/")
+    return any(suffix in norm for suffix in HOT_PATH_SUFFIXES)
+
+
+class _Visitor(ast.NodeVisitor):
+    def __init__(self, filename: str, lines: list[str], hot: bool) -> None:
+        self.filename = filename
+        self.lines = lines
+        self.hot = hot
+        self.findings: list[LintFinding] = []
+
+    def _emit(self, node: ast.AST, rule: str, message: str) -> None:
+        line = getattr(node, "lineno", 1)
+        text = self.lines[line - 1] if line <= len(self.lines) else ""
+        if rule in _allowed_rules(text):
+            return
+        self.findings.append(LintFinding(self.filename, line, rule, message))
+
+    # -------------------------------------------------------- dup-dict-key
+    def visit_Dict(self, node: ast.Dict) -> None:
+        seen: dict[object, int] = {}
+        for key in node.keys:
+            if key is None or not isinstance(key, ast.Constant):
+                continue
+            try:
+                marker = (type(key.value).__name__, key.value)
+            except TypeError:
+                continue
+            if marker in seen:
+                self._emit(key, "dup-dict-key",
+                           f"duplicate key {key.value!r} (first at line "
+                           f"{seen[marker]}) — the earlier entry is "
+                           f"silently overwritten")
+            else:
+                seen[marker] = key.lineno
+        self.generic_visit(node)
+
+    # ------------------------------------------------------------- calls
+    def visit_Call(self, node: ast.Call) -> None:
+        func = node.func
+        # host-call-in-hot-path: float(...)
+        if (self.hot and isinstance(func, ast.Name) and func.id == "float"):
+            self._emit(node, "host-call-in-hot-path",
+                       "float() on a traced value forces a host sync "
+                       "(ConcretizationError under jit)")
+        # host-call-in-hot-path: x.block_until_ready()
+        if isinstance(func, ast.Attribute) and \
+                func.attr == "block_until_ready" and self.hot:
+            self._emit(node, "host-call-in-hot-path",
+                       ".block_until_ready() inside a hot path is a "
+                       "device sync")
+        # collective-axis-name: lax.psum(x) with no axis argument
+        if isinstance(func, ast.Attribute) and \
+                func.attr in _COLLECTIVE_FNS and _is_lax(func.value):
+            has_axis = (len(node.args) >= 2
+                        or any(kw.arg in _AXIS_KWARGS
+                               for kw in node.keywords))
+            if not has_axis:
+                self._emit(node, "collective-axis-name",
+                           f"lax.{func.attr}() without an explicit axis "
+                           f"name — collectives must say which mesh axis "
+                           f"they communicate over")
+        self.generic_visit(node)
+
+    # ------------------------------------------------ np.* in hot paths
+    def visit_Attribute(self, node: ast.Attribute) -> None:
+        if self.hot and isinstance(node.value, ast.Name) and \
+                node.value.id in ("np", "numpy"):
+            self._emit(node, "host-call-in-hot-path",
+                       f"np.{node.attr} in a jit hot path — numpy "
+                       f"concretizes traced values (use jnp)")
+        self.generic_visit(node)
+
+    # ------------------------------------------------ unhashable keys
+    def visit_Subscript(self, node: ast.Subscript) -> None:
+        target = node.value
+        name = (target.attr if isinstance(target, ast.Attribute)
+                else target.id if isinstance(target, ast.Name) else "")
+        if "cache" in name:
+            for sub in ast.walk(node.slice):
+                if isinstance(sub, (ast.List, ast.Dict, ast.Set,
+                                    ast.ListComp, ast.SetComp,
+                                    ast.DictComp)):
+                    self._emit(node, "unhashable-cache-key",
+                               f"{name}[...] indexed with an unhashable "
+                               f"{type(sub).__name__.lower()} literal — "
+                               f"every lookup misses and recompiles")
+                    break
+        self.generic_visit(node)
+
+
+def _is_lax(node: ast.expr) -> bool:
+    return (isinstance(node, ast.Name) and node.id == "lax") or \
+           (isinstance(node, ast.Attribute) and node.attr == "lax")
+
+
+def lint_source(source: str, filename: str = "<string>",
+                hot: bool | None = None) -> list[LintFinding]:
+    """Lint one module's source; ``hot`` overrides HOT_PATH detection."""
+    if hot is None:
+        hot = is_hot_path(filename)
+    try:
+        tree = ast.parse(source, filename=filename)
+    except SyntaxError as e:
+        return [LintFinding(filename, e.lineno or 1, "dup-dict-key",
+                            f"unparseable: {e.msg}")]
+    v = _Visitor(filename, source.splitlines(), hot)
+    v.visit(tree)
+    return v.findings
+
+
+def iter_py_files(roots: Iterable[str]) -> list[str]:
+    out = []
+    for root in roots:
+        if os.path.isfile(root):
+            out.append(root)
+            continue
+        for dirpath, dirnames, filenames in os.walk(root):
+            dirnames[:] = [d for d in dirnames
+                           if d not in ("__pycache__", ".git")]
+            out.extend(os.path.join(dirpath, f) for f in sorted(filenames)
+                       if f.endswith(".py"))
+    return sorted(out)
+
+
+def run_lint(roots: Iterable[str], select: Iterable[str] | None = None,
+             allow: dict[str, list[str]] | None = None,
+             ) -> list[LintFinding]:
+    """Lint every ``.py`` under ``roots``.
+
+    ``select`` restricts to a rule subset (e.g. only ``dup-dict-key``
+    repo-wide); ``allow`` maps rule id -> path substrings to skip.
+    """
+    selected = frozenset(select) if select is not None else None
+    allow = allow or {}
+    findings: list[LintFinding] = []
+    for path in iter_py_files(roots):
+        with open(path, encoding="utf-8") as fh:
+            src = fh.read()
+        for f in lint_source(src, path):
+            if selected is not None and f.rule not in selected:
+                continue
+            if any(sub in path for sub in allow.get(f.rule, ())):
+                continue
+            findings.append(f)
+    return findings

@@ -1,0 +1,262 @@
+"""Collective-parity checker: SPMD deadlock freedom for branchy steps.
+
+On multi-host SPMD hardware every rank executes the same program; a
+``lax.switch``/``lax.cond`` whose branches launch DIFFERENT collective
+sequences deadlocks the moment two ranks of one collective's group take
+different branches — rank A blocks in a psum rank B never enters.  The
+overlapped pipeline executor launches compressed per-stage sync inside
+exactly such switches (`pipeline/schedule.py`), so the invariant this
+module machine-checks is the one the whole sync-overlap design stands on.
+
+A branch divergence is safe in precisely one case: the predicate is
+provably UNIFORM across every mesh axis any branch collective runs over
+(then all ranks of each collective group take the same branch).  The
+pipelined launch switch is the canonical instance — predicate =
+``axis_index('pipe')``, collectives over the DP axes only.  Provenance
+comes from :func:`~repro.analysis.jaxpr_walk.uniform_env`, seeded at
+each ``shard_map`` boundary from its ``in_names`` (replicated operands
+are uniform everywhere, the batch varies over the DP axes, ...).
+
+For switches with an intentionally divergent launch schedule the checker
+additionally diffs per-branch collective counts against the DECLARED
+launch metadata (``schedule.overlap_branch_psums``) — a dropped psum in
+one branch is not a deadlock there (the DP group still agrees), but it
+is a silently-unsynced gradient chunk; the budget diff catches it with
+the same path-qualified diagnostics.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Sequence
+
+from jax.extend import core as jex_core
+
+from .jaxpr_walk import (
+    COLLECTIVE_PRIMS,
+    as_jaxpr,
+    collective_signature,
+    count_collectives,
+    eqn_axes,
+    subjaxprs,
+    uniform_env,
+    walk,
+)
+
+__all__ = [
+    "Violation",
+    "check_collective_parity",
+    "switch_collective_counts",
+    "check_switch_budgets",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class Violation:
+    """One auditor finding, path-qualified into the traced jaxpr."""
+
+    rule: str
+    path: str
+    message: str
+
+    def __str__(self) -> str:
+        return f"[{self.rule}] {self.path}: {self.message}"
+
+
+def _named_axes(jaxpr: Any) -> frozenset[str]:
+    """Every mesh axis name mentioned anywhere in the program."""
+    axes: set[str] = set()
+    for eqn, _ in walk(jaxpr):
+        axes.update(eqn_axes(eqn))
+        if eqn.primitive.name == "axis_index":
+            a = eqn.params.get("axis_name")
+            axes.update(x for x in (a if isinstance(a, (tuple, list))
+                                    else (a,)) if isinstance(x, str))
+        mesh = eqn.params.get("mesh")
+        if mesh is not None:
+            axes.update(str(n) for n in getattr(mesh, "axis_names", ()))
+    return frozenset(axes)
+
+
+def _sub_in_uniform(eqn, sub, ins: list[frozenset[str]]
+                    ) -> list[frozenset[str]]:
+    """Map an eqn's operand-uniformity onto a sub-jaxpr's invars.
+
+    cond branches drop the predicate; while bodies drop the cond-fn
+    consts; everything whose invars align 1:1 (scan, pjit, remat2, ...)
+    maps directly.  Any mismatch falls back to "nothing provable" —
+    conservative, never unsound.
+    """
+    name = eqn.primitive.name
+    if name == "cond":
+        mapped = ins[1:]
+    elif name == "while":
+        cn = eqn.params.get("cond_nconsts", 0)
+        mapped = ins[cn:]
+    else:
+        mapped = ins
+    if len(sub.invars) != len(mapped):
+        return [frozenset()] * len(sub.invars)
+    return mapped
+
+
+def _shard_map_seed(eqn) -> tuple[frozenset[str], list[frozenset[str]]]:
+    """(manual axes, per-invar uniformity) at a shard_map boundary."""
+    mesh = eqn.params.get("mesh")
+    auto = eqn.params.get("auto") or frozenset()
+    names = [str(a) for a in getattr(mesh, "axis_names", ())]
+    manual = frozenset(n for n in names if n not in auto)
+    in_uniform = []
+    for spec in (eqn.params.get("in_names") or ()):
+        sharded: set[str] = set()
+        for ax_list in dict(spec).values():
+            sharded.update(a for a in ax_list if isinstance(a, str))
+        in_uniform.append(manual - sharded)
+    return manual, in_uniform
+
+
+def _check_cond(eqn, path: str, pred_uniform: frozenset[str],
+                out: list[Violation]) -> None:
+    branches = eqn.params["branches"]
+    sigs = [collective_signature(b, f"{path}.branch={i}")
+            for i, b in enumerate(branches)]
+    if _all_match(sigs):
+        return
+    # Divergent branches: every collective's axes must sit inside the
+    # predicate's uniform set, else two group members can disagree.
+    unsafe = [c for s in sigs for c in s
+              if not frozenset(c.axes) <= pred_uniform]
+    if not unsafe:
+        return
+    ref, other = sigs[0], None
+    bi = 0
+    for i, s in enumerate(sigs[1:], start=1):
+        if len(s) != len(ref) or not all(a.matches(b)
+                                         for a, b in zip(ref, s)):
+            other, bi = s, i
+            break
+    detail = _diff_detail(ref, other, bi) if other is not None else ""
+    axes_txt = sorted({a for c in unsafe for a in c.axes
+                       if a not in pred_uniform})
+    out.append(Violation(
+        rule="collective-parity", path=path,
+        message=(f"switch branches launch different collective sequences "
+                 f"and the predicate is not uniform over {axes_txt} "
+                 f"(uniform over {sorted(pred_uniform) or '[]'}) — "
+                 f"SPMD deadlock on a real mesh. {detail}")))
+
+
+def _all_match(sigs) -> bool:
+    ref = sigs[0]
+    for s in sigs[1:]:
+        if len(s) != len(ref) or not all(a.matches(b)
+                                         for a, b in zip(ref, s)):
+            return False
+    return True
+
+
+def _diff_detail(ref, other, bi: int) -> str:
+    n = min(len(ref), len(other))
+    for k in range(n):
+        if not ref[k].matches(other[k]):
+            return (f"first divergence at collective #{k}: branch 0 issues "
+                    f"{ref[k].describe()}, branch {bi} issues "
+                    f"{other[k].describe()}.")
+    longer, which = (ref, 0) if len(ref) > len(other) else (other, bi)
+    return (f"branch {which} issues {abs(len(ref) - len(other))} extra "
+            f"collective(s) starting with {longer[n].describe()} "
+            f"(branch 0: {len(ref)}, branch {bi}: {len(other)}).")
+
+
+def _check_jaxpr(j, in_uniform: list[frozenset[str]],
+                 all_axes: frozenset[str], path: str,
+                 out: list[Violation]) -> None:
+    env = uniform_env(j, in_uniform, all_axes)
+
+    def read(x) -> frozenset[str]:
+        if isinstance(x, jex_core.Literal):
+            return all_axes
+        return env.get(x, frozenset())
+
+    for n, eqn in enumerate(j.eqns):
+        here = f"{path}/{eqn.primitive.name}#{n}"
+        ins = [read(x) for x in eqn.invars]
+        if eqn.primitive.name == "cond":
+            _check_cond(eqn, here, ins[0], out)
+        if eqn.primitive.name == "shard_map":
+            manual, seed = _shard_map_seed(eqn)
+            body = subjaxprs(eqn)[0][1]
+            if len(seed) != len(body.invars):
+                seed = [frozenset()] * len(body.invars)
+            _check_jaxpr(body, seed, all_axes | manual, f"{here}.jaxpr", out)
+            continue
+        for label, sub in subjaxprs(eqn):
+            _check_jaxpr(sub, _sub_in_uniform(eqn, sub, ins), all_axes,
+                         f"{here}.{label}", out)
+
+
+def check_collective_parity(traced: Any) -> list[Violation]:
+    """Audit every switch/cond in a traced step for SPMD collective parity.
+
+    ``traced`` is anything :func:`jax.make_jaxpr` returns (or a raw
+    Jaxpr).  Returns [] when every branchy collective launch is provably
+    deadlock-free; otherwise one path-qualified :class:`Violation` per
+    offending switch.
+    """
+    jaxpr = as_jaxpr(traced)
+    out: list[Violation] = []
+    _check_jaxpr(jaxpr, [frozenset()] * len(jaxpr.invars),
+                 _named_axes(jaxpr), "", out)
+    return out
+
+
+# ----------------------------------------------------- declared-budget diff
+def switch_collective_counts(traced: Any, primitive: str = "psum",
+                             ) -> list[tuple[str, tuple[int, ...]]]:
+    """(path, per-branch collective counts) of every collective-carrying
+    switch, in program order — the traced side of the launch-metadata
+    diff.  Nested sub-switches are reported separately (walk order)."""
+    out = []
+    for eqn, path in walk(traced):
+        if eqn.primitive.name != "cond":
+            continue
+        counts = tuple(count_collectives(b, primitive)
+                       for b in eqn.params["branches"])
+        if any(counts):
+            out.append((path, counts))
+    return out
+
+
+def check_switch_budgets(traced: Any,
+                         expected: Sequence[tuple[int, ...]],
+                         primitive: str = "psum") -> list[Violation]:
+    """Diff traced switch branches against the declared launch schedule.
+
+    ``expected`` is the per-switch, per-branch collective budget in
+    program order — for the overlapped pipelined step that is
+    ``overlap_branch_psums(...)``: the in-loop launch switches in tick
+    order, then the post-flush residual switch.  A branch whose traced
+    count disagrees (e.g. a seeded mutation dropping one factor psum)
+    yields a path-qualified violation naming branch and delta.
+    """
+    got = switch_collective_counts(traced, primitive)
+    out: list[Violation] = []
+    if len(got) != len(expected):
+        out.append(Violation(
+            rule="psum-budget", path="",
+            message=(f"traced {len(got)} collective-carrying switches, "
+                     f"launch metadata declares {len(expected)} "
+                     f"(traced paths: {[p for p, _ in got]})")))
+        return out
+    for (path, counts), want in zip(got, expected):
+        want = tuple(want)
+        if counts == want:
+            continue
+        for b, (c, w) in enumerate(zip(counts, want)):
+            if c != w:
+                out.append(Violation(
+                    rule="psum-budget", path=f"{path}.branch={b}",
+                    message=(f"branch launches {c} {primitive} collectives, "
+                             f"declared schedule expects {w} "
+                             f"(full switch: traced={counts}, "
+                             f"declared={want})")))
+    return out

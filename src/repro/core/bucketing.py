@@ -158,6 +158,13 @@ class SyncChunk:
         src = self.group.members if self.kind == "group" else self.members
         return tuple(path for path, _ in src)
 
+    @property
+    def num_collectives(self) -> int:
+        """Collectives this chunk launches: two factor psums for a stacked
+        group, one packed psum for a bucket run — the per-chunk term of
+        ``BucketLayout.num_collectives`` the auditor sums over launches."""
+        return 2 if self.kind == "group" else 1
+
     def wire_bytes(self, bytes_per_elem: int | None = None,
                    codec: "_wire.ChunkCodec | None" = None) -> int:
         """Collective payload bytes (factor psums / packed bucket).

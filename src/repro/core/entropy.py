@@ -30,7 +30,7 @@ from typing import Iterable
 import jax
 import jax.numpy as jnp
 
-_LOG_2PI_E = float(jnp.log(2.0 * jnp.pi) + 1.0)  # log(2*pi*e)
+_LOG_2PI_E = float(jnp.log(2.0 * jnp.pi) + 1.0)  # log(2*pi*e)  # lint: allow(host-call-in-hot-path) import-time constant
 
 
 def strided_sample(x: jax.Array, beta: float) -> jax.Array:

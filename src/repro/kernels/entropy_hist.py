@@ -59,5 +59,5 @@ def hist_counts(x, lo, inv_width, *, num_bins: int = 256, bx: int = 2048,
     )(scal, x.reshape(1, -1))
     counts = counts[0]
     if pad:
-        counts = counts.at[0].add(-float(pad))
+        counts = counts.at[0].add(-float(pad))  # lint: allow(host-call-in-hot-path) pad is a static Python int
     return counts

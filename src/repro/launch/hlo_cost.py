@@ -27,7 +27,7 @@ from collections import defaultdict
 
 DTYPE_BYTES = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "s8": 1,
                "u8": 1, "pred": 1, "f64": 8, "s64": 8, "u64": 8,
-               "f8e4m3fn": 1, "f8e5m2": 1, "s16": 2, "u16": 2, "s64": 8}
+               "f8e4m3fn": 1, "f8e5m2": 1, "s16": 2, "u16": 2}
 
 COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
                "collective-permute")

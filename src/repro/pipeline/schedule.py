@@ -298,11 +298,46 @@ def plan_overlap(name: str, S: int, M: int, splans, *,
     return OverlapPlan(
         schedule=name, num_stages=S, num_microbatches=M,
         launches=tuple(launches), residual=tuple(residual),
-        slack_seconds=tuple(float(t) for t in slack),
+        slack_seconds=tuple(float(t) for t in slack),  # lint: allow(host-call-in-hot-path) host-side planner, never traced
         est_sync_seconds=tuple(est),
         feasible=tuple(est[s] <= est[0] + slack[s] + 1e-9
                        for s in range(S)),
     )
+
+
+def overlap_branch_psums(oplan: "OverlapPlan", splans
+                         ) -> tuple[tuple[tuple[int, tuple[int, ...]], ...],
+                                    tuple[int, ...]]:
+    """Declared per-switch psum budgets of the overlapped executor.
+
+    The traced step contains one ``lax.switch`` over ``axis_index('pipe')``
+    per launch tick (each branch = one stage's chunk launches for that
+    tick) plus one residual switch after the flush.  This derives, from
+    the SAME plan the executor consumes, the psum count each branch must
+    launch: ``SyncChunk.num_collectives`` summed over the tick's chunk
+    ids.  Returns ``(in_loop, residual)`` where ``in_loop`` is
+    ``((tick, (count_stage0, ..., count_stageS-1)), ...)`` in tick order —
+    the ground truth the auditor's psum-budget pass diffs traced switches
+    against (a dropped psum in one branch is deadlock-free but silently
+    leaves a chunk unsynced; the diff catches it).
+    """
+    chunks_by_d = tuple(bucketing.sync_chunks(l) for l in splans.layouts)
+
+    def n_of(s: int, ids) -> int:
+        d = splans.d_of_stage[s]
+        return sum(chunks_by_d[d][ci].num_collectives for ci in ids)
+
+    launch_at: dict[int, dict[int, tuple[int, ...]]] = {}
+    for s in range(oplan.num_stages):
+        for t, ids in oplan.launches[s]:
+            launch_at.setdefault(t, {})[s] = ids
+    in_loop = tuple(
+        (t, tuple(n_of(s, launch_at[t].get(s, ()))
+                  for s in range(oplan.num_stages)))
+        for t in sorted(launch_at))
+    residual = tuple(n_of(s, oplan.residual[s])
+                     for s in range(oplan.num_stages))
+    return in_loop, residual
 
 
 def stash_points(policy: str, n_units: int, stash_every: int = 2

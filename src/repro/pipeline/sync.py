@@ -75,6 +75,14 @@ class StagePlans:
     def state_key(self, d: int, group_key: str) -> str:
         return f"p{d}:{group_key}"
 
+    def predicted_collectives(self) -> tuple[int, ...]:
+        """Per-stage collective bill of one full sync pass: stage s runs its
+        schedule's ``BucketLayout.num_collectives`` (2 psums per stacked
+        group + 1 per flat bucket).  The auditor's psum-budget pass diffs
+        traced steps against this."""
+        return tuple(self.layouts[self.d_of_stage[s]].num_collectives()
+                     for s in range(self.num_stages))
+
 
 def local_leaves_of(tree: Any) -> list[tuple]:
     """(path, shape, itemsize) triples of a stage-local tree, flatten order."""

@@ -373,6 +373,12 @@ class Trainer:
             )
         return self._step_cache[key]
 
+    def step_cache_keys(self) -> tuple:
+        """Every ``(plan, measure_entropy, sync_cfg)`` key a compiled step
+        variant exists for — the auditor's recompile pass proves the count
+        stays window-bounded (plans/codecs only change at DAC windows)."""
+        return tuple(self._step_cache)
+
     def _refresh_codec(self) -> bool:
         """Entropy-mode wire coding: re-pick the bit width from the most
         recent pooled entropy reading (reference = the run's first

@@ -1,0 +1,360 @@
+"""Collective-safety auditor: parity, budgets, host-sync, and lint.
+
+The in-process tests trace tiny programs with ``make_jaxpr(axis_env=...)``
+(no mesh needed); the real overlapped executor — including the seeded
+dropped-psum mutation the auditor exists to catch — runs in a fake-device
+subprocess like the rest of the multi-device suite.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax import lax
+
+from repro import analysis
+from repro.analysis.lint import lint_source
+
+AXES = [("pipe", 2), ("data", 2)]
+
+
+def _trace(fn, *args):
+    return jax.make_jaxpr(fn, axis_env=AXES)(*args)
+
+
+# ------------------------------------------------------------ jaxpr_walk
+def test_walk_paths_and_signature_order():
+    def fn(x):
+        y = lax.psum(x, "data")
+
+        def body(c, _):
+            return lax.pmax(c, "data"), ()
+
+        z, _ = lax.scan(body, y, None, length=3)
+        return lax.psum(z, "data")
+
+    traced = _trace(fn, jnp.ones(4))
+    sig = analysis.collective_signature(traced.jaxpr)
+    assert [c.primitive for c in sig] == ["psum", "pmax", "psum"]
+    assert all(c.axes == ("data",) for c in sig)
+    # the scan-body collective is path-qualified into the sub-jaxpr
+    assert ".jaxpr/" in sig[1].path
+    paths = [p for _, p in analysis.walk(traced)]
+    assert any("/scan#" in p for p in paths)
+
+
+def test_count_collectives_counts_equations_not_strings():
+    def fn(psum_lookalike):                 # var NAME must not count
+        return lax.psum(psum_lookalike, "data")
+
+    traced = _trace(fn, jnp.ones(4))
+    assert analysis.count_collectives(traced, "psum") == 1
+    assert analysis.count_collectives(traced) == 1
+
+
+# ---------------------------------------------------------------- parity
+def test_parity_identical_branches_pass():
+    def fn(x, p):
+        b = lambda v: lax.psum(v, "data") * 2.0
+        return lax.switch(p, [b, lambda v: lax.psum(v, "data") + 1.0], x)
+
+    traced = _trace(fn, jnp.ones(4), jnp.int32(0))
+    assert analysis.check_collective_parity(traced) == []
+
+
+def test_parity_divergent_data_predicate_flagged():
+    """A data-dependent predicate with branch-divergent collectives is the
+    canonical SPMD deadlock; the diagnostic names the first divergence."""
+    def fn(x, p):
+        b0 = lambda v: lax.psum(v, "data")
+        b1 = lambda v: v * 2.0
+        return lax.switch(p, [b0, b1], x)
+
+    traced = _trace(fn, jnp.ones(4), jnp.int32(0))
+    (v,) = analysis.check_collective_parity(traced)
+    assert v.rule == "collective-parity"
+    assert "/cond#" in v.path
+    assert "psum[data]" in v.message
+
+
+def test_parity_axis_index_predicate_is_safe():
+    """The overlapped executor's shape: switch on axis_index('pipe') with
+    per-branch psums over the DP axes only. Every data-group peer shares
+    the pipe index, so divergence is deadlock-free — must pass."""
+    def fn(x):
+        i = lax.axis_index("pipe")
+        b0 = lambda v: lax.psum(v, "data")
+        b1 = lambda v: lax.psum(lax.psum(v, "data"), "data")
+        return lax.switch(i, [b0, b1], x)
+
+    traced = _trace(fn, jnp.ones(4))
+    assert analysis.check_collective_parity(traced) == []
+
+
+def test_parity_collective_over_predicate_axis_flagged():
+    """Same pipe-index predicate, but one branch launches a PIPE-axis
+    collective: pipe peers disagree on the branch — deadlock."""
+    def fn(x):
+        i = lax.axis_index("pipe")
+        b0 = lambda v: lax.psum(v, "pipe")
+        b1 = lambda v: v * 2.0
+        return lax.switch(i, [b0, b1], x)
+
+    traced = _trace(fn, jnp.ones(4))
+    (v,) = analysis.check_collective_parity(traced)
+    assert v.rule == "collective-parity" and "'pipe'" in v.message
+
+
+def test_parity_reduced_value_predicate_is_safe():
+    """A predicate produced by a data-axis reduction is uniform over
+    'data': divergent data-axis collectives behind it cannot deadlock."""
+    def fn(x):
+        p = (lax.psum(x.sum(), "data") > 0).astype(jnp.int32)
+        b0 = lambda v: lax.psum(v, "data")
+        b1 = lambda v: v * 2.0
+        return lax.switch(p, [b0, b1], x)
+
+    traced = _trace(fn, jnp.ones(4))
+    assert analysis.check_collective_parity(traced) == []
+
+
+def test_parity_recurses_into_scan_bodies():
+    def fn(x, p):
+        def body(c, _):
+            b0 = lambda v: lax.psum(v, "data")
+            b1 = lambda v: v * 2.0
+            return lax.switch(p, [b0, b1], c), ()
+
+        y, _ = lax.scan(body, x, None, length=2)
+        return y
+
+    traced = _trace(fn, jnp.ones(4), jnp.int32(0))
+    (v,) = analysis.check_collective_parity(traced)
+    assert "/scan#" in v.path and "/cond#" in v.path
+
+
+# --------------------------------------------------------- switch budgets
+def _switchy(x):
+    i = lax.axis_index("pipe")
+    b0 = lambda v: lax.psum(v, "data")
+    b1 = lambda v: lax.psum(lax.psum(v, "data"), "data")
+    return lax.switch(i, [b0, b1], x)
+
+
+def test_switch_budgets_clean_and_dropped_psum_caught():
+    traced = _trace(_switchy, jnp.ones(4))
+    assert analysis.check_switch_budgets(traced, [(1, 2)]) == []
+    # the seeded-mutation shape: branch 1 declared 3 psums, traced 2
+    (v,) = analysis.check_switch_budgets(traced, [(1, 3)])
+    assert v.rule == "psum-budget"
+    assert v.path.endswith(".branch=1")
+    assert "launches 2" in v.message and "expects 3" in v.message
+
+
+def test_switch_budgets_switch_count_mismatch():
+    traced = _trace(_switchy, jnp.ones(4))
+    (v,) = analysis.check_switch_budgets(traced, [(1, 2), (9, 7)])
+    assert v.rule == "psum-budget" and "declares 2" in v.message
+
+
+# --------------------------------------------------------- CollectiveSpy
+def test_collective_spy_against_real_layout():
+    from repro.core import (
+        classify_leaves, init_compressor_state, make_bucket_layout,
+        make_plan, sync_grads,
+    )
+
+    rng = np.random.default_rng(0)
+    params = {"a": jnp.asarray(rng.standard_normal((64, 96)), jnp.float32),
+              "b": jnp.asarray(rng.standard_normal((64, 96)), jnp.float32),
+              "small": jnp.asarray(rng.standard_normal((8,)), jnp.float32)}
+    leaves = classify_leaves(params, num_layers=1, num_stages=1, min_dim=32)
+    plan = make_plan("fixed", leaves, fixed_rank=4)
+    layout = make_bucket_layout(leaves, plan)
+    state = init_compressor_state(params, plan, jax.random.PRNGKey(0),
+                                  layout=layout)
+    spy = analysis.CollectiveSpy()
+    sync_grads(params, state, plan, spy, bucketed=True)
+    assert analysis.check_sync_spy(spy, layout) == []
+    assert spy.factor_ranks() == [4]
+
+    # a spy that saw one launch too few fails the budget with a reason
+    short = analysis.CollectiveSpy()
+    short.calls = spy.calls[:-1]
+    bad = analysis.check_sync_spy(short, layout)
+    assert bad and all(v.rule == "psum-budget" for v in bad)
+
+
+def test_entropy_gate_negative():
+    def two(x):
+        return lax.psum(lax.psum(x, "data"), "data")
+
+    def one(x):
+        return lax.psum(x, "data")
+
+    t2, t1 = _trace(two, jnp.ones(4)), _trace(one, jnp.ones(4))
+    assert analysis.check_entropy_gate(t2, t1, expected_delta=1) == []
+    (v,) = analysis.check_entropy_gate(t2, t1, expected_delta=3)
+    assert v.rule == "entropy-gate" and "delta 1" in v.message
+
+
+# ------------------------------------------------------------- hostcalls
+def test_host_transfer_flagged_and_clean():
+    def dirty(x):
+        jax.debug.print("x = {}", x)
+        return x * 2
+
+    def clean(x):
+        return x * 2
+
+    (v,) = analysis.check_host_transfers(jax.make_jaxpr(dirty)(1.0))
+    assert v.rule == "host-sync" and "round-trip" in v.message
+    assert analysis.check_host_transfers(jax.make_jaxpr(clean)(1.0)) == []
+    # an explicit allowlist admits intentional callbacks
+    traced = jax.make_jaxpr(dirty)(1.0)
+    name = next(eqn.primitive.name for eqn, _ in analysis.walk(traced)
+                if eqn.primitive.name in analysis.HOST_CALLBACK_PRIMS)
+    assert analysis.check_host_transfers(traced, allow=[name]) == []
+
+
+def test_step_cache_window_bounds():
+    keys = [(f"plan{i}", m, "sync") for i in range(2) for m in (True, False)]
+    assert analysis.check_step_cache(keys, steps=6, window=3) == []
+    # 4 distinct plans after 6 steps with window=3 exceeds the bound of 3
+    keys = [(f"plan{i}", True, "sync") for i in range(4)]
+    (v,) = analysis.check_step_cache(keys, steps=6, window=3)
+    assert v.rule == "recompile" and "window boundaries" in v.message
+    # unhashable keys are flagged before any counting
+    (v,) = analysis.check_step_cache([(["unhashable"], True, "s")],
+                                     steps=1, window=1)
+    assert v.rule == "recompile" and "unhashable" in v.message
+
+
+# ------------------------------------------------------------------ lint
+def test_lint_dup_dict_key():
+    (f,) = lint_source('D = {"s64": 8, "u64": 8, "s64": 8}')
+    assert f.rule == "dup-dict-key" and "'s64'" in f.message
+    assert lint_source('D = {"s64": 8, "u64": 8}') == []
+    # non-constant keys never crash or false-positive
+    assert lint_source("D = {k: 1, k: 2}") == []
+
+
+def test_lint_hlo_cost_dtype_table_regression():
+    """The table this rule was born from: hlo_cost.py's DTYPE_BYTES once
+    carried a silent duplicate "s64" entry."""
+    path = os.path.join("src", "repro", "launch", "hlo_cost.py")
+    with open(path, encoding="utf-8") as fh:
+        src = fh.read()
+    assert [f for f in lint_source(src, path)
+            if f.rule == "dup-dict-key"] == []
+    from repro.launch.hlo_cost import DTYPE_BYTES
+    assert len(DTYPE_BYTES) == 15
+
+
+def test_lint_host_call_in_hot_path():
+    hot = "src/repro/core/powersgd.py"
+    assert lint_source("x = float(y)", hot)[0].rule == "host-call-in-hot-path"
+    assert lint_source("import numpy as np\nz = np.sum(y)", hot)[0].rule == \
+        "host-call-in-hot-path"
+    assert lint_source("y.block_until_ready()", hot)[0].rule == \
+        "host-call-in-hot-path"
+    # same source outside the hot-path list is fine
+    assert lint_source("x = float(y)", "src/repro/train/trainer.py") == []
+    # the inline allowlist suppresses with a reason
+    allowed = "x = float(y)  # lint: allow(host-call-in-hot-path) static"
+    assert lint_source(allowed, hot) == []
+
+
+def test_lint_collective_axis_name():
+    src = "from jax import lax\nr = lax.psum(x)\nk = lax.psum(x, 'data')\n" \
+          "g = lax.all_gather(x, axis_name='data')\n"
+    found = lint_source(src)
+    assert len(found) == 1 and found[0].rule == "collective-axis-name"
+    assert found[0].line == 2
+
+
+def test_lint_unhashable_cache_key():
+    (f,) = lint_source("self._step_cache[[p, m]] = step")
+    assert f.rule == "unhashable-cache-key"
+    assert lint_source("self._step_cache[(p, m)] = step") == []
+    assert lint_source("values[[1, 2]] = x") == []    # not a cache name
+
+
+def test_lint_repo_clean():
+    """The blocking-gate invariant: the shipped tree lints clean."""
+    roots = [r for r in ("src/repro", "tests", "benchmarks", "examples")
+             if os.path.isdir(r)]
+    assert [str(f) for f in analysis.run_lint(roots)] == []
+
+
+# --------------------------- real overlapped executor (fake devices, slow)
+_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, jax.numpy as jnp
+
+    from repro import analysis
+    from repro.core import SyncConfig, bucketing
+    from repro.launch.audit import FAMILY_CFGS, _trace_pipelined
+    from repro.launch.mesh import make_host_mesh
+    from repro.pipeline.schedule import overlap_branch_psums, plan_overlap
+
+    cfg = FAMILY_CFGS["dense"]
+    mesh = make_host_mesh(pipe=2, data=2, model=1)
+    traced, oplan, splans = _trace_pipelined(cfg, mesh, overlap=True)
+
+    # clean step: parity, declared budgets, host-sync all pass
+    assert analysis.check_collective_parity(traced) == []
+    assert analysis.check_overlap_branches(traced, oplan, splans) == []
+    assert analysis.check_host_transfers(traced) == []
+    switches = analysis.switch_collective_counts(traced)
+    assert len(switches) >= 2          # >=1 in-loop launch + the residual
+    in_loop, residual = overlap_branch_psums(oplan, splans)
+    assert switches[-1][1] == residual
+
+    # every family adapter's overlapped step audits clean
+    for fam in ("moe", "zamba"):
+        fcfg = FAMILY_CFGS[fam]
+        fmesh = make_host_mesh(pipe=fcfg.num_stages, data=2, model=1)
+        ftr, fop, fsp = _trace_pipelined(fcfg, fmesh, overlap=True)
+        assert analysis.check_collective_parity(ftr) == [], fam
+        assert analysis.check_overlap_branches(ftr, fop, fsp) == [], fam
+
+    # SEEDED MUTATION: drop the second factor psum of every stacked-group
+    # chunk (deadlock-free — DP peers still agree — but silently leaves
+    # the factors unsynced). The declared-budget diff must catch it with
+    # a path-qualified, branch-qualified diagnostic.
+    real = bucketing.sync_chunk_grads
+    def mutated(grads_by_path, state, chunk, psum_mean, **kw):
+        if chunk.kind == "group":
+            seen = []
+            def dropping(x):
+                seen.append(x)
+                return x if len(seen) >= 2 else psum_mean(x)
+            return real(grads_by_path, state, chunk, dropping, **kw)
+        return real(grads_by_path, state, chunk, psum_mean, **kw)
+    bucketing.sync_chunk_grads = mutated
+    try:
+        bad, oplan2, splans2 = _trace_pipelined(cfg, mesh, overlap=True)
+    finally:
+        bucketing.sync_chunk_grads = real
+    found = analysis.check_overlap_branches(bad, oplan2, splans2)
+    assert found, "seeded dropped-psum mutation not caught"
+    assert all(v.rule == "psum-budget" for v in found)
+    assert any(".branch=" in v.path and "/cond#" in v.path for v in found), \\
+        [str(v) for v in found]
+    print("overlap-audit-ok", len(found), "violation(s) on mutant")
+""")
+
+
+@pytest.mark.slow
+def test_overlapped_step_audit_and_seeded_mutation_subprocess():
+    env = {**os.environ, "PYTHONPATH": "src"}
+    proc = subprocess.run([sys.executable, "-c", _SCRIPT], env=env,
+                          capture_output=True, text=True, timeout=600)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "overlap-audit-ok" in proc.stdout

@@ -152,22 +152,15 @@ def test_bucketed_psum_count_and_wire_dtype():
     layout = make_bucket_layout(leaves, plan)
     stacked = init_compressor_state(params, plan, jax.random.PRNGKey(1),
                                     layout=layout)
+    from repro.analysis import CollectiveSpy, check_sync_spy
     for dtype in (jnp.float32, jnp.bfloat16):
         grads = jax.tree_util.tree_map(
             lambda a: a.astype(dtype), _rand_grads(params))
-        calls = []
-
-        def spy(x):
-            calls.append((x.shape, x.dtype))
-            return x
-
+        spy = CollectiveSpy()
         sync_grads(grads, stacked, plan, spy, bucketed=True)
-        assert len(calls) == layout.num_collectives()
-        factor = [c for c in calls if len(c[0]) == 3]     # stacked factors
-        flat = [c for c in calls if len(c[0]) == 1]       # flat buckets
-        assert len(factor) == 2 * len(layout.groups)
-        assert len(flat) == len(layout.buckets)
-        for _, dt in flat:
+        assert check_sync_spy(spy, layout) == []
+        assert len(spy.flat_calls) == len(layout.buckets)
+        for _, dt in spy.flat_calls:
             assert dt == dtype                            # no upcast on wire
 
 

@@ -113,6 +113,22 @@ def test_plan_overlap_partitions_chunks_in_drain(name):
     assert plan.slack_seconds[0] == 0.0
     # unit model, identical layouts: est[s] <= est[0] + slack[s] trivially
     assert plan.feasible == (True,) * S
+    # declared switch budgets conserve the per-stage collective bill: the
+    # in-loop tick counts plus the residual sum to exactly one launch per
+    # transfer chunk — and chunking a bucket only ever adds launches over
+    # the monolithic per-layout count
+    from repro.pipeline.schedule import overlap_branch_psums
+    in_loop, residual = overlap_branch_psums(plan, splans)
+    totals = list(residual)
+    for _, counts in in_loop:
+        totals = [a + b for a, b in zip(totals, counts)]
+    chunk_bill = tuple(
+        sum(c.num_collectives
+            for c in sync_chunks(splans.layouts[splans.d_of_stage[s]]))
+        for s in range(S))
+    assert tuple(totals) == chunk_bill
+    assert all(c >= p for c, p in
+               zip(chunk_bill, splans.predicted_collectives()))
 
 
 def test_plan_overlap_feasibility_with_comm_model():

@@ -14,6 +14,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro import analysis
 from repro.core import (
     EDGCConfig, GDSConfig, classify_leaves, init_compressor_state, make_plan,
     plan_wire_bytes, sync_grads,
@@ -366,21 +367,15 @@ def test_stage_sync_matches_per_leaf_oracle_and_applies_stage_ranks():
     for s in range(2):
         local_g = jax.tree_util.tree_map(lambda a: a[s], g_stage)
         local_c = jax.tree_util.tree_map(lambda a: a[s], comp)
-        calls = []
-
-        def spy(x):
-            calls.append((x.shape, x.dtype))
-            return x
-
+        spy = analysis.CollectiveSpy()
         synced_s, synced_sh, _ = psync.stage_sync_grads(
             local_g, g_shared, local_c, splans, spy, my_stage=s)
 
         # per-stage rank application: the schedule covering stage s psums
         # factors whose trailing dim is EXACTLY the DAC rank for stage s
         # (and the other schedule's rank also appears — masked SPMD pass)
-        factor_ranks = sorted({shp[-1] for shp, _ in calls if len(shp) == 3})
-        assert (4, 16)[s] in factor_ranks
-        assert factor_ranks == [4, 16]   # both schedules execute (SPMD)
+        assert (4, 16)[s] in spy.factor_ranks()
+        assert spy.factor_ranks() == [4, 16]  # both schedules execute (SPMD)
 
         # grads parity with the flat oracle, stage leaves + shared leaves
         want = jax.tree_util.tree_map(lambda a: a[s], o_stage)
@@ -428,17 +423,11 @@ def test_moe_stage_sync_psum_spy_applies_stage_ranks():
     for s in range(2):
         local_g = jax.tree_util.tree_map(lambda a: a[s], g_stage)
         local_c = jax.tree_util.tree_map(lambda a: a[s], comp)
-        calls = []
-
-        def spy(x):
-            calls.append((x.shape, x.dtype))
-            return x
-
+        spy = analysis.CollectiveSpy()
         synced_s, synced_sh, _ = psync.stage_sync_grads(
             local_g, g_shared, local_c, splans, spy, my_stage=s)
-        factor_ranks = sorted({shp[-1] for shp, _ in calls if len(shp) == 3})
-        assert (4, 16)[s] in factor_ranks
-        assert factor_ranks == [4, 16]   # both schedules execute (SPMD)
+        assert (4, 16)[s] in spy.factor_ranks()
+        assert spy.factor_ranks() == [4, 16]  # both schedules execute (SPMD)
 
         want = jax.tree_util.tree_map(lambda a: a[s], o_stage)
         for a, b in zip(jax.tree_util.tree_leaves(want),
@@ -725,7 +714,7 @@ def test_entropy_off_variant_lowers_no_moment_collectives():
     tp = _trainer(make_host_mesh(pipe=1, data=1, model=1), num_layers=4)
     batch = {k: jnp.asarray(v) for k, v in next(data()).items()}
     state = jax.device_get(tp.state)
-    counts = {}
+    traced = {}
     for measure in (True, False):
         scfg = TrainStepConfig(
             mode="dp_tp", policy_plan=tp.controller.plan,
@@ -733,9 +722,11 @@ def test_entropy_off_variant_lowers_no_moment_collectives():
             num_stages=1, schedule="1f1b", num_microbatches=2,
             adam=tp.tcfg.adam)
         raw = make_train_step(tp.model, tp.mesh, scfg)
-        counts[measure] = str(jax.make_jaxpr(raw)(state, batch)).count("psum")
+        traced[measure] = jax.make_jaxpr(raw)(state, batch)
+    counts = {m: analysis.count_collectives(t, "psum")
+              for m, t in traced.items()}
     assert counts[False] < counts[True], counts
-    assert counts[True] - counts[False] == 3, counts
+    assert analysis.check_entropy_gate(traced[True], traced[False]) == []
 
 
 def test_trainer_rejects_edgc_without_entropy():
